@@ -1,0 +1,24 @@
+"""Tables 16-17 analog: hard HC vs soft Fuzzy C-means clustering."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    rows = []
+    for frac, label in [(0.75, "25%"), (0.5, "50%")]:
+        r = max(1, int(round(cfg.moe.num_experts * frac)))
+        for clustering in ["hc", "fcm"]:
+            hc = HCSMoEConfig(target_experts=r, clustering=clustering,
+                              resize=(clustering == "hc"))
+            merged, us = timed(lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+            row = {"clustering": clustering, "reduction": label,
+                   **ctx.eval_model(merged)}
+            rows.append(row)
+            emit_csv(f"fcm/{label}/{clustering}", us, row["Average"])
+    record("table16_17_fcm", rows)
+    return rows

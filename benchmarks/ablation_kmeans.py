@@ -1,0 +1,47 @@
+"""Table 5 analog: K-means (fix/rnd init × metric) vs HC at 50% reduction,
+including the init-sensitivity spread over seeds."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    r = max(1, cfg.moe.num_experts // 2)
+    rows = []
+    for clustering in ["kmeans_fix", "kmeans_rnd"]:
+        for metric in ["router_logits", "weight", "expert_output"]:
+            hc = HCSMoEConfig(target_experts=r, clustering=clustering,
+                              metric=metric)
+            merged, us = timed(lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+            row = {"clustering": clustering, "metric": metric,
+                   **ctx.eval_model(merged)}
+            rows.append(row)
+            emit_csv(f"kmeans/{clustering}/{metric}", us, row["Average"])
+    # HC reference
+    merged, us = timed(lambda: apply_hcsmoe(
+        cfg, params, stats, HCSMoEConfig(target_experts=r))[0])
+    row = {"clustering": "hc", "metric": "expert_output",
+           **ctx.eval_model(merged)}
+    rows.append(row)
+    emit_csv("kmeans/hc/expert_output", us, row["Average"])
+
+    # init-sensitivity: spread of kmeans_rnd across seeds vs HC determinism
+    spreads = []
+    for seed in range(4):
+        hc = HCSMoEConfig(target_experts=r, clustering="kmeans_rnd",
+                          metric="expert_output", seed=seed)
+        merged, _ = timed(lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+        spreads.append(ctx.eval_model(merged)["Average"])
+    rows.append({"clustering": "kmeans_rnd_seed_spread",
+                 "spread": float(np.max(spreads) - np.min(spreads)),
+                 "values": spreads})
+    emit_csv("kmeans/rnd_seed_spread", 0.0,
+             float(np.max(spreads) - np.min(spreads)))
+    record("table5_kmeans_vs_hc", rows)
+    return rows

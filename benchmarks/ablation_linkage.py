@@ -1,0 +1,24 @@
+"""Table 4 analog: linkage (single/complete/average) × similarity metric
+(router-logits / weight / expert-output) at 25% reduction."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    r = max(1, int(round(cfg.moe.num_experts * 0.75)))
+    rows = []
+    for linkage in ["single", "complete", "average"]:
+        for metric in ["router_logits", "weight", "expert_output"]:
+            hc = HCSMoEConfig(target_experts=r, linkage=linkage, metric=metric)
+            merged, us = timed(lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+            row = {"linkage": linkage, "metric": metric,
+                   **ctx.eval_model(merged)}
+            rows.append(row)
+            emit_csv(f"linkage/{linkage}/{metric}", us, row["Average"])
+    record("table4_linkage_metric", rows)
+    return rows

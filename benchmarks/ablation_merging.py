@@ -1,0 +1,25 @@
+"""Table 7 analog: merging strategy (frequency/average/fix-dom) under fixed
+HC-average-linkage expert-output clusters. Expectation (paper): differences
+are marginal once clusters are good."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    rows = []
+    for frac, label in [(0.75, "25%"), (0.5, "50%")]:
+        r = max(1, int(round(cfg.moe.num_experts * frac)))
+        for merge in ["frequency", "average", "fix_dom"]:
+            hc = HCSMoEConfig(target_experts=r, merge=merge)
+            merged, us = timed(lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+            row = {"merge": merge, "reduction": label,
+                   **ctx.eval_model(merged)}
+            rows.append(row)
+            emit_csv(f"merging/{label}/{merge}", us, row["Average"])
+    record("table7_merging_methods", rows)
+    return rows

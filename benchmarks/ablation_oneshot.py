@@ -1,0 +1,30 @@
+"""Table 6 analog: single-shot grouping (Li et al.) per metric vs HC-SMoE."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+from repro.core import baselines as bl
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    rows = []
+    for frac, label in [(0.75, "25%"), (0.5, "50%")]:
+        r = max(1, int(round(cfg.moe.num_experts * frac)))
+        for metric in ["router_logits", "weight", "expert_output"]:
+            merged, us = timed(
+                lambda: bl.m_smoe(cfg, params, stats, r, metric=metric)[0])
+            row = {"grouping": "one-shot", "metric": metric, "reduction": label,
+                   **ctx.eval_model(merged)}
+            rows.append(row)
+            emit_csv(f"oneshot/{label}/{metric}", us, row["Average"])
+        merged, us = timed(lambda: apply_hcsmoe(
+            cfg, params, stats, HCSMoEConfig(target_experts=r))[0])
+        row = {"grouping": "HC-SMoE", "metric": "expert_output",
+               "reduction": label, **ctx.eval_model(merged)}
+        rows.append(row)
+        emit_csv(f"oneshot/{label}/HC-SMoE", us, row["Average"])
+    record("table6_oneshot_vs_hc", rows)
+    return rows

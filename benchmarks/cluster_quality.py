@@ -1,0 +1,45 @@
+"""Table 23 analog: cluster quality (silhouette/Dunn, euclidean & cosine) and
+last-layer output fidelity (L2 / cosine) for HC vs K-means × metric."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+from repro.core.pipeline import compute_groupings
+from repro.core.quality import cluster_quality_report, output_fidelity
+from repro.data import TokenStream
+
+from benchmarks.common import emit_csv, record, timed
+import jax
+
+
+def run(ctx):
+    cfg, model, params = ctx.cfg, ctx.model, ctx.params
+    stats = ctx.stats()
+    stream = TokenStream(cfg.vocab_size, seq_len=32, global_batch=4, seed=555)
+    fid_batches = [{"tokens": jnp.asarray(stream.batch(i)["tokens"])}
+                   for i in range(2)]
+    rows = []
+    for frac, label in [(0.75, "25%"), (0.5, "50%")]:
+        r = max(1, int(round(cfg.moe.num_experts * frac)))
+        for clustering in ["hc", "kmeans_rnd"]:
+            for metric in ["expert_output", "weight", "router_logits"]:
+                hc = HCSMoEConfig(target_experts=r, clustering=clustering,
+                                  metric=metric)
+                merged, us = timed(
+                    lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+                groupings = compute_groupings(cfg, params, stats, hc)
+                qual = [cluster_quality_report(g["features"], g["labels"])
+                        for g in groupings]
+                qual_avg = {k: float(np.mean([q[k] for q in qual]))
+                            for k in qual[0]}
+                fid = output_fidelity(model, params, merged, fid_batches,
+                                      moe_mode="dense")
+                row = {"reduction": label, "clustering": clustering,
+                       "metric": metric, **fid, **qual_avg}
+                rows.append(row)
+                emit_csv(f"quality23/{label}/{clustering}/{metric}", us,
+                         fid["l2_error"])
+    record("table23_cluster_quality", rows)
+    return rows

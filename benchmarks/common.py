@@ -1,0 +1,148 @@
+"""Shared benchmark harness.
+
+Trains a tiny-but-real MoE LM (domain-structured synthetic data so experts
+specialise), caches it on disk, and provides the evaluation protocol used by
+every paper-table benchmark: 4 synthetic zero-shot "tasks" (distinct domain
+mixtures, analogous to the paper's 8 LM-Harness tasks) scored by eval CE
+loss — lower is better; "Average" mirrors the paper's average column.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import collect_moe_stats
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.parallel import ParallelConfig
+from repro.training import OptimizerConfig, init_opt_state, make_train_step
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "bench_cache")
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "benchmarks.json")
+
+# the evaluation "tasks": distinct domain SUBSETS of the training
+# distribution (seed 0), sampled from held-out step ranges — analogous to the
+# paper's zero-shot task suite (each task exercises different experts)
+TASKS = {
+    "taskA": dict(seed=0, n_domains=8, domain_subset=(0, 1)),
+    "taskB": dict(seed=0, n_domains=8, domain_subset=(2, 3)),
+    "taskC": dict(seed=0, n_domains=8, domain_subset=(4, 5)),
+    "taskD": dict(seed=0, n_domains=8, domain_subset=(6, 7)),
+}
+EVAL_STEP_OFFSET = 50_000  # held-out region of the deterministic stream
+
+
+class BenchContext:
+    def __init__(self, *, arch="qwen1.5-moe-a2.7b", num_experts=12, top_k=2,
+                 steps=500, fast=False):
+        import dataclasses
+
+        base = get_config(arch).reduced(dtype="float32")
+        self.cfg = dataclasses.replace(
+            base, moe=dataclasses.replace(base.moe, num_experts=num_experts,
+                                          top_k=top_k))
+        self.steps = 60 if fast else steps
+        self.model = build_model(self.cfg)
+        self.fast = fast
+        self._params = None
+        self._stats = None
+
+    # ------------------------------------------------------------- train
+    @property
+    def params(self):
+        if self._params is None:
+            self._params = self._train_or_load()
+        return self._params
+
+    def _train_or_load(self):
+        os.makedirs(CACHE_DIR, exist_ok=True)
+        tag = f"{self.cfg.name}_{self.cfg.moe.num_experts}e_{self.steps}s"
+        path = os.path.join(CACHE_DIR, tag + ".npz")
+        model = self.model
+        params0 = model.init(jax.random.PRNGKey(0))
+        if os.path.exists(path):
+            data = np.load(path)
+            flat, treedef = jax.tree_util.tree_flatten(params0)
+            leaves = [jnp.asarray(data[f"a{i}"]) for i in range(len(flat))]
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+        stream = TokenStream(self.cfg.vocab_size, seq_len=32, global_batch=8,
+                             seed=0, n_domains=8)
+        oc = OptimizerConfig(peak_lr=3e-3, warmup_steps=10,
+                             total_steps=self.steps, weight_decay=0.0)
+        step = jax.jit(make_train_step(
+            model, oc, ParallelConfig(remat="none", moe_mode="dense")))
+        params, opt = params0, init_opt_state(params0)
+        for i in range(self.steps):
+            batch = jax.tree.map(jnp.asarray, stream.batch(i))
+            params, opt, m = step(params, opt, batch)
+        flat, _ = jax.tree_util.tree_flatten(params)
+        np.savez(path, **{f"a{i}": np.asarray(x) for i, x in enumerate(flat)})
+        return params
+
+    # -------------------------------------------------------- calibration
+    def stats(self, *, n_batches=3):
+        """C4-analog calibration stats: general mixture over ALL training
+        domains, held-out step range (paper: 32x2048 C4 tokens)."""
+        if self._stats is None:
+            self._stats = self.stats_for(seed=0, n_batches=n_batches,
+                                         n_domains=8)
+        return self._stats
+
+    def stats_for(self, *, seed, n_batches=3, n_domains=8, domain_subset=()):
+        stream = TokenStream(self.cfg.vocab_size, seq_len=64, global_batch=4,
+                             seed=seed, n_domains=n_domains,
+                             domain_subset=domain_subset)
+        calib = [{"tokens": jnp.asarray(stream.batch(10_000 + i)["tokens"])}
+                 for i in range(n_batches)]
+        return collect_moe_stats(self.model, self.params, calib)
+
+    # --------------------------------------------------------------- eval
+    def eval_model(self, params) -> dict:
+        """Per-task eval loss + Average (lower is better)."""
+        from repro.core.quality import eval_loss
+
+        out = {}
+        for task, kw in TASKS.items():
+            stream = TokenStream(self.cfg.vocab_size, seq_len=32,
+                                 global_batch=8, **kw)
+            batches = [jax.tree.map(jnp.asarray,
+                                    stream.batch(EVAL_STEP_OFFSET + i))
+                       for i in range(2 if self.fast else 4)]
+            out[task] = eval_loss(self.model, params, batches,
+                                  moe_mode="dense")
+        out["Average"] = float(np.mean(list(out.values())))
+        return out
+
+
+_RESULTS = {}
+
+
+def record(table: str, rows):
+    _RESULTS[table] = rows
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    existing = {}
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            existing = json.load(f)
+    existing[table] = rows
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(existing, f, indent=1)
+
+
+def emit_csv(name: str, us_per_call: float, derived):
+    """The bench runner contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,34 @@
+"""Tables 18-19 analog: extreme reduction (62.5% / 75%) + algorithm runtimes.
+Expectation: baselines collapse toward random while HC-SMoE stays above."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+from repro.core import baselines as bl
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    E = cfg.moe.num_experts
+    rows = []
+    for frac, label in [(0.375, "62.5%"), (0.25, "75%")]:
+        r = max(1, int(round(E * frac)))
+        variants = [
+            ("F-prune", lambda: bl.f_prune(cfg, params, stats, r)[0]),
+            ("S-prune", lambda: bl.s_prune(cfg, params, stats, r)[0]),
+            ("O-prune", lambda: bl.o_prune(cfg, params, stats, r,
+                                           samples=24)[0]),
+            ("M-SMoE", lambda: bl.m_smoe(cfg, params, stats, r)[0]),
+            ("HC-SMoE", lambda: apply_hcsmoe(
+                cfg, params, stats, HCSMoEConfig(target_experts=r))[0]),
+        ]
+        for name, fn in variants:
+            merged, us = timed(fn)
+            row = {"method": name, "r": r, "reduction": label,
+                   "algo_time_s": us / 1e6, **ctx.eval_model(merged)}
+            rows.append(row)
+            emit_csv(f"extreme/{label}/{name}", us, row["Average"])
+    record("table18_19_extreme", rows)
+    return rows

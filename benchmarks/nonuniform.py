@@ -1,0 +1,29 @@
+"""Table 8 analog: non-uniform (frequency-allocated) per-layer cluster counts
+vs uniform HC-SMoE at 25% reduction."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, params = ctx.cfg, ctx.params
+    stats = ctx.stats()
+    r = max(1, int(round(cfg.moe.num_experts * 0.75)))
+    rows = []
+    for linkage in ["single", "average"]:
+        for metric in ["weight", "expert_output"]:
+            for merge in ["frequency", "fix_dom"]:
+                hc = HCSMoEConfig(target_experts=r, linkage=linkage,
+                                  metric=metric, merge=merge,
+                                  non_uniform=True, resize=False)
+                merged, us = timed(
+                    lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
+                row = {"linkage": linkage, "metric": metric, "merge": merge,
+                       **ctx.eval_model(merged)}
+                rows.append(row)
+                emit_csv(f"nonuniform/{linkage}/{metric}/{merge}", us,
+                         row["Average"])
+    record("table8_nonuniform", rows)
+    return rows

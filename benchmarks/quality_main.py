@@ -1,0 +1,39 @@
+"""Tables 2-3 analog: HC-SMoE vs all retraining-free baselines at 25% and
+50% expert reduction, per-task eval loss (lower better)."""
+from __future__ import annotations
+
+from repro.core import HCSMoEConfig, apply_hcsmoe
+from repro.core import baselines as bl
+
+from benchmarks.common import emit_csv, record, timed
+
+
+def run(ctx):
+    cfg, model, params = ctx.cfg, ctx.model, ctx.params
+    stats = ctx.stats()
+    E = cfg.moe.num_experts
+    rows = [{"method": "None (original)", "r": E,
+             **ctx.eval_model(params), "time_us": 0.0}]
+
+    for frac, label in [(0.75, "25%"), (0.5, "50%")]:
+        r = max(1, int(round(E * frac)))
+        variants = [
+            ("O-prune", lambda: bl.o_prune(cfg, params, stats, r, samples=24)[0]),
+            ("F-prune", lambda: bl.f_prune(cfg, params, stats, r)[0]),
+            ("S-prune", lambda: bl.s_prune(cfg, params, stats, r)[0]),
+            ("M-SMoE", lambda: bl.m_smoe(cfg, params, stats, r)[0]),
+            ("HC-SMoE (avg)", lambda: apply_hcsmoe(
+                cfg, params, stats, HCSMoEConfig(target_experts=r))[0]),
+            ("HC-SMoE (single)", lambda: apply_hcsmoe(
+                cfg, params, stats,
+                HCSMoEConfig(target_experts=r, linkage="single"))[0]),
+        ]
+        for name, fn in variants:
+            merged, us = timed(fn)
+            row = {"method": name, "r": r, "reduction": label,
+                   **ctx.eval_model(merged), "time_us": us}
+            rows.append(row)
+            emit_csv(f"quality_main/{label}/{name}", us, row["Average"])
+
+    record("table2_3_quality_main", rows)
+    return rows

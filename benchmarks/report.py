@@ -1,0 +1,78 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from results JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report > results/roofline_table.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(directory=DRYRUN, tagged=False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        tag = parts[3] if len(parts) > 3 else ""
+        if bool(tag) != tagged:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        d["tag"] = d.get("tag") or tag
+        rows.append(d)
+    return rows
+
+
+def fmt_row(d):
+    if d["status"] == "skipped":
+        return (d["arch"], d["shape"], d["mesh"], "skip", "-", "-", "-", "-",
+                "-", "-", "-")
+    if d["status"] != "ok":
+        return (d["arch"], d["shape"], d["mesh"], "ERROR", "-", "-", "-", "-",
+                "-", "-", "-")
+    r = d["roofline"]
+    m = d["model_flops"]
+    mem = d["memory"].get("total_bytes_per_device", 0) / 2**30
+    frac = r["compute_s"] / max(r["step_time_lower_bound_s"], 1e-12)
+    return (d["arch"], d["shape"], d["mesh"],
+            r["bottleneck"].replace("_s", ""),
+            f"{r['compute_s']:.3f}", f"{r['memory_s']:.3f}",
+            f"{r['collective_s']:.3f}", f"{r['step_time_lower_bound_s']:.3f}",
+            f"{mem:.1f}", f"{m['useful_ratio']:.3f}", f"{frac:.3f}")
+
+
+HEADER = ("| arch | shape | mesh | bottleneck | compute_s | memory_s | "
+          "collective_s | step_lb_s | HBM GiB/dev | useful-FLOPs | "
+          "roofline-frac |")
+SEP = "|" + "---|" * 11
+
+
+def table(rows):
+    out = [HEADER, SEP]
+    for d in rows:
+        out.append("| " + " | ".join(fmt_row(d)) + " |")
+    return "\n".join(out)
+
+
+def main():
+    print("## Baseline roofline table (single-pod 16x16 + multi-pod 2x16x16)")
+    print()
+    print(table(load()))
+    print()
+    tagged = load(tagged=True)
+    if tagged:
+        print("## Tagged perf-iteration cells")
+        print()
+        print(HEADER.replace("| arch |", "| arch (tag) |"))
+        print(SEP)
+        for d in tagged:
+            row = list(fmt_row(d))
+            row[0] = f"{d['arch']} ({d.get('tag', '')})"
+            print("| " + " | ".join(row) + " |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline report: reads the dry-run artifacts (results/dryrun/*.json) and
+prints the per-(arch × shape × mesh) three-term roofline table (§Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit_csv, record
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def run(ctx=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") == "skipped":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d["mesh"], "status": "skipped",
+                         "reason": d["reason"]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d.get("mesh"), "status": d.get("status"),
+                         "error": d.get("error", "")[:200]})
+            continue
+        r = d["roofline"]
+        mf = d["model_flops"]
+        row = {
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "tag": d.get("tag", ""), "status": "ok",
+            "compute_s": round(r["compute_s"], 5),
+            "memory_s": round(r["memory_s"], 5),
+            "collective_s": round(r["collective_s"], 5),
+            "bottleneck": r["bottleneck"],
+            "step_lb_s": round(r["step_time_lower_bound_s"], 5),
+            "mem_GiB_per_dev": round(
+                d["memory"].get("total_bytes_per_device", 0) / 2**30, 2),
+            "useful_flops_ratio": round(mf["useful_ratio"], 3),
+            "roofline_fraction": round(
+                r["compute_s"] / max(r["step_time_lower_bound_s"], 1e-12), 4),
+        }
+        rows.append(row)
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d.get("tag"):
+            name += f"/{d['tag']}"
+        emit_csv(name, 0.0, row["step_lb_s"])
+    record("roofline", rows)
+    return rows

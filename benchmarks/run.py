@@ -1,0 +1,65 @@
+"""Benchmark runner — one module per paper table.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only quality_main,...]
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
+structured rows to results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+TABLES = [
+    ("quality_main", "benchmarks.quality_main"),          # Tables 2-3
+    ("ablation_linkage", "benchmarks.ablation_linkage"),  # Table 4
+    ("ablation_kmeans", "benchmarks.ablation_kmeans"),    # Table 5
+    ("ablation_oneshot", "benchmarks.ablation_oneshot"),  # Table 6
+    ("ablation_merging", "benchmarks.ablation_merging"),  # Table 7
+    ("nonuniform", "benchmarks.nonuniform"),              # Table 8
+    ("calibration_ablation", "benchmarks.calibration_ablation"),  # T10-11
+    ("ablation_fcm", "benchmarks.ablation_fcm"),          # Tables 16-17
+    ("extreme_reduction", "benchmarks.extreme_reduction"),  # Tables 18-19
+    ("efficiency", "benchmarks.efficiency"),              # Table 20
+    ("cluster_quality", "benchmarks.cluster_quality"),    # Table 23
+    ("roofline_bench", "benchmarks.roofline_bench"),      # Roofline section
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer train steps / eval batches")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table subset")
+    args = ap.parse_args()
+
+    from benchmarks.common import BenchContext
+
+    only = set(args.only.split(",")) if args.only else None
+    ctx = BenchContext(fast=args.fast)
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = []
+    for name, module in TABLES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            mod.run(ctx)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"# FAILED {name}: {e!r}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    print(f"# all benchmarks done in {time.time() - t_all:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: production-grade JAX framework reproducing HC-SMoE (ICML 2025) —
+retraining-free merging of sparse-MoE experts via hierarchical clustering —
+with a 10-architecture model zoo, FSDP×TP(×pod) distribution, Pallas TPU
+kernels, fault-tolerant training, batched serving, and a 512-chip dry-run +
+roofline harness."""
+
+__version__ = "1.0.0"

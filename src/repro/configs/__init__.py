@@ -1,0 +1,124 @@
+"""Architecture registry + per-(arch, shape) input specs.
+
+``get_config(arch_id)`` returns the full published config; ``--arch`` ids use
+the assignment spelling (e.g. ``deepseek-v2-236b``). ``input_specs`` builds
+``jax.ShapeDtypeStruct`` stand-ins — weak-type-correct, shardable, zero
+allocation — for the dry-run and any ``.lower()`` call.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    FULL_ATTN_500K_SKIP,
+    LayerSpec,
+    MLAConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeConfig,
+    XLSTMConfig,
+)
+
+_MODULES = {
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    # the paper's own evaluation models
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "qwen1.5-moe-a2.7b": "repro.configs.qwen15_moe_a27b",
+}
+
+ASSIGNED_ARCHS = tuple(list(_MODULES)[:10])
+ALL_ARCHS = tuple(_MODULES)
+
+_CACHE: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    if arch not in _CACHE:
+        import importlib
+
+        _CACHE[arch] = importlib.import_module(_MODULES[arch]).CONFIG
+    return _CACHE[arch]
+
+
+def shape_skip_reason(cfg: ModelConfig, shape_name: str) -> str | None:
+    for name, reason in cfg.skip_shapes:
+        if name == shape_name:
+            return reason
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, dtype=None):
+    """ShapeDtypeStruct inputs for train_step / prefill_step / decode_step.
+
+    Returned dict matches the keyword signature of the corresponding step
+    function in ``repro.launch``/``repro.models.model``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.bfloat16
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            # src frames consume half the budget, target tokens the other half
+            s_src, s_tgt = S // 2, S // 2
+            return {
+                "src_frames": jax.ShapeDtypeStruct((B, s_src, cfg.d_model), dtype),
+                "tokens": tok(B, s_tgt),
+                "labels": tok(B, s_tgt),
+            }
+        if cfg.family == "vlm":
+            n_img = cfg.num_patch_tokens
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, n_img, cfg.d_model), dtype),
+                "tokens": tok(B, S - n_img),
+                "labels": tok(B, S - n_img),
+            }
+        return {"tokens": tok(B, S), "labels": tok(B, S)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            s_src, s_tgt = S // 2, S // 2
+            return {
+                "src_frames": jax.ShapeDtypeStruct((B, s_src, cfg.d_model), dtype),
+                "tokens": tok(B, s_tgt),
+            }
+        if cfg.family == "vlm":
+            n_img = cfg.num_patch_tokens
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, n_img, cfg.d_model), dtype),
+                "tokens": tok(B, S - n_img),
+            }
+        return {"tokens": tok(B, S)}
+
+    if shape.kind == "decode":
+        from repro.models.kvcache import cache_specs
+
+        specs = {
+            "tokens": tok(B, 1),
+            "cache": cache_specs(cfg, batch=B, max_len=S, dtype=dtype),
+        }
+        if cfg.family == "encdec":
+            # decoding against an encoded source of length S
+            specs["enc_out"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+        return specs
+
+    raise ValueError(shape.kind)

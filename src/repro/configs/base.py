@@ -1,0 +1,323 @@
+"""Config dataclasses for the repro framework.
+
+Every architecture is described by a :class:`ModelConfig`.  Depth is expressed
+as ``first_dense_layers`` unrolled prefix layers followed by a repeating
+``pattern`` of :class:`LayerSpec` entries that is scanned over
+(``num_layers - first_dense_layers`` must be divisible by ``len(pattern)``).
+This keeps the lowered HLO size independent of depth, which is what makes the
+512-device dry-run of 60-layer models tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Sparse mixture-of-experts FFN configuration."""
+
+    num_experts: int
+    top_k: int
+    expert_ffn_dim: int
+    num_shared_experts: int = 0
+    shared_expert_ffn_dim: int = 0
+    # "softmax_topk": softmax over the k selected logits (Eq. 3 of the paper,
+    # Mixtral-style). "softmax_all": softmax over all logits then select
+    # (Qwen/DeepSeek-style). Both are supported; merging is agnostic.
+    router_mode: str = "softmax_topk"
+    routed_scaling_factor: float = 1.0
+
+    @property
+    def params_per_expert_factor(self) -> int:
+        return 3  # gate, up, down
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba-1 selective SSM block (Jamba-style)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block family (sLSTM / mLSTM)."""
+
+    num_heads: int = 4
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv1d_kernel: int = 4
+    chunk_size: int = 128  # chunkwise-parallel training form
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the repeating block pattern.
+
+    mixer: attn | attn_local | attn_global | mla | mamba | mlstm | slstm
+    ffn:   dense | moe | none
+    """
+
+    mixer: str = "attn"
+    ffn: str = "dense"
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    first_dense_layers: int = 0
+
+    # attention flavour
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # used by attn_local; 0 = full
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    attn_scale: Optional[float] = None  # None -> 1/sqrt(head_dim)
+
+    # FFN
+    act: str = "silu"  # silu | gelu
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # encoder-decoder (seamless): encoder_layers scanned separately
+    encoder_layers: int = 0
+    encoder_pattern: Tuple[LayerSpec, ...] = ()
+
+    # VLM stub: number of pre-computed patch-embedding tokens prepended
+    num_patch_tokens: int = 0
+    # encdec stub: source side consumes pre-computed frame embeddings
+    frontend_stub: bool = False
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # which shapes this arch skips, with reasons (recorded in the dry-run)
+    skip_shapes: Tuple[Tuple[str, str], ...] = ()
+
+    # ------------------------------------------------------------------
+    # derived helpers
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        body = self.num_layers - self.first_dense_layers
+        if body % len(self.pattern) != 0:
+            raise ValueError(
+                f"{self.name}: num_layers-first_dense ({body}) not divisible "
+                f"by pattern length {len(self.pattern)}"
+            )
+        if self.encoder_layers and self.encoder_pattern:
+            if self.encoder_layers % len(self.encoder_pattern) != 0:
+                raise ValueError(f"{self.name}: encoder pattern mismatch")
+
+    @property
+    def num_blocks(self) -> int:
+        return (self.num_layers - self.first_dense_layers) // len(self.pattern)
+
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding shards
+        over any TP degree (seamless 256206 / granite 49155 are odd)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        """Fully unrolled layer list (for reference / param counting)."""
+        prefix = tuple(
+            LayerSpec(mixer=self.pattern[0].mixer, ffn="dense")
+            for _ in range(self.first_dense_layers)
+        )
+        return prefix + self.pattern * self.num_blocks
+
+    # -------------------------- param counting ------------------------
+    def _attn_params(self, spec: LayerSpec) -> int:
+        d = self.d_model
+        if spec.mixer == "mla":
+            m = self.mla
+            h = self.num_heads
+            p = d * m.q_lora_rank + m.q_lora_rank * h * m.qk_head_dim
+            p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            p += m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+            p += h * m.v_head_dim * d
+            return p
+        if spec.mixer in ("attn", "attn_local", "attn_global"):
+            return d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if spec.mixer == "mamba":
+            mc = self.mamba
+            d_in = mc.expand * d
+            dt_rank = mc.dt_rank or -(-d // 16)
+            p = d * 2 * d_in                       # in_proj
+            p += d_in * mc.d_conv                  # conv
+            p += d_in * (dt_rank + 2 * mc.d_state)  # x_proj
+            p += dt_rank * d_in + d_in             # dt_proj
+            p += d_in * mc.d_state + d_in          # A_log, D
+            p += d_in * d                          # out_proj
+            return p
+        if spec.mixer == "mlstm":
+            xc = self.xlstm
+            d_in = int(xc.mlstm_proj_factor * d)
+            p = d * 2 * d_in                     # up proj (x and gate paths)
+            p += 3 * d_in * d_in // xc.num_heads  # q,k,v per-head? (dense here)
+            p = d * 2 * d_in + 3 * d_in * d_in + 3 * d_in + d_in * d
+            return p
+        if spec.mixer == "slstm":
+            xc = self.xlstm
+            p = 4 * d * d + 4 * d * (d // xc.num_heads)  # input + recurrent (block-diag)
+            d_up = int(xc.slstm_proj_factor * d)
+            p += 2 * d * d_up + d_up * d
+            return p
+        raise ValueError(spec.mixer)
+
+    def _ffn_params(self, spec: LayerSpec) -> Tuple[int, int]:
+        """(total, active) FFN params for one layer."""
+        d = self.d_model
+        if spec.ffn == "dense":
+            n = 3 * d * self.d_ff
+            return n, n
+        if spec.ffn == "moe":
+            m = self.moe
+            per = 3 * d * m.expert_ffn_dim
+            shared = m.num_shared_experts * 3 * d * m.shared_expert_ffn_dim
+            router = d * m.num_experts
+            total = m.num_experts * per + shared + router
+            active = m.top_k * per + shared + router
+            return total, active
+        return 0, 0
+
+    def param_counts(self) -> Tuple[int, int]:
+        """Returns (total_params, active_params)."""
+        d = self.d_model
+        total = active = self.padded_vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.padded_vocab_size * d
+            active += self.padded_vocab_size * d
+        for spec in self.layer_specs():
+            a = self._attn_params(spec)
+            t_f, a_f = self._ffn_params(spec)
+            norms = 2 * d
+            total += a + t_f + norms
+            active += a + a_f + norms
+        if self.encoder_layers:
+            enc_pat = self.encoder_pattern or (LayerSpec(),)
+            for i in range(self.encoder_layers):
+                spec = enc_pat[i % len(enc_pat)]
+                a = self._attn_params(spec)
+                t_f, a_f = self._ffn_params(spec)
+                total += a + t_f + 2 * d
+                active += a + a_f + 2 * d
+            # cross attention in every decoder layer
+            ca = self.num_layers * (self.d_model * self.q_dim + 2 * self.d_model * self.kv_dim + self.q_dim * self.d_model)
+            total += ca
+            active += ca
+        return total, active
+
+    def model_flops_per_token(self) -> float:
+        """6*N_active per token (training fwd+bwd), the MODEL_FLOPS convention."""
+        _, active = self.param_counts()
+        return 6.0 * active
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        changes = dict(
+            num_layers=self.first_dense_layers + len(self.pattern),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=16,
+            d_ff=96 if self.d_ff else 0,
+            vocab_size=503,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+        )
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                expert_ffn_dim=32,
+                shared_expert_ffn_dim=32 if self.moe.num_shared_experts else 0,
+            )
+        if self.mla is not None:
+            changes["mla"] = MLAConfig(
+                q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                qk_rope_head_dim=8, v_head_dim=16)
+        if self.encoder_layers:
+            changes["encoder_layers"] = max(1, len(self.encoder_pattern) or 1)
+        if self.num_patch_tokens:
+            changes["num_patch_tokens"] = 8
+        changes["name"] = self.name + "-smoke"
+        changes.update(overrides)
+        return dataclasses.replace(self, **changes)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+FULL_ATTN_500K_SKIP = (
+    "long_500k",
+    "pure full-attention arch: 500k decode requires sub-quadratic mixer (see DESIGN.md)",
+)

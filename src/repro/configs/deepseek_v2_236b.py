@@ -1,0 +1,40 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6.
+
+arXiv:2405.04434. Layer 0 dense (d_ff 12288), layers 1..59 MoE with
+160 routed experts (d_ff 1536, top-6) + 2 shared experts. MLA attention:
+q_lora 1536, kv_lora 512, qk_nope 128, qk_rope 64, v_head 128, 128 heads.
+"""
+from repro.configs.base import (
+    FULL_ATTN_500K_SKIP, LayerSpec, MLAConfig, ModelConfig, MoEConfig)
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,                   # nominal; MLA dims below are authoritative
+    d_ff=12288,                     # dense prefix layer FFN
+    vocab_size=102400,
+    pattern=(LayerSpec("mla", "moe"),),
+    first_dense_layers=1,
+    moe=MoEConfig(
+        num_experts=160,
+        top_k=6,
+        expert_ffn_dim=1536,
+        num_shared_experts=2,
+        shared_expert_ffn_dim=1536,
+        router_mode="softmax_all",
+        routed_scaling_factor=16.0,
+    ),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    rope_theta=10_000.0,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

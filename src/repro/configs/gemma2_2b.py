@@ -1,0 +1,26 @@
+"""gemma2-2b [dense] — local+global alternating attention, logit softcaps.
+
+arXiv:2408.00118. head_dim 256 with 8 query / 4 kv heads (q_dim 2048 != d_model).
+Global layers are full attention -> long_500k skipped (see DESIGN.md §5).
+"""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    pattern=(LayerSpec("attn_local", "dense"), LayerSpec("attn_global", "dense")),
+    sliding_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    act="gelu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

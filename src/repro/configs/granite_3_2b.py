@@ -1,0 +1,18 @@
+"""granite-3-2b [dense] — hf:ibm-granite/granite-3.0-2b-base (GQA)."""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49155,
+    pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

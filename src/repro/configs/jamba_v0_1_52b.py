@@ -1,0 +1,35 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2.
+
+arXiv:2403.19887. Period-8 block with attention at index 4 (1 attn : 7 mamba)
+and MoE FFN on every second layer (e=2): [Md, Mmoe, Md, Mmoe, Ad, Mmoe, Md,
+Mmoe] x 4 = 32 layers. Mamba state is O(1)/token and attention is 1/8 of
+layers -> long_500k RUNS (KV for 4 attn layers at kv=8 shards over 'model').
+"""
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig, MoEConfig
+
+_PAT = (
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("attn", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    pattern=_PAT,
+    moe=MoEConfig(num_experts=16, top_k=2, expert_ffn_dim=14336),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,18 @@
+"""llama3.2-1b [dense] — hf:meta-llama/Llama-3.2-1B."""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone + anyres patch-embed stub.
+
+hf:llava-hf/llava-v1.6-mistral-7b-hf. The vision tower/projector is a STUB per
+the assignment: ``input_specs()`` supplies 2880 pre-computed patch embeddings
+(anyres 5 tiles x 576) that are prepended to the text token embeddings.
+Mistral v0.2 semantics: full attention (no sliding window) -> long_500k skip.
+"""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=1_000_000.0,
+    num_patch_tokens=2880,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

@@ -1,0 +1,17 @@
+"""minitron-8b [dense] — pruned Nemotron, arXiv:2407.14679."""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=256000,
+    pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=10_000.0,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

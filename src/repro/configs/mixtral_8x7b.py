@@ -1,0 +1,22 @@
+"""mixtral-8x7b — the paper's primary evaluation model (arXiv:2401.04088).
+
+8 experts top-2 per layer, 32L. HC-SMoE reduces 8 -> 6 -> 4 -> 3 -> 2.
+"""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    pattern=(LayerSpec("attn", "moe"),),
+    moe=MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=14336,
+                  router_mode="softmax_topk"),
+    rope_theta=1_000_000.0,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

@@ -1,0 +1,32 @@
+"""moonshot-v1-16b-a3b [moe] — Moonlight-16B-A3B-style 64e top-6.
+
+hf:moonshotai/Moonlight-16B-A3B (DeepSeek-MoE style): layer 0 dense
+(d_ff 5632), layers 1..47 MoE with 64 routed experts (d_ff 1408, top-6)
++ 2 shared experts (1408 each). HC-SMoE primary target class.
+"""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=5632,                      # dense prefix layer FFN
+    vocab_size=163840,
+    pattern=(LayerSpec("attn", "moe"),),
+    first_dense_layers=1,
+    moe=MoEConfig(
+        num_experts=64,
+        top_k=6,
+        expert_ffn_dim=1408,
+        num_shared_experts=2,
+        shared_expert_ffn_dim=1408,
+        router_mode="softmax_all",
+        routed_scaling_factor=2.446,
+    ),
+    rope_theta=50_000.0,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

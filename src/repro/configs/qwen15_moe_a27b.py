@@ -1,0 +1,29 @@
+"""qwen1.5-moe-a2.7b — the paper's second evaluation model.
+
+60 experts top-4 + 4 shared per layer, 24L. HC-SMoE reduces 60 -> 45 -> 30
+-> 23 -> 15.
+"""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=5632,
+    vocab_size=151936,
+    pattern=(LayerSpec("attn", "moe"),),
+    moe=MoEConfig(
+        num_experts=60,
+        top_k=4,
+        expert_ffn_dim=1408,
+        num_shared_experts=4,
+        shared_expert_ffn_dim=1408,
+        router_mode="softmax_all",
+    ),
+    rope_theta=1_000_000.0,
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

@@ -1,0 +1,27 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal (arXiv:2308.11596).
+
+Assignment lists 24L: read as 24 encoder + 24 decoder layers (DESIGN.md §5).
+Speech/modality frontend is a STUB: the encoder consumes pre-computed frame
+embeddings of shape (B, T_src, d_model); the decoder owns the 256206-entry
+token embedding. GQA kv=16 == MHA at 16 heads.
+"""
+from repro.configs.base import FULL_ATTN_500K_SKIP, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,            # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    pattern=(LayerSpec("attn", "dense"),),
+    encoder_pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=10_000.0,
+    frontend_stub=True,
+    act="gelu",
+    skip_shapes=(FULL_ATTN_500K_SKIP,),
+)

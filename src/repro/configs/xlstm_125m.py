@@ -1,0 +1,26 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks (arXiv:2405.04517).
+
+12 blocks in the xLSTM[7:1] spirit: pattern period 6 = 5x mLSTM + 1x sLSTM,
+repeated twice. d_ff=0 -> no post-mixer FFN (xLSTM blocks carry their own
+up/down projections). Recurrent state is O(1) per token -> long_500k RUNS.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, XLSTMConfig
+
+_PAT = tuple(
+    LayerSpec("mlstm", "none") for _ in range(5)
+) + (LayerSpec("slstm", "none"),)
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=_PAT,
+    xlstm=XLSTMConfig(num_heads=4, chunk_size=128),
+    tie_embeddings=True,
+)

@@ -1,0 +1,8 @@
+"""HC-SMoE: the paper's primary contribution.
+
+Calibration (Eq. 4 expert-output stats) -> hierarchical clustering (Alg. 1)
+-> weight-space merging (freq/avg/fix-dom/zipit) -> group-map router
+redirect, plus every baseline the paper compares against.
+"""
+from repro.core.calibration import collect_moe_stats, flatten_stats  # noqa: F401
+from repro.core.pipeline import HCSMoEConfig, apply_hcsmoe, run_hcsmoe  # noqa: F401

@@ -1,0 +1,204 @@
+"""Retraining-free baselines reproduced from the paper (§4.1, Table 1).
+
+  F-prune — global frequency-ranked expert pruning (dynamic per layer)
+  S-prune — global router-score-ranked pruning (He et al., 2024)
+  O-prune — per-layer subset search minimising layer-output deviation
+            (Lu et al., 2024), with sampled search like the paper's 10^5 run
+  M-SMoE  — frequency-dominant selection + router-logit one-shot grouping +
+            frequency merging (Li et al., 2024), task-agnostic setting
+  one_shot_grouping — Table 6's single-pass grouping under any metric
+
+Pruning writes ``router_mask`` (-1e9) so routing renormalises over kept
+experts; weights of pruned experts are zeroed (ragged path then assigns them
+zero tokens and zero FLOPs). Merging baselines reuse the merge machinery.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merging as mrg
+from repro.core import metrics as met
+from repro.core.calibration import flatten_stats
+from repro.core.pipeline import _layer_weights, _moe_positions
+
+NEG = -1.0e9
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _global_scores_keep(layers, scores: np.ndarray, keep_total: int):
+    """Global top-k across (L, E) scores -> per-layer keep masks (dynamic)."""
+    L, E = scores.shape
+    order = np.argsort(-scores.reshape(-1), kind="stable")
+    keep = np.zeros(L * E, bool)
+    keep[order[:keep_total]] = True
+    keep = keep.reshape(L, E)
+    # every layer keeps at least one expert
+    for l in range(L):
+        if not keep[l].any():
+            keep[l, int(np.argmax(scores[l]))] = True
+    return keep
+
+
+def _apply_prune(cfg, params, keep_masks: List[np.ndarray], layers):
+    new_params = jax.tree.map(lambda x: x, params)
+    positions = _moe_positions(cfg)
+    by_pos = {p: [] for p in positions}
+    for layer, keep in zip(layers, keep_masks):
+        by_pos[layer["pattern_pos"]].append((layer["block"], keep))
+    for pos in positions:
+        entries = sorted(by_pos[pos])
+        mask = np.stack([k for _, k in entries])  # (n_blocks, E)
+        moe = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
+        rmask = jnp.where(jnp.asarray(mask), 0.0, NEG).astype(jnp.float32)
+        moe["router_mask"] = rmask
+        m = jnp.asarray(mask)[:, :, None, None]
+        moe["wg"] = jnp.where(m, moe["wg"], 0)
+        moe["wu"] = jnp.where(m, moe["wu"], 0)
+        moe["wd"] = jnp.where(m, moe["wd"], 0)
+    return new_params
+
+
+# ---------------------------------------------------------------------------
+# F-prune / S-prune
+# ---------------------------------------------------------------------------
+
+
+def f_prune(cfg, params, stats, r: int):
+    layers = flatten_stats(cfg, stats)
+    scores = np.stack([np.asarray(l["stats"].freq, np.float64) for l in layers])
+    keep = _global_scores_keep(layers, scores, r * len(layers))
+    return _apply_prune(cfg, params, list(keep), layers), {"keep": keep}
+
+
+def s_prune(cfg, params, stats, r: int):
+    """Router-score pruning: accumulate softmax router probs per expert."""
+    layers = flatten_stats(cfg, stats)
+    scores = []
+    for l in layers:
+        logits = np.asarray(l["stats"].logits_sample, np.float64)  # (T, E)
+        probs = np.exp(logits - logits.max(1, keepdims=True))
+        probs /= probs.sum(1, keepdims=True)
+        scores.append(probs.sum(0))
+    scores = np.stack(scores)
+    keep = _global_scores_keep(layers, scores, r * len(layers))
+    return _apply_prune(cfg, params, list(keep), layers), {"keep": keep}
+
+
+# ---------------------------------------------------------------------------
+# O-prune — sampled subset search on layer-output deviation
+# ---------------------------------------------------------------------------
+
+
+def _layer_output(wg, wu, wd, router, x, keep_mask, cfg):
+    """Reference MoE layer output on sample tokens with a keep mask."""
+    from repro.models.layers import activation
+
+    f = activation(cfg.act)
+    logits = x @ router + np.where(keep_mask, 0.0, NEG)[None, :]
+    m = cfg.moe
+    if m.router_mode == "softmax_topk":
+        idx = np.argsort(-logits, axis=1)[:, : m.top_k]
+        sel = np.take_along_axis(logits, idx, axis=1)
+        w = np.exp(sel - sel.max(1, keepdims=True))
+        w /= w.sum(1, keepdims=True)
+    else:
+        full = np.exp(logits - logits.max(1, keepdims=True))
+        full /= full.sum(1, keepdims=True)
+        idx = np.argsort(-full, axis=1)[:, : m.top_k]
+        w = np.take_along_axis(full, idx, axis=1) * m.routed_scaling_factor
+    out = np.zeros((x.shape[0], x.shape[1]))
+    for k in range(m.top_k):
+        e_idx = idx[:, k]
+        for e in np.unique(e_idx):
+            rows = e_idx == e
+            xe = x[rows]
+            h = f(xe @ wg[e]) * (xe @ wu[e])
+            out[rows] += w[rows, k][:, None] * (h @ wd[e])
+    return out
+
+
+def o_prune(cfg, params, stats, r: int, *, samples: int = 64, seed: int = 0):
+    """Per-layer sampled subset search (the paper samples 10^5 on Qwen; we
+    scale the sample count to the experiment)."""
+    layers = flatten_stats(cfg, stats)
+    rng = np.random.RandomState(seed)
+    E = cfg.moe.num_experts
+    keeps = []
+    for l in layers:
+        wg, wu, wd = _layer_weights(params, l["pattern_pos"], l["block"])
+        moe_p = params["decoder"]["blocks"][f"layer{l['pattern_pos']}"]["moe"]
+        router = np.asarray(moe_p["router"][l["block"]], np.float64)
+        x = np.asarray(l["stats"].x_sample, np.float64)
+        full_mask = np.ones(E, bool)
+        ref = _layer_output(wg, wu, wd, router, x, full_mask, cfg)
+        best, best_err = None, np.inf
+        for _ in range(samples):
+            cand = np.zeros(E, bool)
+            cand[rng.choice(E, r, replace=False)] = True
+            err = float(np.linalg.norm(
+                ref - _layer_output(wg, wu, wd, router, x, cand, cfg)))
+            if err < best_err:
+                best, best_err = cand, err
+        keeps.append(best)
+    return _apply_prune(cfg, params, keeps, layers), {"keep": np.stack(keeps)}
+
+
+# ---------------------------------------------------------------------------
+# One-shot grouping (Table 6) and M-SMoE
+# ---------------------------------------------------------------------------
+
+
+def one_shot_grouping(feats: np.ndarray, freq: np.ndarray, r: int) -> np.ndarray:
+    """Li et al. (2024): dominant = top-r by frequency; every other expert
+    joins its most-similar dominant (single pass, no re-evaluation)."""
+    E = feats.shape[0]
+    dom = np.argsort(-freq, kind="stable")[:r]
+    labels = np.full(E, -1, np.int64)
+    for c, d_idx in enumerate(dom):
+        labels[d_idx] = c
+    for e in range(E):
+        if labels[e] >= 0:
+            continue
+        d2 = ((feats[dom] - feats[e][None]) ** 2).sum(1)
+        labels[e] = int(np.argmin(d2))
+    return labels
+
+
+def m_smoe(cfg, params, stats, r: int, *, metric: str = "router_logits",
+           merge: str = "frequency"):
+    """M-SMoE in the task-agnostic, no-retraining setting (paper §4.1)."""
+    from repro.core.pipeline import build_combine_matrix, merge_stacked_jax
+
+    layers = flatten_stats(cfg, stats)
+    new_params = jax.tree.map(lambda x: x, params)
+    positions = _moe_positions(cfg)
+    by_pos = {p: [] for p in positions}
+    info = []
+    for l in layers:
+        weights = _layer_weights(params, l["pattern_pos"], l["block"])
+        feats = met.build_features(metric, stats=l["stats"], weights=weights)
+        freq = np.asarray(l["stats"].freq, np.float64)
+        labels = one_shot_grouping(feats, freq, r)
+        by_pos[l["pattern_pos"]].append((l["block"], labels, freq))
+        info.append({"labels": labels, "block": l["block"],
+                     "pattern_pos": l["pattern_pos"]})
+    for pos in positions:
+        entries = sorted(by_pos[pos])
+        moe = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
+        combine = np.stack([
+            build_combine_matrix(labels, freq, merge, r)
+            for _, labels, freq in entries])
+        mg, mu, md = merge_stacked_jax(moe["wg"], moe["wu"], moe["wd"],
+                                       jnp.asarray(combine))
+        moe["wg"], moe["wu"], moe["wd"] = mg, mu, md
+        moe["group_map"] = jnp.asarray(
+            np.stack([labels for _, labels, _ in entries]), jnp.int32)
+    return new_params, {"layers": info}

@@ -1,0 +1,71 @@
+"""Calibration pass (paper Alg. 1 lines 1-4): run the original model over a
+calibration dataset and accumulate per-MoE-layer statistics — mean expert
+outputs (Eq. 4), router-logit samples, activation frequencies, intermediate
+activation samples — via the model's ``capture_stats`` path.
+
+Stats come back stacked like the scanned params: a tuple over pattern
+positions, each an :class:`MoEStats` with a leading ``n_blocks`` dim.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _accumulate(acc, new):
+    """Streaming combine of two stats pytrees: sums add, samples keep first."""
+    if acc is None:
+        return new
+
+    def comb(path_leafname, a, b):
+        return a + b
+
+    def combine_stats(a, b):
+        return type(a)(
+            out_sum=a.out_sum + b.out_sum,
+            token_count=a.token_count + b.token_count,
+            freq=a.freq + b.freq,
+            logits_sample=a.logits_sample,   # first-batch sample
+            act_sample=a.act_sample,
+            x_sample=a.x_sample,
+        )
+
+    return jax.tree.map(combine_stats, acc, new,
+                        is_leaf=lambda x: hasattr(x, "out_sum"))
+
+
+def collect_moe_stats(model, params, batches, *, moe_mode: str = "dense"):
+    """batches: iterable of input dicts. Returns stacked stats pytree.
+
+    Uses the dense MoE path because Eq. 4 requires every expert's output on
+    every calibration token regardless of routing.
+    """
+
+    @partial(jax.jit, static_argnames=("moe_mode",))
+    def step(params, batch, moe_mode="dense"):
+        kwargs = {k: v for k, v in batch.items() if k != "labels"}
+        _, aux = model.forward(params, **kwargs, moe_mode=moe_mode,
+                               capture_stats=True)
+        return aux["stats"]
+
+    acc = None
+    for batch in batches:
+        acc = _accumulate(acc, step(params, batch, moe_mode=moe_mode))
+    return acc
+
+
+def flatten_stats(cfg, stats) -> List[dict]:
+    """Stacked stats -> per-layer list ordered by global layer index.
+
+    Each entry: {"pattern_pos", "block", "stats": MoEStats (unstacked)}.
+    """
+    moe_positions = [i for i, s in enumerate(cfg.pattern) if s.ffn == "moe"]
+    out = []
+    for b in range(cfg.num_blocks):
+        for slot, pos in enumerate(moe_positions):
+            st = jax.tree.map(lambda x: x[b], stats[slot])
+            out.append({"pattern_pos": pos, "block": b, "stats": st})
+    return out

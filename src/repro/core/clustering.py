@@ -1,0 +1,159 @@
+"""Clustering algorithms for expert grouping (paper §3.2.2, Appendix B.5/D).
+
+All algorithms are deterministic given their inputs (HC unconditionally; the
+K-means/FCM variants given an explicit seed), run offline on (E, D) feature
+matrices, and return integer labels in canonical order (clusters numbered by
+first-member appearance) so downstream merging is reproducible bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+LINKAGES = ("single", "complete", "average")
+
+
+def pairwise_euclidean(feats: np.ndarray) -> np.ndarray:
+    """(E, D) -> (E, E) Euclidean distances, float64 for determinism."""
+    f = np.asarray(feats, np.float64)
+    sq = np.sum(f * f, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (f @ f.T)
+    return np.sqrt(np.maximum(d2, 0.0))
+
+
+def canonical_labels(labels: np.ndarray) -> np.ndarray:
+    """Renumber clusters by order of first appearance."""
+    mapping = {}
+    out = np.empty_like(labels)
+    for i, l in enumerate(labels):
+        if l not in mapping:
+            mapping[l] = len(mapping)
+        out[i] = mapping[l]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical agglomerative clustering (the paper's method)
+# ---------------------------------------------------------------------------
+
+
+def hierarchical_cluster(feats: np.ndarray, r: int,
+                         linkage: str = "average") -> np.ndarray:
+    """Bottom-up agglomerative clustering to ``r`` clusters (Alg. 1 lines
+    5-11). Lance-Williams distance updates; deterministic lexicographic
+    tie-breaking on the merged pair.
+    """
+    if linkage not in LINKAGES:
+        raise ValueError(linkage)
+    n = feats.shape[0]
+    if not 1 <= r <= n:
+        raise ValueError(f"target clusters {r} not in [1, {n}]")
+    D = pairwise_euclidean(feats)
+    np.fill_diagonal(D, np.inf)
+    active = list(range(n))
+    sizes = np.ones(n)
+    labels = np.arange(n)
+
+    for _ in range(n - r):
+        # find the minimum-distance active pair, lexicographic tie-break
+        sub = D[np.ix_(active, active)]
+        flat = np.argmin(sub)
+        ai, aj = divmod(flat, len(active))
+        if ai > aj:
+            ai, aj = aj, ai
+        i, j = active[ai], active[aj]
+        # Lance-Williams update of row i (absorbs j)
+        for k in active:
+            if k in (i, j):
+                continue
+            if linkage == "single":
+                newd = min(D[i, k], D[j, k])
+            elif linkage == "complete":
+                newd = max(D[i, k], D[j, k])
+            else:  # average (UPGMA)
+                newd = (sizes[i] * D[i, k] + sizes[j] * D[j, k]) / (
+                    sizes[i] + sizes[j])
+            D[i, k] = D[k, i] = newd
+        sizes[i] += sizes[j]
+        labels[labels == labels[j]] = labels[i]
+        active.remove(j)
+        D[j, :] = D[:, j] = np.inf
+
+    return canonical_labels(labels)
+
+
+# ---------------------------------------------------------------------------
+# K-means (fixed / random init) — the ablation baseline
+# ---------------------------------------------------------------------------
+
+
+def kmeans_cluster(feats: np.ndarray, r: int, init: str = "fix",
+                   seed: int = 0, iters: int = 100) -> np.ndarray:
+    f = np.asarray(feats, np.float64)
+    n = f.shape[0]
+    if init == "fix":
+        centers = f[:r].copy()
+    elif init == "rnd":
+        rng = np.random.RandomState(seed)
+        centers = f[rng.choice(n, r, replace=False)].copy()
+    else:
+        raise ValueError(init)
+    labels = np.zeros(n, np.int64)
+    for _ in range(iters):
+        d2 = ((f[:, None, :] - centers[None]) ** 2).sum(-1)
+        new_labels = np.argmin(d2, axis=1)
+        if np.array_equal(new_labels, labels) and _ > 0:
+            break
+        labels = new_labels
+        for c in range(r):
+            members = f[labels == c]
+            if len(members):
+                centers[c] = members.mean(0)
+    # guarantee r non-empty clusters: seed empties with farthest points
+    for c in range(r):
+        if not np.any(labels == c):
+            d2 = ((f - centers[labels]) ** 2).sum(-1)
+            far = int(np.argmax(d2))
+            labels[far] = c
+    return canonical_labels(labels)
+
+
+# ---------------------------------------------------------------------------
+# Fuzzy C-means (Appendix B.5) — soft clustering baseline
+# ---------------------------------------------------------------------------
+
+
+def fcm_cluster(feats: np.ndarray, r: int, m: float = 2.0, seed: int = 0,
+                iters: int = 100, tol: float = 1e-6):
+    """Returns (labels via argmax, membership matrix U (E, r))."""
+    f = np.asarray(feats, np.float64)
+    n = f.shape[0]
+    rng = np.random.RandomState(seed)
+    U = rng.rand(n, r)
+    U /= U.sum(1, keepdims=True)
+    for _ in range(iters):
+        um = U ** m
+        centers = (um.T @ f) / np.maximum(um.sum(0)[:, None], 1e-12)
+        dist = np.sqrt(((f[:, None, :] - centers[None]) ** 2).sum(-1))
+        dist = np.maximum(dist, 1e-12)
+        inv = dist ** (-2.0 / (m - 1.0))
+        U_new = inv / inv.sum(1, keepdims=True)
+        if np.max(np.abs(U_new - U)) < tol:
+            U = U_new
+            break
+        U = U_new
+    # labels stay aligned with U's columns (NOT canonicalised) so soft
+    # membership merging can consume U directly.
+    return np.argmax(U, axis=1).astype(np.int64), U
+
+
+def cluster(feats: np.ndarray, r: int, method: str = "hc",
+            linkage: str = "average", seed: int = 0) -> np.ndarray:
+    if method == "hc":
+        return hierarchical_cluster(feats, r, linkage)
+    if method == "kmeans_fix":
+        return kmeans_cluster(feats, r, "fix", seed)
+    if method == "kmeans_rnd":
+        return kmeans_cluster(feats, r, "rnd", seed)
+    if method == "fcm":
+        return fcm_cluster(feats, r, seed=seed)[0]
+    raise ValueError(method)

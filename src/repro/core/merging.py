@@ -1,0 +1,173 @@
+"""Expert weight-space merging (paper §3.2.3, Appendix B.2).
+
+Given cluster labels for one MoE layer and the stacked expert weights
+(wg, wu: (E, d, f); wd: (E, f, d)), produce merged weights with ``r`` live
+slots. Methods:
+
+  average   — alpha_j = 1/|C|
+  frequency — alpha_j = freq_j / sum_cluster freq           (Alg. 1 line 16)
+  fix_dom   — ZipIt adaptation: permute each non-dominant expert's hidden
+              features onto the dominant expert's feature order via
+              correlation argmax, then weighted-average (Fig. 4)
+  zipit     — full ZipIt-style greedy pairwise feature matching within the
+              cluster (reference implementation; orders of magnitude slower,
+              Table 9)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def cluster_alphas(labels: np.ndarray, freq: np.ndarray, method: str):
+    """Per-expert merge coefficient alpha_j (normalised within cluster)."""
+    E = labels.shape[0]
+    alphas = np.zeros(E, np.float64)
+    for c in np.unique(labels):
+        members = np.where(labels == c)[0]
+        if method == "average":
+            alphas[members] = 1.0 / len(members)
+        elif method == "frequency":
+            fsum = float(freq[members].sum())
+            if fsum <= 0:
+                alphas[members] = 1.0 / len(members)
+            else:
+                alphas[members] = freq[members] / fsum
+        else:
+            raise ValueError(method)
+    return alphas
+
+
+def _correlation_map(feat_dom: np.ndarray, feat_e: np.ndarray) -> np.ndarray:
+    """For each feature dim of expert e, index of the most-correlated
+    dominant feature dim. feats: (T, f) activation traces (or (3d, f))."""
+    a = feat_dom - feat_dom.mean(0, keepdims=True)
+    b = feat_e - feat_e.mean(0, keepdims=True)
+    a /= np.maximum(np.linalg.norm(a, axis=0, keepdims=True), 1e-9)
+    b /= np.maximum(np.linalg.norm(b, axis=0, keepdims=True), 1e-9)
+    corr = b.T @ a  # (f_e, f_dom)
+    return np.argmax(corr, axis=1)
+
+
+def _fix_dom_features(feature: str, act_sample, wg, wu, wd, e: int):
+    if feature == "act":
+        return np.asarray(act_sample[e], np.float64)  # (T, f)
+    if feature == "weight":
+        return np.concatenate(
+            [np.asarray(wg[e], np.float64), np.asarray(wu[e], np.float64),
+             np.asarray(wd[e], np.float64).T], axis=0)  # (3d, f)
+    if feature == "act+weight":
+        return np.concatenate(
+            [_fix_dom_features("act", act_sample, wg, wu, wd, e),
+             _fix_dom_features("weight", act_sample, wg, wu, wd, e)], axis=0)
+    raise ValueError(feature)
+
+
+def merge_layer(wg, wu, wd, labels: np.ndarray, freq: np.ndarray,
+                method: str = "frequency", act_sample=None,
+                feature: str = "act", membership: np.ndarray | None = None):
+    """Returns (wg', wu', wd', group_map) with r live expert slots.
+
+    membership (E, r): soft FCM merging weights (Appendix B.5 Eq. 15);
+    overrides labels-based alphas when provided.
+    """
+    wg = np.asarray(wg, np.float64)
+    wu = np.asarray(wu, np.float64)
+    wd = np.asarray(wd, np.float64)
+    E, d, f = wg.shape
+    labels = np.asarray(labels)
+    r = membership.shape[1] if membership is not None else int(labels.max()) + 1
+
+    out_g = np.zeros((r, d, f))
+    out_u = np.zeros((r, d, f))
+    out_d = np.zeros((r, f, d))
+
+    if membership is not None:  # soft (FCM) merging
+        for c in range(r):
+            w = membership[:, c][:, None, None]
+            out_g[c] = (w * wg).sum(0)
+            out_u[c] = (w * wu).sum(0)
+            out_d[c] = (w * wd).sum(0)
+        return out_g, out_u, out_d, labels.astype(np.int32)
+
+    if method in ("average", "frequency"):
+        alphas = cluster_alphas(labels, freq, method)
+        for e in range(E):
+            c = labels[e]
+            out_g[c] += alphas[e] * wg[e]
+            out_u[c] += alphas[e] * wu[e]
+            out_d[c] += alphas[e] * wd[e]
+    elif method == "fix_dom":
+        alphas = cluster_alphas(labels, freq, "average")
+        for c in range(r):
+            members = np.where(labels == c)[0]
+            dom = members[int(np.argmax(freq[members]))]
+            feat_dom = _fix_dom_features(feature, act_sample, wg, wu, wd, dom)
+            acc_g = wg[dom].copy()
+            acc_u = wu[dom].copy()
+            acc_d = wd[dom].copy()
+            counts = np.ones(f)
+            for e in members:
+                if e == dom:
+                    continue
+                fmap = _correlation_map(feat_dom,
+                                        _fix_dom_features(feature, act_sample,
+                                                          wg, wu, wd, e))
+                # accumulate expert e's hidden dim j onto dominant dim fmap[j]
+                for j in range(f):
+                    m = fmap[j]
+                    acc_g[:, m] += wg[e][:, j]
+                    acc_u[:, m] += wu[e][:, j]
+                    acc_d[m, :] += wd[e][j, :]
+                    counts[m] += 1
+            out_g[c] = acc_g / counts[None, :]
+            out_u[c] = acc_u / counts[None, :]
+            out_d[c] = acc_d / counts[:, None]
+    elif method == "zipit":
+        # Reference ZipIt within cluster: greedily merge the most correlated
+        # feature pairs of the concatenated experts down to f dims.
+        for c in range(int(labels.max()) + 1):
+            members = np.where(labels == c)[0]
+            if len(members) == 1:
+                e = members[0]
+                out_g[c], out_u[c], out_d[c] = wg[e], wu[e], wd[e]
+                continue
+            feats = np.concatenate(
+                [_fix_dom_features(feature, act_sample, wg, wu, wd, e)
+                 for e in members], axis=1)  # (T, f*|C|)
+            G = np.concatenate([wg[e] for e in members], axis=1)
+            U = np.concatenate([wu[e] for e in members], axis=1)
+            Dn = np.concatenate([wd[e] for e in members], axis=0)
+            out_g[c], out_u[c], out_d[c] = _zipit_reduce(feats, G, U, Dn, f)
+    else:
+        raise ValueError(method)
+
+    dtype = np.asarray(wg).dtype
+    return (out_g.astype(dtype), out_u.astype(dtype), out_d.astype(dtype),
+            labels.astype(np.int32))
+
+
+def _zipit_reduce(feats, G, U, Dn, target_f: int):
+    """Greedy pairwise feature merging until target_f dims remain."""
+    a = feats - feats.mean(0, keepdims=True)
+    a = a / np.maximum(np.linalg.norm(a, axis=0, keepdims=True), 1e-9)
+    corr = a.T @ a
+    np.fill_diagonal(corr, -np.inf)
+    groups = [[i] for i in range(feats.shape[1])]
+    alive = list(range(feats.shape[1]))
+    while len(alive) > target_f:
+        sub = corr[np.ix_(alive, alive)]
+        ai, aj = divmod(int(np.argmax(sub)), len(alive))
+        i, j = alive[ai], alive[aj]
+        if i > j:
+            i, j = j, i
+        groups[i].extend(groups[j])
+        # merged correlation = average of rows
+        corr[i, :] = (corr[i, :] + corr[j, :]) / 2.0
+        corr[:, i] = corr[i, :]
+        corr[i, i] = -np.inf
+        corr[j, :] = corr[:, j] = -np.inf
+        alive.remove(j)
+    out_g = np.stack([G[:, groups[i]].mean(1) for i in alive], axis=1)
+    out_u = np.stack([U[:, groups[i]].mean(1) for i in alive], axis=1)
+    out_d = np.stack([Dn[groups[i], :].mean(0) for i in alive], axis=0)
+    return out_g, out_u, out_d

@@ -1,0 +1,40 @@
+"""Expert similarity feature builders (paper §3.2.1, Table 4).
+
+Given per-layer calibration stats + expert weights, build the (E, D) feature
+matrix each metric clusters on:
+
+  expert_output — o_j = mean over calib tokens of E_j(x)     (Eq. 4; O(d))
+  router_logits — expert j's router logit trace on sampled tokens (M-SMoE)
+  weight        — flattened [W_gate | W_up | W_down^T]        (O(3 d d_ff))
+"""
+from __future__ import annotations
+
+import numpy as np
+
+METRICS = ("expert_output", "router_logits", "weight")
+
+
+def expert_output_features(stats) -> np.ndarray:
+    out_sum = np.asarray(stats.out_sum, np.float64)  # (E, d)
+    count = float(np.asarray(stats.token_count))
+    return out_sum / max(count, 1.0)
+
+
+def router_logit_features(stats) -> np.ndarray:
+    return np.asarray(stats.logits_sample, np.float64).T  # (E, T_sub)
+
+
+def weight_features(wg, wu, wd) -> np.ndarray:
+    E = wg.shape[0]
+    parts = [np.asarray(w, np.float64).reshape(E, -1) for w in (wg, wu, wd)]
+    return np.concatenate(parts, axis=1)
+
+
+def build_features(metric: str, stats=None, weights=None) -> np.ndarray:
+    if metric == "expert_output":
+        return expert_output_features(stats)
+    if metric == "router_logits":
+        return router_logit_features(stats)
+    if metric == "weight":
+        return weight_features(*weights)
+    raise ValueError(metric)

@@ -1,0 +1,134 @@
+"""Cluster-quality and model-fidelity metrics (paper Appendix D, Table 23).
+
+  * L2 error / cosine similarity of final hidden states vs the original model
+  * Silhouette score (euclidean & cosine)
+  * Dunn index (euclidean & cosine)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import pairwise_euclidean
+
+
+def _pairwise_cosine_dist(feats: np.ndarray) -> np.ndarray:
+    f = np.asarray(feats, np.float64)
+    f = f / np.maximum(np.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+    return 1.0 - f @ f.T
+
+
+def silhouette_score(feats: np.ndarray, labels: np.ndarray,
+                     metric: str = "euclidean") -> float:
+    D = (pairwise_euclidean(feats) if metric == "euclidean"
+         else _pairwise_cosine_dist(feats))
+    n = len(labels)
+    uniq = np.unique(labels)
+    if len(uniq) < 2:
+        return 0.0
+    s_vals = []
+    for i in range(n):
+        same = (labels == labels[i])
+        n_same = same.sum() - 1
+        if n_same == 0:
+            s_vals.append(0.0)
+            continue
+        a = D[i][same].sum() / n_same
+        b = min(D[i][labels == c].mean() for c in uniq if c != labels[i])
+        s_vals.append((b - a) / max(a, b, 1e-12))
+    return float(np.mean(s_vals))
+
+
+def dunn_index(feats: np.ndarray, labels: np.ndarray,
+               metric: str = "euclidean") -> float:
+    D = (pairwise_euclidean(feats) if metric == "euclidean"
+         else _pairwise_cosine_dist(feats))
+    np.fill_diagonal(D, 0.0)
+    uniq = np.unique(labels)
+    if len(uniq) < 2:
+        return 0.0
+    max_intra = 0.0
+    for c in uniq:
+        idx = np.where(labels == c)[0]
+        if len(idx) > 1:
+            max_intra = max(max_intra, D[np.ix_(idx, idx)].max())
+    min_inter = np.inf
+    for i, c1 in enumerate(uniq):
+        for c2 in uniq[i + 1:]:
+            i1, i2 = np.where(labels == c1)[0], np.where(labels == c2)[0]
+            min_inter = min(min_inter, D[np.ix_(i1, i2)].min())
+    return float(min_inter / max(max_intra, 1e-12))
+
+
+def cluster_quality_report(feats: np.ndarray, labels: np.ndarray) -> dict:
+    return {
+        "silhouette_euc": silhouette_score(feats, labels, "euclidean"),
+        "silhouette_cos": silhouette_score(feats, labels, "cosine"),
+        "dunn_euc": dunn_index(feats, labels, "euclidean"),
+        "dunn_cos": dunn_index(feats, labels, "cosine"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Model output fidelity (Table 23 L2 / cosine columns)
+# ---------------------------------------------------------------------------
+
+
+_JIT_CACHE = {}
+
+
+def _cached_jit(kind, model, moe_mode, make):
+    key = (kind, id(model), moe_mode)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = make()
+    return _JIT_CACHE[key]
+
+
+def output_fidelity(model, params_orig, params_merged, batches,
+                    *, moe_mode: str = "dense") -> dict:
+    """Compare final logits on eval batches: L2 error + cosine similarity."""
+
+    vocab = model.cfg.vocab_size
+
+    def make():
+        @jax.jit
+        def logits_of(params, batch):
+            kwargs = {k: v for k, v in batch.items() if k != "labels"}
+            out, _ = model.forward(params, **kwargs, moe_mode=moe_mode)
+            # drop padded-vocab ids (masked to -1e30 — they would NaN the
+            # cosine) and compare live logits only
+            return out[..., :vocab].astype(jnp.float32)
+
+        return logits_of
+
+    logits_of = _cached_jit("fidelity", model, moe_mode, make)
+
+    l2, cos, n = 0.0, 0.0, 0
+    for batch in batches:
+        a = logits_of(params_orig, batch)
+        b = logits_of(params_merged, batch)
+        l2 += float(jnp.sqrt(jnp.sum((a - b) ** 2)))
+        an = a.reshape(-1)
+        bn = b.reshape(-1)
+        cos += float(jnp.vdot(an, bn) /
+                     jnp.maximum(jnp.linalg.norm(an) * jnp.linalg.norm(bn), 1e-9))
+        n += 1
+    return {"l2_error": l2 / n, "cosine_similarity": cos / n}
+
+
+def eval_loss(model, params, batches, *, moe_mode: str = "ragged") -> float:
+    """Mean eval CE loss (the quality score for Tables 2/3 analogs)."""
+
+    def make():
+        @jax.jit
+        def step(params, batch):
+            loss, _ = model.train_loss(params, batch, moe_mode=moe_mode,
+                                       remat="none", lb_coef=0.0, z_coef=0.0)
+            return loss
+
+        return step
+
+    step = _cached_jit("eval_loss", model, moe_mode, make)
+    vals = [float(step(params, b)) for b in batches]
+    return float(np.mean(vals))

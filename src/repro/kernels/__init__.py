@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots:
+
+  moe_gemm        — ragged grouped GEMM (MoE expert FFN), scalar-prefetched
+                    per-tile expert ids (MegaBlocks adapted to the MXU)
+  flash_attention — causal blocked online-softmax attention
+  fused_ffn       — fused SwiGLU/GeGLU (no (M, F) hidden in HBM)
+
+``ops.py`` holds the jit'd public wrappers (+custom VJPs); ``ref.py`` the
+pure-jnp oracles every kernel is allclose-tested against.
+"""

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused SwiGLU/GeGLU FFN.
+
+Computes y = (act(x @ Wg) * (x @ Wu)) @ Wd without ever materialising the
+(M, F) hidden activation in HBM: grid (M/TM, F/TF) with the F dimension
+innermost accumulating into a (TM, d) f32 VMEM scratch. Each step loads one
+(d, TF) slice of Wg/Wu and one (TF, d) slice of Wd.
+
+VMEM per step: TM*d (x) + 2*d*TF + TF*d + TM*d f32 acc. With TM=TF=128,
+d=4096: ~5.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TM = 128
+TF = 128
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, y_ref, acc_scr, *, act, f_steps):
+    fi = pl.program_id(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]  # (TM, d)
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(g, approximate=True) * u
+    acc_scr[...] += jnp.dot(h.astype(x.dtype), wd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(fi == f_steps - 1)
+    def _finish():
+        y_ref[...] = acc_scr[...].astype(y_ref.dtype)
+
+
+def fused_ffn(x, wg, wu, wd, act: str = "silu", *, interpret: bool = False):
+    """x: (M, d); wg/wu: (d, F); wd: (F, d) -> (M, d)."""
+    import math
+
+    m, d = x.shape
+    _, f = wg.shape
+    tm = math.gcd(m, TM)
+    tf = math.gcd(f, TF)
+    f_steps = f // tf
+
+    kernel = functools.partial(_kernel, act=act, f_steps=f_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tm, f_steps),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, tf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, tf), lambda i, j: (0, j)),
+            pl.BlockSpec((tf, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, d), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(x, wg, wu, wd)

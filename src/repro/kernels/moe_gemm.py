@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: ragged grouped GEMM for MoE expert compute.
+
+MegaBlocks-adapted for TPU (DESIGN.md §3): tokens arrive sorted by expert and
+padded so every row tile of ``TILE_N`` rows belongs to exactly one expert.
+The per-tile expert id is scalar-prefetched into SMEM and drives the weight
+BlockSpec index map, so each grid step streams exactly one (d, TILE_F) slice
+of one expert's weights HBM->VMEM and issues a single MXU matmul.
+
+VMEM working set per step: TILE_N*d (x) + d*TILE_F (w) + TILE_N*TILE_F (y),
+bf16 — with TILE_N = TILE_F = 128 and d = 5120 that is ~2.6 MB, well inside
+the ~16 MB/core budget; both matmul dims are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_N = 128
+TILE_F = 128
+
+
+def _kernel(tile_expert_ref, x_ref, w_ref, y_ref):
+    # x_ref: (TILE_N, d); w_ref: (1, d, TILE_F); y_ref: (TILE_N, TILE_F)
+    y_ref[...] = jnp.dot(
+        x_ref[...], w_ref[0],
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+def _tile(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (128-aligned at real scale)."""
+    import math
+
+    return math.gcd(n, pref)
+
+
+def grouped_matmul_padded(x_pad, w, tile_expert, *, interpret: bool = False):
+    """x_pad: (N_pad, d) rows sorted+padded per expert; w: (E, d, F);
+    tile_expert: (N_pad // TILE_N,) int32. Returns (N_pad, F)."""
+    n_pad, d = x_pad.shape
+    e, _, f = w.shape
+    tile_f = _tile(f, TILE_F)
+    assert n_pad % TILE_N == 0, n_pad
+    grid = (n_pad // TILE_N, f // tile_f)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i, j, te: (i, 0)),
+            pl.BlockSpec((1, d, tile_f), lambda i, j, te: (te[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, tile_f), lambda i, j, te: (i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, f), x_pad.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(tile_expert, x_pad, w)
+
+
+def padded_layout(group_sizes, num_tokens: int):
+    """Static-shape padded layout for a ragged batch.
+
+    Returns (dest_idx (N,), tile_expert (n_tiles,), n_pad) where n_pad =
+    num_tokens rounded up + one extra tile per expert (static upper bound).
+    dest_idx maps sorted token t to its padded row.
+    """
+    e = group_sizes.shape[0]
+    gs = group_sizes.astype(jnp.int32)
+    padded = ((gs + TILE_N - 1) // TILE_N) * TILE_N
+    pad_off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    raw_off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(gs)[:-1].astype(jnp.int32)])
+    # static upper bound on padded length
+    n_pad = ((num_tokens + TILE_N - 1) // TILE_N) * TILE_N + e * TILE_N
+    t = jnp.arange(num_tokens, dtype=jnp.int32)
+    expert_of = jnp.searchsorted(jnp.cumsum(gs), t, side="right").astype(jnp.int32)
+    dest_idx = pad_off[expert_of] + (t - raw_off[expert_of])
+    tile_start = jnp.arange(n_pad // TILE_N, dtype=jnp.int32) * TILE_N
+    tile_expert = jnp.searchsorted(jnp.cumsum(padded), tile_start,
+                                   side="right").astype(jnp.int32)
+    tile_expert = jnp.minimum(tile_expert, e - 1)
+    return dest_idx, tile_expert, n_pad

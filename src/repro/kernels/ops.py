@@ -1,0 +1,100 @@
+"""Jit'd public wrappers around the Pallas kernels, with custom VJPs.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode; on TPU
+they compile natively. ``INTERPRET`` is derived from the default backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import moe_gemm as mg
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_ffn import fused_ffn as _ffn
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (ragged, sorted-by-expert)
+# ---------------------------------------------------------------------------
+
+
+def _grouped_matmul_fwd_impl(x_sorted, w, group_sizes):
+    n, d = x_sorted.shape
+    dest_idx, tile_expert, n_pad = mg.padded_layout(group_sizes, n)
+    x_pad = jnp.zeros((n_pad, d), x_sorted.dtype).at[dest_idx].set(x_sorted)
+    y_pad = mg.grouped_matmul_padded(x_pad, w, tile_expert, interpret=INTERPRET)
+    return jnp.take(y_pad, dest_idx, axis=0), (x_pad, dest_idx, tile_expert)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def grouped_matmul(x_sorted, w, group_sizes):
+    """x_sorted: (N, d) rows sorted by expert id; w: (E, d, F);
+    group_sizes: (E,) int32 summing to N. Returns (N, F)."""
+    y, _ = _grouped_matmul_fwd_impl(x_sorted, w, group_sizes)
+    return y
+
+
+def _gm_fwd(x_sorted, w, group_sizes):
+    y, (x_pad, dest_idx, tile_expert) = _grouped_matmul_fwd_impl(
+        x_sorted, w, group_sizes)
+    return y, (x_pad, dest_idx, tile_expert, w, group_sizes)
+
+
+def _gm_bwd(res, dy):
+    x_pad, dest_idx, tile_expert, w, group_sizes = res
+    n_pad, d = x_pad.shape
+    e, _, f = w.shape
+    dy_pad = jnp.zeros((n_pad, f), dy.dtype).at[dest_idx].set(dy)
+    # dx = dy @ w^T  (same grouped layout, transposed weights)
+    wt = jnp.swapaxes(w, 1, 2)  # (E, F, d)
+    dx_pad = mg.grouped_matmul_padded(dy_pad, wt, tile_expert,
+                                      interpret=INTERPRET)
+    dx = jnp.take(dx_pad, dest_idx, axis=0)
+    # dw[e] = x_e^T dy_e: per-tile outer products segment-summed by expert
+    n_tiles = n_pad // mg.TILE_N
+    xt = x_pad.reshape(n_tiles, mg.TILE_N, d)
+    dyt = dy_pad.reshape(n_tiles, mg.TILE_N, f)
+    per_tile = jnp.einsum("tnd,tnf->tdf", xt.astype(jnp.float32),
+                          dyt.astype(jnp.float32))
+    dw = jax.ops.segment_sum(per_tile, tile_expert, num_segments=e)
+    return dx, dw.astype(w.dtype), None
+
+
+grouped_matmul.defvjp(_gm_fwd, _gm_bwd)
+
+
+def grouped_ffn(x_sorted, wg, wu, wd, group_sizes, act: str = "silu"):
+    """Grouped expert FFN built from three grouped matmuls; elementwise glue
+    is fused by XLA around the kernels."""
+    from repro.models.layers import activation
+
+    f = activation(act)
+    h = f(grouped_matmul(x_sorted, wg, group_sizes)) * grouped_matmul(
+        x_sorted, wu, group_sizes)
+    return grouped_matmul(h, wd, group_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    return _flash(q, k, v, causal=causal, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# Fused dense FFN
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def fused_ffn(x, wg, wu, wd, act: str = "silu"):
+    shape = x.shape
+    y = _ffn(x.reshape(-1, shape[-1]), wg, wu, wd, act, interpret=INTERPRET)
+    return y.reshape(shape)

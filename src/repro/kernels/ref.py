@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x_sorted, w, group_sizes):
+    """x_sorted: (N, d) sorted by expert; w: (E, d, F); returns (N, F)."""
+    return jax.lax.ragged_dot(x_sorted, w, group_sizes.astype(jnp.int32))
+
+
+def grouped_ffn_ref(x_sorted, wg, wu, wd, group_sizes, act: str = "silu"):
+    from repro.models.layers import activation
+
+    f = activation(act)
+    gs = group_sizes.astype(jnp.int32)
+    h = f(jax.lax.ragged_dot(x_sorted, wg, gs)) * jax.lax.ragged_dot(x_sorted, wu, gs)
+    return jax.lax.ragged_dot(h, wd, gs)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd), fp32 softmax."""
+    B, S, H, hd = q.shape
+    scale = scale or 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None], logits, -2.0e38)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def fused_ffn_ref(x, wg, wu, wd, act: str = "silu"):
+    from repro.models.layers import activation
+
+    f = activation(act)
+    return (f(x @ wg) * (x @ wu)) @ wd

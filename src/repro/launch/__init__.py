@@ -1,0 +1,4 @@
+# Launchers: mesh.py (production meshes), steps.py (sharded step builders),
+# dryrun.py (512-chip lower+compile matrix), roofline.py (3-term analysis),
+# train.py / serve.py (CLI entry points).
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.

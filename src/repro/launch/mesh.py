@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips
+(TPU v5e pod). Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod'
+axis maps to the DCN dimension and carries only gradient all-reduce.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)};"
+            " the dry-run entrypoint sets xla_force_host_platform_device_count")
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_local_mesh(shape=None, axes=("data", "model")):
+    """Mesh over whatever devices exist (tests / CPU smoke)."""
+    devices = jax.devices()
+    if shape is None:
+        shape = (len(devices),) + (1,) * (len(axes) - 1)
+    n = int(np.prod(shape))
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)

@@ -1,0 +1,127 @@
+"""Step-function builders for the dry-run and launchers: jitted
+train / prefill / decode steps with explicit in/out shardings, plus their
+ShapeDtypeStruct argument pytrees (zero device allocation)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeConfig, input_specs
+from repro.models import build_model
+from repro.parallel import (
+    ParallelConfig, batch_pspecs, cache_pspecs_sized, param_pspecs)
+from repro.training.optimizer import OptimizerConfig, OptState, init_opt_state
+from repro.training.trainer import make_train_step
+
+
+def _shard(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _params_sds(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def build_train_step(cfg, shape: ShapeConfig, mesh: Mesh, pc: ParallelConfig,
+                     opt_cfg: OptimizerConfig = OptimizerConfig()):
+    """Returns (jitted_step, (params_sds, opt_sds, batch_sds))."""
+    model = build_model(cfg)
+    params_sds = _params_sds(model)
+    opt_sds = jax.eval_shape(init_opt_state, params_sds)
+    batch_sds = input_specs(cfg, shape)
+
+    pspec = param_pspecs(params_sds, pc)
+    opt_spec = OptState(step=P(), m=param_pspecs(params_sds, pc), v=param_pspecs(params_sds, pc))
+    bspec = batch_pspecs(batch_sds, pc)
+
+    step = make_train_step(model, opt_cfg, pc, grad_accum=1)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_shard(mesh, pspec), _shard(mesh, opt_spec),
+                      _shard(mesh, bspec)),
+        out_shardings=(_shard(mesh, pspec), _shard(mesh, opt_spec), None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (params_sds, opt_sds, batch_sds)
+
+
+def build_prefill_step(cfg, shape: ShapeConfig, mesh: Mesh,
+                       pc: ParallelConfig):
+    model = build_model(cfg)
+    params_sds = _params_sds(model)
+    batch_sds = input_specs(cfg, shape)
+    tp_size = mesh.shape[pc.tp_axis]
+
+    def prefill(params, batch):
+        return model.prefill(params, **batch, cache_max_len=shape.seq_len,
+                             moe_mode=pc.moe_mode, unroll=pc.scan_unroll,
+                             pc=pc)
+
+    pspec = param_pspecs(params_sds, pc)
+    bspec = batch_pspecs(batch_sds, pc)
+    out_sds = jax.eval_shape(prefill, params_sds, batch_sds)
+    logits_spec = P(pc.dp, None, pc.tp_axis)
+    cache_spec = cache_pspecs_sized(cfg, out_sds[1], pc, tp_size)
+
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(_shard(mesh, pspec), _shard(mesh, bspec)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       _shard(mesh, cache_spec)),
+    )
+    return jitted, (params_sds, batch_sds)
+
+
+def build_decode_step(cfg, shape: ShapeConfig, mesh: Mesh, pc: ParallelConfig):
+    """One-token decode against a seq_len-deep cache (the decode_* shapes)."""
+    model = build_model(cfg)
+    params_sds = _params_sds(model)
+    specs = input_specs(cfg, shape)
+    tokens_sds, cache_sds = specs["tokens"], specs["cache"]
+    tp_size = mesh.shape[pc.tp_axis]
+    import dataclasses as _dc
+
+    pc_decode = _dc.replace(pc, weight_gather=False)  # weights stay put
+    dp_size = 1
+    for a in pc.dp_axes:
+        dp_size *= mesh.shape[a]
+    # context parallelism when the batch can't shard over dp (long_500k B=1):
+    # replicate batch, shard the cache LENGTH dim over dp instead.
+    ctx_shard = shape.global_batch % dp_size != 0
+
+    def decode(params, tokens, cache):
+        return model.decode_step(params, tokens=tokens, cache=cache,
+                                 moe_mode=pc.moe_mode, unroll=pc.scan_unroll,
+                                 pc=pc_decode)
+
+    pspec = param_pspecs(params_sds, pc)
+    cache_spec = cache_pspecs_sized(cfg, cache_sds, pc, tp_size,
+                                    ctx_shard=ctx_shard)
+    b = None if ctx_shard else pc.dp
+    logits_spec = P(b, None, pc.tp_axis)
+    tok_spec = P(b, None)
+
+    jitted = jax.jit(
+        decode,
+        in_shardings=(_shard(mesh, pspec), NamedSharding(mesh, tok_spec),
+                      _shard(mesh, cache_spec)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       _shard(mesh, cache_spec)),
+        donate_argnums=(2,),
+    )
+    return jitted, (params_sds, tokens_sds, cache_sds)
+
+
+def build_step(cfg, shape: ShapeConfig, mesh: Mesh, pc: ParallelConfig):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, pc)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, pc)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, shape, mesh, pc)
+    raise ValueError(shape.kind)

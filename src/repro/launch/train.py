@@ -1,0 +1,57 @@
+"""Training launcher.
+
+CPU-scale end-to-end run (reduced config) or full-scale lowering:
+
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+      --steps 50 --reduced --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.parallel import ParallelConfig
+from repro.training import OptimizerConfig, TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-scale smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--moe-mode", default="ragged")
+    ap.add_argument("--heartbeat", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32")
+    model = build_model(cfg)
+    stream = TokenStream(cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    oc = OptimizerConfig(peak_lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                         total_steps=args.steps)
+    tc = TrainConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir, log_every=max(1, args.steps // 20),
+                     heartbeat_path=args.heartbeat)
+    pc = ParallelConfig(remat="none" if args.reduced else "full",
+                        moe_mode=args.moe_mode)
+    params, _, log = train(model, stream, oc, tc, pc)
+    for entry in log:
+        print(f"step {entry['step']:5d}  loss {entry['loss']:.4f}  "
+              f"ce {entry.get('ce', 0):.4f}  lr {entry.get('lr', 0):.2e}")
+    print(f"done; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

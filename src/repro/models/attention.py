@@ -1,0 +1,226 @@
+"""Grouped-query attention with full / sliding-window / bidirectional / cross
+variants, logit soft-capping, RoPE, and a ring-buffered KV cache for decode.
+
+Prefill & training use q-chunked (memory-efficient) attention: a
+``lax.scan`` over query chunks with a rematted chunk body, so neither the
+forward nor the backward pass ever materialises the full (S, S) logit matrix.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap
+
+NEG_INF = -2.0e38
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array  # (d, H*hd)
+    wk: jax.Array  # (d, K*hd)
+    wv: jax.Array  # (d, K*hd)
+    wo: jax.Array  # (H*hd, d)
+
+
+def init_attention(key, cfg) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(kq, (d, cfg.q_dim), dtype),
+        "wk": dense_init(kk, (d, cfg.kv_dim), dtype),
+        "wv": dense_init(kv, (d, cfg.kv_dim), dtype),
+        "wo": dense_init(ko, (cfg.q_dim, d), dtype),
+    }
+
+
+def _expand_kv(k, num_heads):
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head."""
+    B, S, K, hd = k.shape
+    rep = num_heads // K
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _attend(q, k, v, mask, scale, logit_cap):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,H,hd); mask: (B,Sq,Skv) or (Sq,Skv) bool."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = softcap(logits, logit_cap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    weights = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", weights, v)
+
+
+def _chunked_attend(q, k, v, mask_fn, q_positions, kv_positions, scale,
+                    logit_cap, chunk: int, unroll: bool = False):
+    """Scan over query chunks; chunk body is rematted so backward never holds
+    more than one chunk of logits."""
+    B, S, H, hd = q.shape
+
+    def body(_, args):
+        qc, qpos = args  # (B, C, H, hd), (B, C)
+        mask = mask_fn(qpos, kv_positions)  # (B, C, Skv)
+        out = _attend(qc, k, v, mask, scale, logit_cap)
+        return None, out
+
+    n_chunks = S // chunk
+    qs = q.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    _, outs = jax.lax.scan(jax.checkpoint(body, prevent_cse=unroll), None,
+                           (qs, ps), unroll=n_chunks if unroll else 1)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def make_mask_fn(kind: str, window: int = 0):
+    """Returns mask_fn(q_pos (B,Sq), kv_pos (B,Skv)) -> bool (B,Sq,Skv).
+
+    kv_pos entries of -1 mark unfilled cache slots.
+    """
+
+    def mask_fn(q_pos, kv_pos):
+        q = q_pos[:, :, None]
+        kv = kv_pos[:, None, :]
+        filled = kv >= 0
+        if kind == "causal":
+            m = (kv <= q) & filled
+        elif kind == "local":
+            m = (kv <= q) & (q - kv < window) & filled
+        elif kind == "full":  # bidirectional (encoder) / cross-attention
+            m = jnp.broadcast_to(filled, (q_pos.shape[0], q_pos.shape[1], kv_pos.shape[1]))
+        else:
+            raise ValueError(kind)
+        return m
+
+    return mask_fn
+
+
+def attention_forward(params, cfg, spec_mixer: str, x, positions,
+                      *, kv_override: Optional[jax.Array] = None,
+                      mask_kind: str = "causal",
+                      return_kv: bool = False,
+                      q_chunk: int = 1024):
+    """Training / prefill attention.
+
+    x: (B, S, d); positions: (B, S) absolute positions.
+    kv_override: encoder output for cross-attention (B, S_src, d).
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    local = spec_mixer == "attn_local"
+    if local:
+        mask_kind = "local"
+
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    kv_src = kv_override if kv_override is not None else x
+    Skv = kv_src.shape[1]
+    k = (kv_src @ params["wk"]).reshape(B, Skv, K, hd)
+    v = (kv_src @ params["wv"]).reshape(B, Skv, K, hd)
+
+    is_cross = kv_override is not None
+    if not is_cross:  # rope on self-attention only
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kv_positions = positions
+    else:
+        kv_positions = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+        mask_kind = "full"
+
+    k_exp, v_exp = _expand_kv(k, H), _expand_kv(v, H)
+    scale = cfg.attn_scale or 1.0 / (hd ** 0.5)
+    mask_fn = make_mask_fn(mask_kind, cfg.sliding_window)
+
+    from repro.models.flags import chunking
+
+    q_chunk, unroll_inner = chunking(S, q_chunk)
+    if S > q_chunk and S % q_chunk == 0:
+        out = _chunked_attend(q, k_exp, v_exp, mask_fn, positions, kv_positions,
+                              scale, cfg.attn_logit_softcap, q_chunk,
+                              unroll=unroll_inner)
+    else:
+        mask = mask_fn(positions, kv_positions)
+        out = _attend(q, k_exp, v_exp, mask, scale, cfg.attn_logit_softcap)
+
+    out = out.reshape(B, S, H * hd) @ params["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
+                     *, kv_override: Optional[jax.Array] = None):
+    """Single-token decode with ring-buffered KV cache.
+
+    x: (B, 1, d); pos: (B,) number of tokens already in cache.
+    cache_layer: {"k": (B, W, K, hd), "v": ..., "kv_pos": (B, W) int32}.
+    For cross-attention (kv_override=enc_out) the cache holds nothing; we
+    recompute k/v from enc_out (cheap relative to self-attn cache traffic;
+    a production enc-dec would cache these too — see serving engine, which
+    does exactly that at the engine level).
+    """
+    B, _, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = cfg.attn_scale or 1.0 / (hd ** 0.5)
+
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+
+    if kv_override is not None:
+        Skv = kv_override.shape[1]
+        k = (kv_override @ params["wk"]).reshape(B, Skv, K, hd)
+        v = (kv_override @ params["wv"]).reshape(B, Skv, K, hd)
+        kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+        mask = make_mask_fn("full")(pos[:, None], kv_pos)
+        out = _attend(q, _expand_kv(k, H), _expand_kv(v, H), mask, scale,
+                      cfg.attn_logit_softcap)
+        return (out.reshape(B, 1, H * hd) @ params["wo"]), cache_layer
+
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = (x @ params["wk"]).reshape(B, 1, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, K, hd)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    W = cache_layer["k"].shape[1]
+    slot = (pos % W).astype(jnp.int32)  # (B,)
+
+    def write(buf, new, slot_b):
+        return jax.lax.dynamic_update_slice(buf, new, (slot_b, 0, 0))
+
+    k_buf = jax.vmap(write)(cache_layer["k"], k_new[:, 0:1], slot)
+    v_buf = jax.vmap(write)(cache_layer["v"], v_new[:, 0:1], slot)
+    kv_pos = cache_layer["kv_pos"]
+    kv_pos = jax.vmap(lambda p, s, val: jax.lax.dynamic_update_slice(p, val, (s,)))(
+        kv_pos, slot, pos[:, None].astype(jnp.int32))
+
+    kind = "local" if spec_mixer == "attn_local" else "causal"
+    mask = make_mask_fn(kind, cfg.sliding_window)(pos[:, None], kv_pos)
+    out = _attend(q, _expand_kv(k_buf, H), _expand_kv(v_buf, H), mask, scale,
+                  cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, H * hd) @ params["wo"]
+    return out, {"k": k_buf, "v": v_buf, "kv_pos": kv_pos}
+
+
+def fill_cache_from_prefill(cfg, spec_mixer: str, k, v, positions, max_len: int):
+    """Build a decode cache layer from prefill k/v (B, S, K, hd)."""
+    B, S, K, hd = k.shape
+    W = cache_window(cfg, spec_mixer, max_len)
+    take = min(S, W)
+    k_tail, v_tail = k[:, S - take:], v[:, S - take:]
+    pos_tail = positions[:, S - take:]
+    k_buf = jnp.zeros((B, W, K, hd), k.dtype)
+    v_buf = jnp.zeros((B, W, K, hd), v.dtype)
+    kv_pos = jnp.full((B, W), -1, jnp.int32)
+    slots = pos_tail % W  # (B, take)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], slots.shape)
+    k_buf = k_buf.at[bidx, slots].set(k_tail)
+    v_buf = v_buf.at[bidx, slots].set(v_tail)
+    kv_pos = kv_pos.at[bidx, slots].set(pos_tail)
+    return {"k": k_buf, "v": v_buf, "kv_pos": kv_pos}
+
+
+def cache_window(cfg, spec_mixer: str, max_len: int) -> int:
+    if spec_mixer == "attn_local" and cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len

@@ -1,0 +1,22 @@
+"""Dense gated FFN (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, dense_init
+
+
+def init_ffn(key, d: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    dtype = jnp.dtype(dtype)
+    return {
+        "wg": dense_init(kg, (d, d_ff), dtype),
+        "wu": dense_init(ku, (d, d_ff), dtype),
+        "wd": dense_init(kd, (d_ff, d), dtype),
+    }
+
+
+def ffn_forward(params, x, act: str = "silu"):
+    f = activation(act)
+    return (f(x @ params["wg"]) * (x @ params["wu"])) @ params["wd"]

@@ -1,0 +1,42 @@
+"""Trace-time mode flags.
+
+``cost_accurate_mode``: XLA's HloCostAnalysis counts a while-loop body ONCE
+regardless of trip count, so a rolled ``lax.scan`` under-reports FLOPs,
+bytes, and collective traffic by the trip count. The dry-run therefore
+compiles each cell twice:
+
+  * rolled (production artifact)  -> memory_analysis (structurally accurate:
+    buffers are explicitly reused across iterations)
+  * cost-accurate (this flag on)  -> cost_analysis + collective parse: every
+    scan (outer block scan AND inner chunk scans — attention q-chunks,
+    chunked CE, mamba/mLSTM chunk scans) runs with 4 unrolled mega-chunks so
+    each op is materialised in the HLO exactly as many times as it executes.
+
+Flag is read at trace time; never enabled during real execution.
+"""
+from __future__ import annotations
+
+import contextlib
+
+COST_ACCURATE = False
+_INNER_CHUNKS = 4
+
+
+@contextlib.contextmanager
+def cost_accurate_mode(on: bool = True):
+    global COST_ACCURATE
+    old = COST_ACCURATE
+    COST_ACCURATE = on
+    try:
+        yield
+    finally:
+        COST_ACCURATE = old
+
+
+def chunking(seq_len: int, default_chunk: int):
+    """(chunk_size, unroll) for an inner sequence-chunk scan."""
+    if COST_ACCURATE:
+        if seq_len % _INNER_CHUNKS == 0 and seq_len >= _INNER_CHUNKS:
+            return seq_len // _INNER_CHUNKS, True
+        return seq_len, True
+    return default_chunk, False

@@ -1,0 +1,97 @@
+"""Decode-time cache construction: zeros + specs (via eval_shape, no alloc).
+
+Cache layout mirrors the scanned block structure:
+  {"pos": (B,) int32,
+   "prefix": (per prefix layer dict,),
+   "blocks": (per pattern-position dict, leaves stacked over n_blocks)}
+Attention layers use a ring buffer of length ``cache_window`` (= sliding
+window for local layers); recurrent mixers carry O(1) state.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import cache_window
+
+
+def _layer_cache(cfg, spec, batch, max_len, dtype):
+    B = batch
+    mixer = spec.mixer
+    if mixer in ("attn", "attn_local", "attn_global"):
+        W = cache_window(cfg, mixer, max_len)
+        c = {
+            "k": jnp.zeros((B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "kv_pos": jnp.full((B, W), -1, jnp.int32),
+        }
+        if cfg.family == "encdec":
+            c["ck"] = jnp.zeros((B, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+            c["cv"] = jnp.zeros((B, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+            c["c_len"] = jnp.zeros((B,), jnp.int32)  # valid encoder length
+        return c
+    if mixer == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((B, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((B, max_len, m.qk_rope_head_dim), dtype),
+            "kv_pos": jnp.full((B, max_len), -1, jnp.int32),
+        }
+    if mixer == "mamba":
+        mc = cfg.mamba
+        d_in = mc.expand * cfg.d_model
+        return {
+            "ssm": jnp.zeros((B, d_in, mc.d_state), jnp.float32),
+            "conv": jnp.zeros((B, mc.d_conv - 1, d_in), dtype),
+        }
+    if mixer == "mlstm":
+        xc = cfg.xlstm
+        d_in = int(xc.mlstm_proj_factor * cfg.d_model)
+        dk = d_in // xc.num_heads
+        return {
+            "C": jnp.zeros((B, xc.num_heads, dk, dk), jnp.float32),
+            "n": jnp.zeros((B, xc.num_heads, dk), jnp.float32),
+            "m": jnp.zeros((B, xc.num_heads), jnp.float32),
+            "conv": jnp.zeros((B, xc.conv1d_kernel - 1, d_in), dtype),
+        }
+    if mixer == "slstm":
+        d = cfg.d_model
+        return {
+            "c": jnp.zeros((B, d), jnp.float32),
+            "n": jnp.zeros((B, d), jnp.float32),
+            "h": jnp.zeros((B, d), jnp.float32),
+            "m": jnp.full((B, d), -1.0e30, jnp.float32),  # matches slstm_forward init
+        }
+    raise ValueError(mixer)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    prefix_spec = cfg.pattern[0]
+    prefix = tuple(
+        _layer_cache(cfg, type(prefix_spec)(mixer=prefix_spec.mixer, ffn="dense"),
+                     batch, max_len, dtype)
+        for _ in range(cfg.first_dense_layers)
+    )
+
+    def stack(fn, n):
+        leaves = [fn() for _ in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    blocks = tuple(
+        stack(partial(_layer_cache, cfg, spec, batch, max_len, dtype),
+              cfg.num_blocks)
+        for spec in cfg.pattern
+    )
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "prefix": prefix,
+        "blocks": blocks,
+    }
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the cache — zero allocation."""
+    return jax.eval_shape(
+        partial(init_cache, cfg, batch, max_len, dtype))

@@ -1,0 +1,151 @@
+"""Mamba-1 selective SSM block (Jamba-style), TPU-adapted.
+
+Hardware adaptation (DESIGN.md §3): the CUDA reference fuses the selective
+scan in SM shared memory. On TPU we use a *chunked* parallel scan: a
+``lax.scan`` over chunks of length ``CHUNK`` carrying the (B, d_in, d_state)
+SSM state, with a ``lax.associative_scan`` inside each chunk. The transient
+(B, CHUNK, d_in, N) tensor is what a Pallas fusion would keep in VMEM; chunk
+size is chosen so it stays ~tens of MB per device under TP sharding of d_in.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+CHUNK = 128
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg) -> dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    # S4-style A initialisation: -[1..N] per channel
+    a = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None], (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (mc.d_conv, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dtr + 2 * mc.d_state), dtype),
+        "dt_proj_w": dense_init(ks[3], (dtr, d_in), dtype),
+        "dt_proj_b": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, d), dtype),
+    }
+
+
+def _ssm_scan_chunked(u, dt, Bmat, Cmat, A, h0):
+    """Selective scan. u,dt: (B,S,d_in); Bmat,Cmat: (B,S,N); A: (d_in,N).
+
+    Returns y (B,S,d_in) and final state (B,d_in,N).
+    """
+    from repro.models.flags import chunking
+
+    Bb, S, d_in = u.shape
+    N = A.shape[1]
+    chunk, unroll_inner = chunking(S, CHUNK)
+    n_chunks = max(1, S // chunk)
+    c = S // n_chunks
+
+    def chunk_body(h, args):
+        uc, dtc, bc, cc = args  # (B,c,d_in), (B,c,d_in), (B,c,N), (B,c,N)
+        dA = jnp.exp(dtc[..., None] * (-jnp.exp(A))[None, None])  # (B,c,d_in,N)
+        dBu = (dtc * uc)[..., None] * bc[:, :, None, :]            # (B,c,d_in,N)
+
+        def combine(a, b):
+            (ga, xa), (gb, xb) = a, b
+            return ga * gb, xa * gb + xb
+
+        gates, states = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        states = states + gates * h[:, None]  # fold in carry state
+        y = jnp.einsum("bcdn,bcn->bcd", states, cc)
+        return states[:, -1], y
+
+    u_c = u.reshape(Bb, n_chunks, c, d_in).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(Bb, n_chunks, c, d_in).transpose(1, 0, 2, 3)
+    b_c = Bmat.reshape(Bb, n_chunks, c, N).transpose(1, 0, 2, 3)
+    c_c = Cmat.reshape(Bb, n_chunks, c, N).transpose(1, 0, 2, 3)
+    h_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_body, prevent_cse=unroll_inner), h0,
+        (u_c, dt_c, b_c, c_c), unroll=n_chunks if unroll_inner else 1)
+    y = ys.transpose(1, 0, 2, 3).reshape(Bb, S, d_in)
+    return y, h_last
+
+
+def mamba_forward(params, cfg, x, *, return_state: bool = False):
+    """x: (B, S, d). Causal conv + selective SSM + gate."""
+    mc = cfg.mamba
+    B, S, d = x.shape
+    d_in = mc.expand * d
+    dtr = _dt_rank(cfg)
+
+    xz = x @ params["in_proj"]
+    u, z = xz[..., :d_in], xz[..., d_in:]
+
+    # causal depthwise conv along seq
+    pad = mc.d_conv - 1
+    u_pad = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    windows = jnp.stack([u_pad[:, i:i + S] for i in range(mc.d_conv)], axis=-1)
+    u = jnp.einsum("bsdk,kd->bsd", windows, params["conv_w"]) + params["conv_b"]
+    u = jax.nn.silu(u)
+
+    proj = u @ params["x_proj"]  # (B,S,dtr+2N)
+    dt = jax.nn.softplus(
+        proj[..., :dtr] @ params["dt_proj_w"] + params["dt_proj_b"]).astype(jnp.float32)
+    Bmat = proj[..., dtr:dtr + mc.d_state].astype(jnp.float32)
+    Cmat = proj[..., dtr + mc.d_state:].astype(jnp.float32)
+
+    h0 = jnp.zeros((B, d_in, mc.d_state), jnp.float32)
+    y, h_last = _ssm_scan_chunked(u.astype(jnp.float32), dt, Bmat, Cmat,
+                                  params["A_log"], h0)
+    y = y + u.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        # last (d_conv-1) raw pre-conv inputs, for streaming decode
+        conv_state = (u_pad[:, S:S + pad] if pad
+                      else jnp.zeros((B, 0, d_in), x.dtype))
+        return out, {"ssm": h_last, "conv": conv_state}
+    return out, None
+
+
+def mamba_decode(params, cfg, x, cache_layer):
+    """Single-step decode. x: (B, 1, d).
+
+    cache_layer: {"ssm": (B, d_in, N) fp32, "conv": (B, d_conv-1, d_in)}.
+    """
+    mc = cfg.mamba
+    B = x.shape[0]
+    d_in = mc.expand * cfg.d_model
+    dtr = _dt_rank(cfg)
+
+    xz = x[:, 0] @ params["in_proj"]  # (B, 2*d_in)
+    u_new, z = xz[:, :d_in], xz[:, d_in:]
+
+    conv_buf = jnp.concatenate([cache_layer["conv"], u_new[:, None]], axis=1)
+    u = jnp.einsum("bkd,kd->bd", conv_buf, params["conv_w"]) + params["conv_b"]
+    u = jax.nn.silu(u)
+    new_conv = conv_buf[:, 1:]
+
+    proj = u @ params["x_proj"]
+    dt = jax.nn.softplus(
+        proj[:, :dtr] @ params["dt_proj_w"] + params["dt_proj_b"]).astype(jnp.float32)
+    Bmat = proj[:, dtr:dtr + mc.d_state].astype(jnp.float32)
+    Cmat = proj[:, dtr + mc.d_state:].astype(jnp.float32)
+
+    uf = u.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * (-jnp.exp(params["A_log"]))[None])  # (B,d_in,N)
+    h = cache_layer["ssm"] * dA + (dt * uf)[..., None] * Bmat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cmat) + uf * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"ssm": h, "conv": new_conv}

@@ -1,0 +1,149 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Training / prefill use the expanded form. Decode uses the *absorbed* form:
+queries are projected into the kv_lora latent space so attention runs
+directly against the compressed cache (kv_lora + rope dims per token), which
+is the memory-saving mechanism that makes a 500-token-wide 128-head model
+decodable — the cache is (B, L, 576) instead of (B, L, 128, 256).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, init_rms_norm, rms_norm
+
+NEG_INF = -2.0e38
+
+
+def init_mla(key, cfg) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 7)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, H * m.qk_head_dim), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "w_kr": dense_init(ks[3], (d, m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, H * m.v_head_dim), dtype),
+        "w_o": dense_init(ks[6], (H * m.v_head_dim, d), dtype),
+        "q_norm": init_rms_norm(m.q_lora_rank),
+        "kv_norm": init_rms_norm(m.kv_lora_rank),
+    }
+
+
+def _queries(params, cfg, x, positions):
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    c_q = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+    q = (c_q @ params["w_uq"]).reshape(B, S, H, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compressed_kv(params, cfg, x, positions):
+    m = cfg.mla
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    k_rope = (x @ params["w_kr"])[:, :, None, :]  # shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(params, cfg, x, positions, *, q_chunk: int = 1024,
+                return_kv: bool = False):
+    """Expanded-form MLA for train/prefill. x: (B,S,d)."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _compressed_kv(params, cfg, x, positions)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    scale = 1.0 / (m.qk_head_dim ** 0.5)
+
+    # k_rope is a single shared head on the K side, per-head on the Q side;
+    # the s_rope einsum broadcasts it across heads.
+    def chunk_body_full(_, args):
+        qn, qr, qpos = args  # (B,C,H,dn), (B,C,H,dr), (B,C)
+        s_nope = jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope)
+        s_rope = jnp.einsum("bqhd,bkd->bhqk", qr, k_rope)
+        logits = (s_nope + s_rope).astype(jnp.float32) * scale
+        mask = (qpos[:, :, None] >= positions[:, None, :])[:, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+    from repro.models.flags import chunking
+
+    q_chunk, unroll_inner = chunking(S, q_chunk)
+    if S > q_chunk and S % q_chunk == 0:
+        n = S // q_chunk
+        qn = q_nope.reshape(B, n, q_chunk, H, -1).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, n, q_chunk, H, -1).transpose(1, 0, 2, 3, 4)
+        ps = positions.reshape(B, n, q_chunk).transpose(1, 0, 2)
+        _, outs = jax.lax.scan(
+            jax.checkpoint(chunk_body_full, prevent_cse=unroll_inner), None,
+            (qn, qr, ps), unroll=n if unroll_inner else 1)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, m.v_head_dim)
+    else:
+        _, out = chunk_body_full(None, (q_nope, q_rope, positions))
+
+    out = out.reshape(B, S, H * m.v_head_dim) @ params["w_o"]
+    if return_kv:
+        return out, (c_kv, k_rope)
+    return out, None
+
+
+def mla_decode(params, cfg, x, pos, cache_layer):
+    """Absorbed-form decode against the compressed cache.
+
+    cache_layer: {"c_kv": (B, L, kv_lora), "k_rope": (B, L, rope),
+                  "kv_pos": (B, L)}.
+    """
+    m, H = cfg.mla, cfg.num_heads
+    B = x.shape[0]
+    q_nope, q_rope = _queries(params, cfg, x, pos[:, None])  # (B,1,H,*)
+    c_kv_new, k_rope_new = _compressed_kv(params, cfg, x, pos[:, None])
+
+    L = cache_layer["c_kv"].shape[1]
+    slot = (pos % L).astype(jnp.int32)
+    upd2 = jax.vmap(lambda b, n, s: jax.lax.dynamic_update_slice(b, n, (s, 0)))
+    c_kv = upd2(cache_layer["c_kv"], c_kv_new, slot)
+    k_rope = upd2(cache_layer["k_rope"], k_rope_new, slot)
+    kv_pos = jax.vmap(lambda p, s, val: jax.lax.dynamic_update_slice(p, val, (s,)))(
+        cache_layer["kv_pos"], slot, pos[:, None].astype(jnp.int32))
+
+    # absorb W_uk into the query: q_lat (B,H,kv_lora)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk)
+    scale = 1.0 / (m.qk_head_dim ** 0.5)
+
+    s_nope = jnp.einsum("bhl,btl->bht", q_lat, c_kv)
+    s_rope = jnp.einsum("bhd,btd->bht", q_rope[:, 0], k_rope)
+    logits = (s_nope + s_rope).astype(jnp.float32) * scale
+    mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+
+    o_lat = jnp.einsum("bht,btl->bhl", w, c_kv)  # (B,H,kv_lora)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhl,lhd->bhd", o_lat, w_uv).reshape(B, 1, H * m.v_head_dim)
+    out = o @ params["w_o"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "kv_pos": kv_pos}
+
+
+def mla_fill_cache_from_prefill(cfg, c_kv, k_rope, positions, max_len: int):
+    B, S, _ = c_kv.shape
+    take = min(S, max_len)
+    buf_c = jnp.zeros((B, max_len, cfg.mla.kv_lora_rank), c_kv.dtype)
+    buf_r = jnp.zeros((B, max_len, cfg.mla.qk_rope_head_dim), k_rope.dtype)
+    kv_pos = jnp.full((B, max_len), -1, jnp.int32)
+    pos_tail = positions[:, S - take:]
+    slots = pos_tail % max_len
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], slots.shape)
+    buf_c = buf_c.at[bidx, slots].set(c_kv[:, S - take:])
+    buf_r = buf_r.at[bidx, slots].set(k_rope[:, S - take:])
+    kv_pos = kv_pos.at[bidx, slots].set(pos_tail)
+    return {"c_kv": buf_c, "k_rope": buf_r, "kv_pos": kv_pos}

@@ -1,0 +1,288 @@
+"""Sparse Mixture-of-Experts layer.
+
+Three compute paths, selectable per call:
+
+``dense``   — every expert on every token (exact, simple). Used by tiny smoke
+              tests and by HC-SMoE *calibration*, which needs E_j(x) for ALL
+              experts per Eq. (4) of the paper.
+``ragged``  — dropless sort-gather path: top-k -> stable sort by expert id ->
+              gather -> ``jax.lax.ragged_dot`` grouped GEMM -> weighted
+              scatter-add. Differentiable end-to-end; the production default
+              under pjit. This is the TPU-native adaptation of the paper's
+              HF per-expert loop (DESIGN.md §3).
+``pallas``  — same dispatch as ``ragged`` but the grouped GEMMs run through
+              the Pallas kernel in ``repro.kernels`` (TPU target; CPU tests
+              run it in interpret mode).
+
+Expert *merging* is represented by a ``group_map: (E,) int32`` in the layer
+state mapping original expert ids to merged expert slots (< num_merged). The
+router is untouched (paper Fig. 3): routing runs over the original E logits
+and the chosen ids are remapped through ``group_map`` before dispatch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ffn import ffn_forward, init_ffn
+from repro.models.layers import activation, dense_init
+
+
+class MoEStats(NamedTuple):
+    """Calibration statistics accumulated per MoE layer (paper Alg. 1)."""
+
+    out_sum: jax.Array       # (E, d)   sum over tokens of E_j(x)
+    token_count: jax.Array   # ()       number of tokens seen
+    freq: jax.Array          # (E,)     top-k selection counts
+    logits_sample: jax.Array  # (T_sub, E) router logits on first T_sub tokens
+    act_sample: jax.Array    # (E, T_sub_act, f) intermediate activations
+    x_sample: jax.Array      # (T_sub, d) layer inputs (for O-prune & quality)
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d, dtype = cfg.d_model, jnp.dtype(cfg.dtype)
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(k_r, (d, m.num_experts), dtype=jnp.float32),
+        # additive logit mask; pruning baselines set -1e9 on removed experts
+        "router_mask": jnp.zeros((m.num_experts,), jnp.float32),
+        "wg": dense_init(k_g, (m.num_experts, d, m.expert_ffn_dim), dtype, in_axis=1),
+        "wu": dense_init(k_u, (m.num_experts, d, m.expert_ffn_dim), dtype, in_axis=1),
+        "wd": dense_init(k_d, (m.num_experts, m.expert_ffn_dim, d), dtype, in_axis=1),
+    }
+    if m.num_shared_experts:
+        params["shared"] = init_ffn(
+            k_s, d, m.num_shared_experts * m.shared_expert_ffn_dim, dtype)
+    return params
+
+
+def identity_group_map(num_experts: int) -> jax.Array:
+    return jnp.arange(num_experts, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def router_probs(logits, cfg):
+    """Returns (topk_probs (T,k), topk_idx (T,k)). logits: (T, E) fp32."""
+    m = cfg.moe
+    if m.router_mode == "softmax_topk":
+        top_logits, top_idx = jax.lax.top_k(logits, m.top_k)
+        probs = jax.nn.softmax(top_logits, axis=-1)
+    elif m.router_mode == "softmax_all":
+        full = jax.nn.softmax(logits, axis=-1)
+        probs, top_idx = jax.lax.top_k(full, m.top_k)
+        probs = probs * m.routed_scaling_factor
+    else:
+        raise ValueError(m.router_mode)
+    return probs, top_idx
+
+
+def load_balancing_loss(logits, top_idx, num_experts: int):
+    """Switch-Transformer aux loss + router z-loss."""
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    density = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(top_idx, num_experts, dtype=jnp.float32)
+    usage = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+    lb = num_experts * jnp.sum(density * usage)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return lb, z
+
+
+# ---------------------------------------------------------------------------
+# Expert compute paths
+# ---------------------------------------------------------------------------
+
+
+def _dense_expert_outputs(params, x, act: str):
+    """All-experts output: x (T, d) -> (T, E, d)."""
+    f = activation(act)
+    h = f(jnp.einsum("td,edf->tef", x, params["wg"])) * jnp.einsum(
+        "td,edf->tef", x, params["wu"])
+    return jnp.einsum("tef,efd->ted", h, params["wd"])
+
+
+def _ragged_expert_ffn(x_sorted, params, group_sizes, act: str, use_pallas: bool):
+    """Grouped GEMM over contiguous expert segments. x_sorted: (N, d)."""
+    f = activation(act)
+    if use_pallas:
+        from repro.kernels.ops import grouped_ffn
+        return grouped_ffn(x_sorted, params["wg"], params["wu"], params["wd"],
+                           group_sizes, act)
+    h = f(jax.lax.ragged_dot(x_sorted, params["wg"], group_sizes)) * \
+        jax.lax.ragged_dot(x_sorted, params["wu"], group_sizes)
+    return jax.lax.ragged_dot(h, params["wd"], group_sizes)
+
+
+def _capacity_dispatch(x, probs, dispatch_idx, n_slots: int,
+                       capacity_factor: float):
+    """GShard/Switch capacity dispatch, ROW-WISE and GATHER-ONLY.
+
+    Each batch row builds its own (E, C, d) expert batch so the batch dim
+    stays dp-sharded end-to-end, and the dispatch/combine are expressed
+    purely with batched gathers + an inverse permutation (no scatters: GSPMD
+    partitions batched gathers cleanly but replicates batched scatters —
+    the scatter variant cost 2 TB/device of all-gathers on the mixtral
+    dry-run).
+
+    x: (B, S, d); probs/dispatch_idx: (B, S, k). Tokens beyond an expert's
+    per-row capacity C = ceil(S*k/E * capacity_factor) are dropped
+    (weight-0 combine) — the standard TPU MoE trade-off. No (E, N, d) mask
+    tensor is ever built (the XLA ragged path materialised 19 TB of masks
+    at DeepSeek scale).
+    """
+    B, S, k = dispatch_idx.shape
+    m = S * k
+    d = x.shape[-1]
+    flat_idx = dispatch_idx.reshape(B, m)
+    flat_probs = probs.reshape(B, m)
+    cap = int(max(1, -(-m // n_slots) * capacity_factor))
+
+    order = jnp.argsort(flat_idx, axis=1, stable=True)  # (B, m)
+    sorted_idx = jnp.take_along_axis(flat_idx, order, axis=1)
+    # per-row segment boundaries
+    eids = jnp.arange(n_slots, dtype=sorted_idx.dtype)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, eids, side="left"))(
+        sorted_idx)  # (B, E)
+    ends = jax.vmap(lambda row: jnp.searchsorted(row, eids, side="right"))(
+        sorted_idx)
+
+    # slot (e, c) <- sorted position starts[e] + c (valid while < ends[e])
+    slot_pos = starts[:, :, None] + jnp.arange(cap, dtype=jnp.int32)[None, None]
+    slot_valid = slot_pos < ends[:, :, None]  # (B, E, C)
+    slot_pos = jnp.minimum(slot_pos, m - 1).reshape(B, n_slots * cap)
+    slot_src = jnp.take_along_axis(order, slot_pos, axis=1) // k  # token pos
+    x_exp = jnp.take_along_axis(x, slot_src[..., None], axis=1)
+    x_exp = jnp.where(slot_valid.reshape(B, n_slots * cap)[..., None], x_exp,
+                      0).reshape(B, n_slots, cap, d)
+
+    # combine-side indices: sorted position -> its slot (or sentinel)
+    pos_in_expert = (jnp.arange(m, dtype=jnp.int32)[None]
+                     - jnp.take_along_axis(starts, sorted_idx, axis=1))
+    keep = pos_in_expert < cap
+    dest = jnp.where(keep, sorted_idx * cap + pos_in_expert, n_slots * cap)
+    inv_order = jnp.argsort(order, axis=1)  # unsort permutation
+    probs_sorted = jnp.take_along_axis(flat_probs, order, axis=1)
+    return x_exp, (dest, inv_order, probs_sorted, keep, cap, k)
+
+
+def _capacity_combine(y_exp, combine_info, S: int, d: int):
+    dest, inv_order, probs_sorted, keep, cap, k = combine_info
+    B, n_slots = y_exp.shape[0], y_exp.shape[1]
+    y_flat = jnp.concatenate(
+        [y_exp.reshape(B, n_slots * cap, d),
+         jnp.zeros((B, 1, d), y_exp.dtype)], axis=1)
+    ys = jnp.take_along_axis(
+        y_flat, jnp.minimum(dest, n_slots * cap)[..., None], axis=1)
+    w = jnp.where(keep, probs_sorted, 0.0)[..., None].astype(ys.dtype)
+    ys = ys * w  # (B, m, d) in sorted order
+    # unsort back to (token, k) order, then reduce over k — gather-only
+    ys = jnp.take_along_axis(ys, inv_order[..., None], axis=1)
+    return ys.reshape(B, S, k, d).sum(axis=2)
+
+
+def _capacity_expert_ffn(x_exp, params, act: str):
+    """Batched per-expert FFN: (B,E,C,d) x (E,d,f) einsums — MXU-native."""
+    f = activation(act)
+    h = f(jnp.einsum("becd,edf->becf", x_exp, params["wg"])) * jnp.einsum(
+        "becd,edf->becf", x_exp, params["wu"])
+    return jnp.einsum("becf,efd->becd", h, params["wd"])
+
+
+def moe_forward(params, cfg, x, *, group_map: Optional[jax.Array] = None,
+                num_groups: Optional[int] = None, mode: str = "ragged",
+                capture_stats: bool = False, t_sub: int = 256,
+                act_sub: int = 64, capacity_factor: float = 1.25,
+                act_shard=None):
+    """x: (B, S, d) -> (out (B, S, d), aux dict).
+
+    group_map/num_groups implement merged-expert serving: after HC-SMoE the
+    stacked expert weights have ``num_groups`` live entries (padded back to E
+    slots or resized) and routing ids are remapped through ``group_map``.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ params["router"]  # (T, E)
+    if "router_mask" in params:
+        logits = logits + params["router_mask"]
+    probs, top_idx = router_probs(logits, cfg)
+    lb_loss, z_loss = load_balancing_loss(logits, top_idx, m.num_experts)
+
+    if group_map is not None:
+        dispatch_idx = jnp.take(group_map, top_idx)  # remap to merged slots
+        n_slots = num_groups if num_groups is not None else params["wg"].shape[0]
+    else:
+        dispatch_idx = top_idx
+        n_slots = params["wg"].shape[0]
+
+    if mode == "dense":
+        all_out = _dense_expert_outputs(params, xt, cfg.act)  # (T, E', d)
+        one_hot = jax.nn.one_hot(dispatch_idx, n_slots, dtype=probs.dtype)
+        combine = jnp.einsum("tk,tke->te", probs, one_hot)  # (T, E')
+        out = jnp.einsum("te,ted->td", combine.astype(all_out.dtype), all_out)
+    elif mode == "capacity":
+        x_exp, info = _capacity_dispatch(
+            x, probs.reshape(B, S, m.top_k),
+            dispatch_idx.reshape(B, S, m.top_k), n_slots,
+            capacity_factor=capacity_factor)
+        if act_shard is not None:
+            # batch (row) dim stays dp-sharded through the expert batches;
+            # without the constraint GSPMD replicated the expert compute on
+            # every data shard (16x model FLOPs per chip, measured). With
+            # EP the expert dim also shards over tp.
+            from jax.sharding import PartitionSpec as _P
+
+            b_ax, e_ax = (act_shard if isinstance(act_shard, tuple)
+                          else (act_shard, None))
+            x_exp = jax.lax.with_sharding_constraint(
+                x_exp, _P(b_ax, e_ax, None, None))
+        y_exp = _capacity_expert_ffn(x_exp, params, cfg.act)
+        if act_shard is not None:
+            y_exp = jax.lax.with_sharding_constraint(
+                y_exp, _P(b_ax, e_ax, None, None))
+        out = _capacity_combine(y_exp, info, S, d).reshape(T, d)
+    elif mode in ("ragged", "pallas"):
+        k = m.top_k
+        flat_idx = dispatch_idx.reshape(T * k)
+        flat_probs = probs.reshape(T * k)
+        order = jnp.argsort(flat_idx, stable=True)
+        inv_token = order // k  # source token of each sorted slot
+        xs = jnp.take(xt, inv_token, axis=0)  # (T*k, d)
+        group_sizes = jnp.bincount(flat_idx, length=n_slots).astype(jnp.int32)
+        ys = _ragged_expert_ffn(xs, params, group_sizes, cfg.act,
+                                use_pallas=(mode == "pallas"))
+        ys = ys * jnp.take(flat_probs, order)[:, None].astype(ys.dtype)
+        out = jnp.zeros((T, d), ys.dtype).at[inv_token].add(ys)
+    else:
+        raise ValueError(mode)
+
+    if m.num_shared_experts:
+        out = out + ffn_forward(params["shared"], xt, cfg.act)
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss}
+    if capture_stats:
+        all_out = (_dense_expert_outputs(params, xt, cfg.act)
+                   if mode != "dense" else all_out)  # (T, E, d) original slots?
+        # stats are always over the ORIGINAL expert set (pre-merge)
+        f = activation(cfg.act)
+        h_act = f(jnp.einsum("td,edf->tef", xt[:act_sub], params["wg"])) * \
+            jnp.einsum("td,edf->tef", xt[:act_sub], params["wu"])  # (t, E, f)
+        one_hot_freq = jax.nn.one_hot(top_idx, m.num_experts, dtype=jnp.float32)
+        aux["stats"] = MoEStats(
+            out_sum=jnp.sum(all_out.astype(jnp.float32), axis=0),
+            token_count=jnp.asarray(T, jnp.float32),
+            freq=jnp.sum(one_hot_freq, axis=(0, 1)),
+            logits_sample=logits[:t_sub],
+            act_sample=jnp.transpose(h_act, (1, 0, 2)).astype(jnp.float32),
+            x_sample=xt[:t_sub].astype(jnp.float32),
+        )
+
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,251 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, exponential gating, per-head recurrent connections).
+
+arXiv:2405.04517. TPU adaptation: the official CUDA kernels stream the
+recurrence through registers; here the mLSTM uses the stabilized *chunkwise*
+parallel form (flash-linear-attention style) — a ``lax.scan`` over chunks
+carrying (C, n, m) with dense intra-chunk einsums that map onto the MXU —
+and the sLSTM (a true nonlinear recurrence, not chunkable) uses a per-step
+``lax.scan``, which is the honest TPU cost of that block type.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+NEG = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg) -> dict:
+    xc = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(xc.mlstm_proj_factor * d)
+    ks = jax.random.split(key, 7)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "up": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (xc.conv1d_kernel, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], (d_in, d_in), dtype),
+        "wk": dense_init(ks[3], (d_in, d_in), dtype),
+        "wv": dense_init(ks[4], (d_in, d_in), dtype),
+        "w_gates": dense_init(ks[5], (d_in, 2 * xc.num_heads), dtype=jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((xc.num_heads,)),
+                                    jnp.full((xc.num_heads,), 3.0)]),  # f-bias>0
+        "out_norm": jnp.zeros((d_in,), jnp.float32),
+        "down": dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _mlstm_chunk(carry, args, scale):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    carry: C (B,H,dk,dk) f32, n (B,H,dk) f32, m (B,H) f32
+    args:  q,k,v (B,c,H,dk), logi/logf (B,c,H) f32
+    """
+    C, n, m = carry
+    q, k, v, logi, logf = args
+    B, c, H, dk = q.shape
+    qf = q.astype(jnp.float32) * scale
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    b = jnp.cumsum(logf, axis=1)  # (B,c,H) inclusive log-decay
+    a = b + m[:, None, :]  # carry path log-scale per position
+    # intra-chunk log weights l[t, j] = b_t - b_j + logi_j  (j <= t)
+    l = b[:, :, None, :] - b[:, None, :, :] + logi[:, None, :, :]  # (B,t,j,H)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    l = jnp.where(causal[None, :, :, None], l, NEG)
+    m_t = jnp.maximum(a, jnp.max(l, axis=2))  # (B,c,H)
+    w = jnp.exp(l - m_t[:, :, None, :])  # (B,t,j,H)
+    carry_scale = jnp.exp(a - m_t)  # (B,c,H)
+
+    scores = jnp.einsum("bthd,bjhd->btjh", qf, kf) * w
+    num = (jnp.einsum("btjh,bjhd->bthd", scores, vf)
+           + carry_scale[..., None] * jnp.einsum("bthd,bhde->bthe", qf, C))
+    n_t = (jnp.einsum("btjh,bjhd->bthd", w, kf)
+           + carry_scale[..., None] * n[:, None])
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", qf, n_t)),
+                        jnp.exp(-m_t))
+    h = num / denom[..., None]  # (B,c,H,dk)
+
+    # end-of-chunk state
+    b_end = b[:, -1:, :]  # (B,1,H)
+    m_new = jnp.maximum(b_end[:, 0] + m, jnp.max(b_end - b + logi, axis=1))
+    w_end = jnp.exp(b_end - b + logi - m_new[:, None])  # (B,c,H)
+    decay_end = jnp.exp(b_end[:, 0] + m - m_new)  # (B,H)
+    C_new = (decay_end[..., None, None] * C
+             + jnp.einsum("bch,bchd,bche->bhde", w_end, kf, vf))
+    n_new = decay_end[..., None] * n + jnp.einsum("bch,bchd->bhd", w_end, kf)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_forward(params, cfg, x, *, return_state: bool = False):
+    xc = cfg.xlstm
+    B, S, d = x.shape
+    d_in = int(xc.mlstm_proj_factor * d)
+    H = xc.num_heads
+    dk = d_in // H
+
+    uz = x @ params["up"]
+    u, z = uz[..., :d_in], uz[..., d_in:]
+
+    ker = xc.conv1d_kernel
+    u_pad = jnp.pad(u, ((0, 0), (ker - 1, 0), (0, 0)))
+    windows = jnp.stack([u_pad[:, i:i + S] for i in range(ker)], axis=-1)
+    u_conv = jax.nn.silu(
+        jnp.einsum("bsdk,kd->bsd", windows, params["conv_w"]) + params["conv_b"])
+
+    q = (u_conv @ params["wq"]).reshape(B, S, H, dk)
+    k = (u_conv @ params["wk"]).reshape(B, S, H, dk)
+    v = (u @ params["wv"]).reshape(B, S, H, dk)
+    gates = u.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    logi = gates[..., :H]  # exponential input gate: log i = raw
+    logf = jax.nn.log_sigmoid(gates[..., H:])
+
+    from repro.models.flags import chunking
+
+    c, unroll_inner = chunking(S, min(xc.chunk_size, S))
+    c = min(c, S)
+    n_chunks = S // c
+    assert S % c == 0, "seq must be divisible by mLSTM chunk"
+
+    def resh(t):
+        return t.reshape(B, n_chunks, c, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    carry0 = (jnp.zeros((B, H, dk, dk), jnp.float32),
+              jnp.zeros((B, H, dk), jnp.float32),
+              jnp.zeros((B, H), jnp.float32))
+    scale = 1.0 / (dk ** 0.5)
+    body = jax.checkpoint(lambda cy, a: _mlstm_chunk(cy, a, scale),
+                          prevent_cse=unroll_inner)
+    carry, hs = jax.lax.scan(body, carry0,
+                             (resh(q), resh(k), resh(v), resh(logi), resh(logf)),
+                             unroll=n_chunks if unroll_inner else 1)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in)
+
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ params["down"]
+    if return_state:
+        ker_state = u_pad[:, S:S + ker - 1] if ker > 1 else jnp.zeros((B, 0, d_in), x.dtype)
+        return out, {"C": carry[0], "n": carry[1], "m": carry[2], "conv": ker_state}
+    return out, None
+
+
+def mlstm_decode(params, cfg, x, cache_layer):
+    """x: (B,1,d). cache: C,n,m + conv tail."""
+    xc = cfg.xlstm
+    B = x.shape[0]
+    d = cfg.d_model
+    d_in = int(xc.mlstm_proj_factor * d)
+    H = xc.num_heads
+    dk = d_in // H
+
+    uz = x[:, 0] @ params["up"]
+    u, z = uz[:, :d_in], uz[:, d_in:]
+    conv_buf = jnp.concatenate([cache_layer["conv"], u[:, None]], axis=1)
+    u_conv = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", conv_buf, params["conv_w"]) + params["conv_b"])
+
+    q = (u_conv @ params["wq"]).reshape(B, H, dk).astype(jnp.float32) / (dk ** 0.5)
+    k = (u_conv @ params["wk"]).reshape(B, H, dk).astype(jnp.float32)
+    v = (u @ params["wv"]).reshape(B, H, dk).astype(jnp.float32)
+    gates = u.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    logi, logf = gates[:, :H], jax.nn.log_sigmoid(gates[:, H:])
+
+    C, n, m = cache_layer["C"], cache_layer["n"], cache_layer["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    f_s = jnp.exp(logf + m - m_new)[..., None]
+    i_s = jnp.exp(logi - m_new)[..., None]
+    # (B,H,dk,dk): k outer v
+    C = f_s[..., None] * C + i_s[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f_s * n + i_s * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(B, d_in)
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    out = ((h.astype(x.dtype) * jax.nn.silu(z)) @ params["down"])[:, None]
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_buf[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg) -> dict:
+    xc = cfg.xlstm
+    d = cfg.d_model
+    H = xc.num_heads
+    dh = d // H
+    d_up = int(xc.slstm_proj_factor * d)
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "w": dense_init(ks[0], (d, 4 * d), dtype=jnp.float32),
+        "r": dense_init(ks[1], (H, dh, 4 * dh), dtype=jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]),  # i, f(+bias), z, o
+        "out_norm": jnp.zeros((d,), jnp.float32),
+        "up": dense_init(ks[2], (d, 2 * d_up), dtype),
+        "down": dense_init(ks[3], (d_up, d), dtype),
+    }
+
+
+def _slstm_step(params, cfg, xw, state):
+    """xw: (B, 4d) pre-computed input projection for this step."""
+    H = cfg.xlstm.num_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, h, m = state
+    B = xw.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, dh), params["r"]).reshape(B, 4 * d)
+    raw = xw + rec + params["b"]
+    it, ft, zt, ot = jnp.split(raw, 4, axis=-1)
+    logi, logf = it, jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, logi)
+    i_s, f_s = jnp.exp(logi - m_new), jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(zt)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params, cfg, x, *, return_state: bool = False):
+    B, S, d = x.shape
+    xw = (x.astype(jnp.float32) @ params["w"])  # (B,S,4d)
+    state0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, d), NEG, jnp.float32),)
+
+    def body(state, xw_t):
+        new = _slstm_step(params, cfg, xw_t, state)
+        return new, new[2]
+
+    state, hs = jax.lax.scan(body, state0, xw.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)  # (B,S,d)
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps).astype(x.dtype)
+    d_up = params["down"].shape[0]
+    uz = h @ params["up"]
+    out = (jax.nn.gelu(uz[..., :d_up]) * uz[..., d_up:]) @ params["down"]
+    if return_state:
+        return out, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+    return out, None
+
+
+def slstm_decode(params, cfg, x, cache_layer):
+    B = x.shape[0]
+    xw = x[:, 0].astype(jnp.float32) @ params["w"]
+    state = (cache_layer["c"], cache_layer["n"], cache_layer["h"], cache_layer["m"])
+    state = _slstm_step(params, cfg, xw, state)
+    h = rms_norm(state[2], params["out_norm"], cfg.norm_eps).astype(x.dtype)
+    d_up = params["down"].shape[0]
+    uz = h @ params["up"]
+    out = ((jax.nn.gelu(uz[:, :d_up]) * uz[:, d_up:]) @ params["down"])[:, None]
+    return out, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}

@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ParallelConfig,
+    batch_pspecs,
+    cache_pspecs,
+    cache_pspecs_sized,
+    param_pspecs,
+)

@@ -1,0 +1,77 @@
+"""Int8 error-feedback gradient compression for data-parallel all-reduce.
+
+Targets the slow links (pure-DP replicas / the cross-pod 'pod' axis): each
+gradient leaf is quantised to int8 with a per-leaf scale, psum'd in int32,
+and dequantised; the quantisation residual is fed back into the next step
+(error feedback keeps the scheme convergent, 1-bit-Adam style). Wire format
+is 1 byte/element + one f32 scale vs 4 (or 2) bytes — a ~4x reduction on the
+DCN all-reduce that §Perf's collective term counts.
+
+Used inside ``shard_map`` DP training (repro.training.trainer ddp mode) and
+unit-tested for unbiasedness-under-EF + convergence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Q_MAX = 127.0
+
+
+def quantize(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (int8 values, f32 scale). ``err`` is the running residual."""
+    corrected = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(corrected)) / Q_MAX
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(corrected / scale), -Q_MAX, Q_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_leaf(g, err, axis_name: str):
+    """One leaf: quantise -> psum(int32) -> mean -> dequant -> new residual."""
+    q, scale = quantize(g, err)
+    n = jax.lax.psum(1, axis_name)
+    # int32 accumulate avoids int8 overflow; scale is the max across peers so
+    # the dequantised mean is conservative and EF absorbs the rest.
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    g_hat = q_sum.astype(jnp.float32) * scale_max / n
+    local_dequant = dequantize(q, scale)
+    new_err = (g.astype(jnp.float32) + err) - local_dequant
+    return g_hat.astype(g.dtype), new_err
+
+
+def compressed_psum_grads(grads, err_state, axis_name: str):
+    """Tree version. err_state mirrors grads (f32). Returns (grads, errs)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        gh, eh = compressed_psum_leaf(g, e, axis_name)
+        out_g.append(gh)
+        out_e.append(eh)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def init_error_state(grads_shape):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.float32), grads_shape)
+
+
+def compression_wire_bytes(grads) -> Tuple[int, int]:
+    """(compressed, uncompressed) bytes per all-reduce round."""
+    comp = unc = 0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        comp += n + 4  # int8 + scale
+        unc += n * leaf.dtype.itemsize
+    return comp, unc

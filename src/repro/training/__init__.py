@@ -1,0 +1,5 @@
+from repro.training.optimizer import (  # noqa: F401
+    OptimizerConfig, OptState, apply_updates, init_opt_state, lr_at)
+from repro.training.trainer import (  # noqa: F401
+    TrainConfig, Watchdog, jit_train_step, make_ddp_train_step,
+    make_train_step, train)

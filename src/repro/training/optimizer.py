@@ -1,0 +1,113 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX.
+
+Integer leaves (``group_map``) and additive masks are held constant; norm /
+bias / router-mask leaves are excluded from weight decay. Moment tensors are
+f32 regardless of param dtype (mixed-precision training convention). Under
+pjit, moments inherit the parameter PartitionSpecs, which is exactly
+ZeRO-style sharded optimizer state on the FSDP axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def _trainable(leaf) -> bool:
+    return jnp.issubdtype(jnp.asarray(leaf).dtype
+                          if not hasattr(leaf, "dtype") else leaf.dtype,
+                          jnp.floating)
+
+
+def _decay_mask(path) -> bool:
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    last = names[-1] if names else ""
+    if last.startswith("ln") or "norm" in last or last in (
+            "b", "b_gates", "conv_b", "dt_proj_b", "router_mask", "D"):
+        return False
+    return True
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if _trainable(p) else None,
+        params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros)
+
+
+def _global_norm(grads):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(grads)
+              if g is not None and _trainable(g)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, path in zip(flat_p, flat_g, flat_m, flat_v, paths):
+        if not _trainable(p) or g is None or m is None:
+            new_p.append(p)
+            new_m.append(m)
+            new_v.append(v)
+            continue
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = OptState(step=step,
+                         m=jax.tree_util.tree_unflatten(treedef, new_m),
+                         v=jax.tree_util.tree_unflatten(treedef, new_v))
+    return params, new_state, {"lr": lr, "grad_norm": gnorm}

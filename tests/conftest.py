@@ -1,0 +1,19 @@
+import os
+
+# Smoke tests and benches see ONE device; multi-device tests run in
+# subprocesses that set xla_force_host_platform_device_count themselves.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,116 @@
+"""Unit + property tests for the clustering layer (paper §3.2.2 / App. A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    fcm_cluster, hierarchical_cluster, kmeans_cluster, pairwise_euclidean)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _feats(n, d, seed=0, clusters=None):
+    rng = np.random.RandomState(seed)
+    if clusters is None:
+        return rng.randn(n, d)
+    # well-separated blobs
+    centers = rng.randn(clusters, d) * 30
+    return np.concatenate(
+        [centers[i % clusters] + 0.01 * rng.randn(1, d) for i in range(n)])
+
+
+class TestHierarchical:
+    def test_recovers_separated_blobs(self):
+        feats = _feats(12, 8, clusters=3)
+        labels = hierarchical_cluster(feats, 3, "average")
+        # same blob -> same label
+        for i in range(12):
+            for j in range(12):
+                same_blob = (i % 3) == (j % 3)
+                assert (labels[i] == labels[j]) == same_blob
+
+    @pytest.mark.parametrize("linkage", ["single", "complete", "average"])
+    def test_linkages_valid_partition(self, linkage):
+        feats = _feats(10, 4, seed=3)
+        labels = hierarchical_cluster(feats, 4, linkage)
+        assert labels.shape == (10,)
+        assert set(labels) == set(range(4))
+
+    def test_deterministic(self):
+        feats = _feats(16, 6, seed=5)
+        a = hierarchical_cluster(feats, 5, "average")
+        b = hierarchical_cluster(feats, 5, "average")
+        assert np.array_equal(a, b)
+
+    def test_matches_scipy_average_linkage(self):
+        scipy = pytest.importorskip("scipy.cluster.hierarchy")
+        feats = _feats(14, 5, seed=7)
+        ours = hierarchical_cluster(feats, 4, "average")
+        Z = scipy.linkage(feats, method="average", metric="euclidean")
+        theirs = scipy.fcluster(Z, t=4, criterion="maxclust")
+        # same partition up to relabeling
+        mapping = {}
+        for o, t in zip(ours, theirs):
+            mapping.setdefault(o, t)
+            assert mapping[o] == t
+
+    @given(st.integers(2, 12), st.integers(1, 8), st.integers(0, 100))
+    def test_property_r_clusters(self, n, r_raw, seed):
+        r = min(r_raw, n)
+        feats = np.random.RandomState(seed).randn(n, 3)
+        labels = hierarchical_cluster(feats, r, "average")
+        assert len(set(labels)) == r
+        assert labels.min() == 0 and labels.max() == r - 1
+
+    @given(st.integers(0, 50))
+    def test_property_identical_points_merge_first(self, seed):
+        rng = np.random.RandomState(seed)
+        base = rng.randn(5, 4) * 10
+        feats = np.concatenate([base, base[:1] + 1e-9])  # duplicate of row 0
+        labels = hierarchical_cluster(feats, 5, "average")
+        assert labels[0] == labels[5]
+
+    def test_r_equals_n_is_identity(self):
+        feats = _feats(8, 3)
+        labels = hierarchical_cluster(feats, 8, "average")
+        assert sorted(labels) == list(range(8))
+
+    def test_r_equals_one(self):
+        feats = _feats(6, 3)
+        assert set(hierarchical_cluster(feats, 1, "single")) == {0}
+
+
+class TestKMeansAndFCM:
+    def test_kmeans_fix_deterministic(self):
+        feats = _feats(12, 4, seed=2)
+        assert np.array_equal(kmeans_cluster(feats, 3, "fix"),
+                              kmeans_cluster(feats, 3, "fix"))
+
+    def test_kmeans_rnd_seed_sensitivity_exists(self):
+        # the paper's instability claim: different seeds CAN give different
+        # partitions on ambiguous data
+        feats = _feats(20, 6, seed=9)
+        results = {tuple(kmeans_cluster(feats, 6, "rnd", seed=s))
+                   for s in range(8)}
+        assert len(results) >= 2
+
+    def test_kmeans_nonempty_clusters(self):
+        feats = _feats(10, 3, seed=4)
+        labels = kmeans_cluster(feats, 5, "rnd", seed=1)
+        assert len(set(labels)) == 5
+
+    def test_fcm_membership_rows_sum_to_one(self):
+        feats = _feats(9, 4, seed=6)
+        labels, U = fcm_cluster(feats, 3, seed=0)
+        assert U.shape == (9, 3)
+        np.testing.assert_allclose(U.sum(1), 1.0, atol=1e-6)
+        assert np.array_equal(labels, np.argmax(U, axis=1))
+
+
+def test_pairwise_euclidean_matches_numpy():
+    feats = _feats(7, 5, seed=11)
+    D = pairwise_euclidean(feats)
+    for i in range(7):
+        for j in range(7):
+            assert abs(D[i, j] - np.linalg.norm(feats[i] - feats[j])) < 1e-6

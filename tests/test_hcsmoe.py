@@ -1,0 +1,206 @@
+"""Integration + property tests for the full HC-SMoE pipeline (Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import HCSMoEConfig, apply_hcsmoe, collect_moe_stats, run_hcsmoe
+from repro.core import baselines as bl
+from repro.core.calibration import flatten_stats
+from repro.core.quality import cluster_quality_report, eval_loss, output_fidelity
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    batches = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                             (2, 64), 0, cfg.vocab_size)}
+               for i in range(3)]
+    stats = collect_moe_stats(model, params, batches)
+    return cfg, model, params, batches, stats
+
+
+def test_stats_shapes(setup):
+    cfg, model, params, batches, stats = setup
+    layers = flatten_stats(cfg, stats)
+    assert len(layers) == cfg.num_layers
+    st = layers[0]["stats"]
+    E = cfg.moe.num_experts
+    assert st.out_sum.shape == (E, cfg.d_model)
+    assert float(st.token_count) == sum(
+        b["tokens"].size for b in batches)
+    assert st.freq.shape == (E,)
+    # every token picks top_k experts
+    np.testing.assert_allclose(float(st.freq.sum()),
+                               float(st.token_count) * cfg.moe.top_k)
+
+
+def test_merge_to_r_equals_e_is_exact_identity(setup):
+    """r == E: every expert its own cluster -> merged model must be
+    bit-identical in function to the original (key invariant)."""
+    cfg, model, params, batches, stats = setup
+    E = cfg.moe.num_experts
+    merged, _ = apply_hcsmoe(cfg, params, stats,
+                             HCSMoEConfig(target_experts=E))
+    toks = batches[0]["tokens"]
+    a, _ = model.forward(params, tokens=toks, moe_mode="dense")
+    b, _ = model.forward(merged, tokens=toks, moe_mode="dense")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_merged_model_all_paths_consistent(setup):
+    cfg, model, params, batches, stats = setup
+    merged, _ = apply_hcsmoe(cfg, params, stats,
+                             HCSMoEConfig(target_experts=4))
+    toks = batches[0]["tokens"]
+    a, _ = model.forward(merged, tokens=toks, moe_mode="dense")
+    b, _ = model.forward(merged, tokens=toks, moe_mode="ragged")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_group_map_is_valid_surjection(setup):
+    cfg, model, params, batches, stats = setup
+    r = 3
+    merged, info = apply_hcsmoe(cfg, params, stats,
+                                HCSMoEConfig(target_experts=r))
+    gm = np.asarray(
+        merged["decoder"]["blocks"]["layer0"]["moe"]["group_map"])
+    assert gm.shape == (cfg.num_blocks, cfg.moe.num_experts)
+    for row in gm:
+        assert set(row) == set(range(r))  # surjective onto merged slots
+
+
+def test_merged_weight_shapes_resized(setup):
+    cfg, model, params, batches, stats = setup
+    merged, _ = apply_hcsmoe(cfg, params, stats,
+                             HCSMoEConfig(target_experts=4))
+    moe = merged["decoder"]["blocks"]["layer0"]["moe"]
+    assert moe["wg"].shape[1] == 4
+    assert moe["router"].shape[-1] == cfg.moe.num_experts  # router untouched
+
+
+def test_router_untouched(setup):
+    cfg, model, params, batches, stats = setup
+    merged, _ = apply_hcsmoe(cfg, params, stats,
+                             HCSMoEConfig(target_experts=4))
+    np.testing.assert_array_equal(
+        np.asarray(params["decoder"]["blocks"]["layer0"]["moe"]["router"]),
+        np.asarray(merged["decoder"]["blocks"]["layer0"]["moe"]["router"]))
+
+
+def test_determinism_end_to_end(setup):
+    cfg, model, params, batches, stats = setup
+    m1, _ = apply_hcsmoe(cfg, params, stats, HCSMoEConfig(target_experts=4))
+    m2, _ = apply_hcsmoe(cfg, params, stats, HCSMoEConfig(target_experts=4))
+    for a, b in zip(jax.tree_util.tree_leaves(m1),
+                    jax.tree_util.tree_leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("variant", [
+    HCSMoEConfig(target_experts=4, linkage="single"),
+    HCSMoEConfig(target_experts=4, linkage="complete"),
+    HCSMoEConfig(target_experts=4, metric="router_logits"),
+    HCSMoEConfig(target_experts=4, metric="weight"),
+    HCSMoEConfig(target_experts=4, merge="average"),
+    HCSMoEConfig(target_experts=4, merge="fix_dom"),
+    HCSMoEConfig(target_experts=4, clustering="kmeans_fix"),
+    HCSMoEConfig(target_experts=4, clustering="kmeans_rnd"),
+    HCSMoEConfig(target_experts=4, clustering="fcm", resize=False),
+    HCSMoEConfig(target_experts=4, non_uniform=True, resize=False),
+])
+def test_all_variants_produce_working_models(setup, variant):
+    cfg, model, params, batches, stats = setup
+    merged, _ = apply_hcsmoe(cfg, params, stats, variant)
+    logits, _ = model.forward(merged, tokens=batches[0]["tokens"],
+                              moe_mode="dense")
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_baselines_produce_working_models(setup):
+    cfg, model, params, batches, stats = setup
+    eb = [{**b, "labels": b["tokens"]} for b in batches]
+    for name, fn in [("f", bl.f_prune), ("s", bl.s_prune)]:
+        pruned, info = fn(cfg, params, stats, 4)
+        assert np.isfinite(eval_loss(model, pruned, eb, moe_mode="dense"))
+        assert info["keep"].sum() == 4 * cfg.num_layers
+    pruned, _ = bl.o_prune(cfg, params, stats, 4, samples=8)
+    assert np.isfinite(eval_loss(model, pruned, eb, moe_mode="dense"))
+    merged, _ = bl.m_smoe(cfg, params, stats, 4)
+    assert np.isfinite(eval_loss(model, merged, eb, moe_mode="dense"))
+
+
+def test_pruned_experts_never_routed(setup):
+    """router_mask must keep pruned experts out of every top-k selection."""
+    cfg, model, params, batches, stats = setup
+    pruned, info = bl.f_prune(cfg, params, stats, 3)
+    keep = info["keep"][0]
+    moe_p = jax.tree.map(lambda x: x[0],
+                         pruned["decoder"]["blocks"]["layer0"]["moe"])
+    from repro.models.moe import router_probs
+
+    x = np.random.RandomState(0).randn(64, cfg.d_model).astype(np.float32)
+    logits = jnp.asarray(x) @ moe_p["router"] + moe_p["router_mask"]
+    _, idx = router_probs(logits, cfg)
+    assert keep[np.asarray(idx).ravel()].all()
+
+
+def test_output_fidelity_reports(setup):
+    cfg, model, params, batches, stats = setup
+    merged, info = apply_hcsmoe(cfg, params, stats,
+                                HCSMoEConfig(target_experts=4))
+    fid = output_fidelity(model, params, merged, batches, moe_mode="dense")
+    assert fid["l2_error"] >= 0 and -1 <= fid["cosine_similarity"] <= 1
+    rep = cluster_quality_report(info["layers"][0]["features"],
+                                 info["layers"][0]["labels"])
+    assert set(rep) == {"silhouette_euc", "silhouette_cos", "dunn_euc",
+                        "dunn_cos"}
+
+
+def test_jensen_bound_holds_per_layer(setup):
+    """Appendix A Eq. 11: with function-average merged experts
+    Ē_j(x) = 1/|G_j| Σ E_i(x), the layer output error is bounded by the
+    routed intra-cluster variance (the theory the paper's clustering
+    objective minimises). Checked empirically on one layer."""
+    cfg, model, params, batches, stats = setup
+    hc = HCSMoEConfig(target_experts=3, merge="average")
+    _, info = apply_hcsmoe(cfg, params, stats, hc)
+    from repro.models.layers import activation
+    from repro.models.moe import router_probs
+
+    layer = info["layers"][0]
+    moe_orig = jax.tree.map(lambda x: x[0],
+                            params["decoder"]["blocks"]["layer0"]["moe"])
+    x = jnp.asarray(np.random.RandomState(0).randn(32, cfg.d_model),
+                    jnp.float32) * 0.1
+    f = activation(cfg.act)
+    outs = []
+    for e in range(cfg.moe.num_experts):
+        h = f(x @ moe_orig["wg"][e]) * (x @ moe_orig["wu"][e])
+        outs.append(h @ moe_orig["wd"][e])
+    outs = jnp.stack(outs, 1)  # (T, E, d)
+    labels = np.asarray(layer["labels"])
+    bar = jnp.stack([outs[:, labels == c].mean(1) for c in range(3)], 1)
+    logits = x @ moe_orig["router"]
+    probs, idx = router_probs(logits, cfg)
+    t = jnp.arange(x.shape[0])
+    y0 = jnp.zeros_like(x)
+    y1 = jnp.zeros_like(x)
+    rhs = jnp.zeros(x.shape[0])
+    for k in range(cfg.moe.top_k):
+        e_idx = idx[:, k]
+        pk = probs[:, k, None]
+        y0 = y0 + pk * outs[t, e_idx]
+        merged_out = bar[t, jnp.asarray(labels)[e_idx]]
+        y1 = y1 + pk * merged_out
+        rhs = rhs + probs[:, k] * jnp.sum((outs[t, e_idx] - merged_out) ** 2, -1)
+    # Jensen (Eq. 11) needs sum of routing weights <= 1 per token; with
+    # top-k softmax weights summing to 1, ||y0-y1||^2 <= rhs holds.
+    lhs = jnp.sum((y0 - y1) ** 2, -1)
+    assert float(jnp.max(lhs - rhs)) <= 1e-6

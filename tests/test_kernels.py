@@ -1,0 +1,163 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in repro.kernels.ref, forward AND backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul (MoE expert GEMM)
+# ---------------------------------------------------------------------------
+
+GM_CASES = [
+    # (E, d, f, N, group pattern)
+    (4, 64, 128, 256, "even"),
+    (4, 64, 128, 256, "skewed"),
+    (8, 128, 256, 512, "with_empty"),
+    (2, 32, 64, 96, "even"),
+    (5, 48, 80, 200, "skewed"),
+]
+
+
+def _group_sizes(e, n, pattern, seed=0):
+    rng = np.random.RandomState(seed)
+    if pattern == "even":
+        gs = np.full(e, n // e)
+        gs[-1] += n - gs.sum()
+    elif pattern == "skewed":
+        w = rng.dirichlet(np.ones(e) * 0.3)
+        gs = np.floor(w * n).astype(int)
+        gs[0] += n - gs.sum()
+    else:  # with_empty
+        gs = np.full(e, n // (e - 2))
+        gs[1] = 0
+        gs[3] = 0
+        gs[0] += n - gs.sum()
+    assert gs.sum() == n and (gs >= 0).all()
+    return jnp.asarray(gs, jnp.int32)
+
+
+@pytest.mark.parametrize("e,d,f,n,pattern", GM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_forward(e, d, f, n, pattern, dtype):
+    key = jax.random.PRNGKey(e * 7 + n)
+    gs = _group_sizes(e, n, pattern)
+    x = jax.random.normal(key, (n, d), dtype)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (e, d, f)) * 0.05
+         ).astype(dtype)
+    y = ops.grouped_matmul(x, w, gs)
+    y_ref = ref.grouped_matmul_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("e,d,f,n,pattern", GM_CASES[:3])
+def test_grouped_matmul_backward(e, d, f, n, pattern):
+    key = jax.random.PRNGKey(3)
+    gs = _group_sizes(e, n, pattern)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (e, d, f)) * 0.05
+
+    def lk(x, w):
+        return jnp.sum(jnp.sin(ops.grouped_matmul(x, w, gs)))
+
+    def lr(x, w):
+        return jnp.sum(jnp.sin(ref.grouped_matmul_ref(x, w, gs)))
+
+    gx_k, gw_k = jax.grad(lk, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(lr, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw_k), np.asarray(gw_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_ffn_matches_ref():
+    key = jax.random.PRNGKey(5)
+    e, d, f, n = 4, 64, 96, 256
+    gs = _group_sizes(e, n, "skewed")
+    x = jax.random.normal(key, (n, d))
+    ws = [jax.random.normal(jax.random.fold_in(key, i), s) * 0.05
+          for i, s in enumerate([(e, d, f), (e, d, f), (e, f, d)])]
+    y = ops.grouped_ffn(x, *ws, gs)
+    y_ref = ref.grouped_ffn_ref(x, *ws, gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    (1, 128, 2, 32, True),
+    (2, 256, 4, 64, True),
+    (2, 256, 4, 64, False),
+    (1, 512, 1, 128, True),
+    (3, 128, 2, 16, True),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hd,causal", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, s, h, hd, causal, dtype):
+    key = jax.random.PRNGKey(b * 31 + s)
+    q = jax.random.normal(key, (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal)
+    o_ref = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused FFN
+# ---------------------------------------------------------------------------
+
+FFN_CASES = [
+    (128, 64, 256, "silu"),
+    (256, 128, 128, "gelu"),
+    (64, 32, 512, "silu"),
+]
+
+
+@pytest.mark.parametrize("m,d,f,act", FFN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ffn(m, d, f, act, dtype):
+    key = jax.random.PRNGKey(m + f)
+    x = jax.random.normal(key, (m, d), dtype)
+    wg = (jax.random.normal(jax.random.fold_in(key, 1), (d, f)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(jax.random.fold_in(key, 2), (d, f)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(jax.random.fold_in(key, 3), (f, d)) * 0.05).astype(dtype)
+    y = ops.fused_ffn(x, wg, wu, wd, act)
+    y_ref = ref.fused_ffn_ref(x, wg, wu, wd, act)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+
+
+def test_padded_layout_properties():
+    """padded_layout invariants: dest indices unique, tiles map to the right
+    expert, unfilled rows land in the owning expert's padding."""
+    from repro.kernels.moe_gemm import TILE_N, padded_layout
+
+    gs = jnp.asarray([3, 0, 260, 129], jnp.int32)
+    n = int(gs.sum())
+    dest, tile_expert, n_pad = padded_layout(gs, n)
+    dest = np.asarray(dest)
+    assert len(set(dest.tolist())) == n  # injective
+    te = np.asarray(tile_expert)
+    padded = np.ceil(np.asarray(gs) / TILE_N).astype(int) * TILE_N
+    offs = np.concatenate([[0], np.cumsum(padded)[:-1]])
+    # each token's padded row lies in a tile owned by its expert
+    expert_of = np.repeat(np.arange(4), np.asarray(gs))
+    for t, e in zip(dest, expert_of):
+        assert te[t // TILE_N] == e

@@ -1,0 +1,104 @@
+"""Merging-layer tests: convexity, identity cases, fix-dom permutation
+equivariance, and the sharded-jax merge vs the numpy reference."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.merging import cluster_alphas, merge_layer
+from repro.core.pipeline import build_combine_matrix, merge_stacked_jax
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def _weights(E=6, d=8, f=10, seed=0):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(E, d, f).astype(np.float32),
+            rng.randn(E, d, f).astype(np.float32),
+            rng.randn(E, f, d).astype(np.float32))
+
+
+@given(st.integers(2, 8), st.integers(0, 30),
+       st.sampled_from(["average", "frequency"]))
+def test_alphas_form_simplex_per_cluster(E, seed, method):
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, max(1, E // 2), E)
+    labels[0] = 0
+    freq = rng.rand(E) * 10
+    alphas = cluster_alphas(labels, freq, method)
+    for c in np.unique(labels):
+        np.testing.assert_allclose(alphas[labels == c].sum(), 1.0, atol=1e-9)
+    assert (alphas >= 0).all()
+
+
+def test_singleton_clusters_are_identity():
+    wg, wu, wd = _weights()
+    labels = np.arange(6)
+    freq = np.ones(6)
+    for method in ["average", "frequency", "fix_dom"]:
+        act = np.random.RandomState(0).randn(6, 4, 10)
+        g, u, d, gm = merge_layer(wg, wu, wd, labels, freq, method,
+                                  act_sample=act)
+        np.testing.assert_allclose(g, wg, atol=1e-6)
+        np.testing.assert_allclose(u, wu, atol=1e-6)
+        np.testing.assert_allclose(d, wd, atol=1e-6)
+
+
+def test_average_merge_of_identical_experts_is_identity():
+    wg, wu, wd = _weights(E=1)
+    wg = np.repeat(wg, 4, 0)
+    wu = np.repeat(wu, 4, 0)
+    wd = np.repeat(wd, 4, 0)
+    labels = np.zeros(4, np.int64)
+    g, u, d, _ = merge_layer(wg, wu, wd, labels, np.ones(4), "average")
+    np.testing.assert_allclose(g[0], wg[0], atol=1e-6)
+    np.testing.assert_allclose(d[0], wd[0], atol=1e-6)
+
+
+def test_frequency_merge_weights_by_usage():
+    wg, wu, wd = _weights(E=2)
+    labels = np.zeros(2, np.int64)
+    freq = np.array([3.0, 1.0])
+    g, _, _, _ = merge_layer(wg, wu, wd, labels, freq, "frequency")
+    np.testing.assert_allclose(g[0], 0.75 * wg[0] + 0.25 * wg[1], atol=1e-6)
+
+
+def test_fix_dom_identical_experts_identity():
+    """If all experts in a cluster are identical, fix-dom must return the
+    expert itself (correlation map = identity, averaging a constant)."""
+    wg, wu, wd = _weights(E=1, seed=3)
+    wg = np.repeat(wg, 3, 0)
+    wu = np.repeat(wu, 3, 0)
+    wd = np.repeat(wd, 3, 0)
+    act = np.repeat(np.random.RandomState(1).randn(1, 16, 10), 3, 0)
+    g, u, d, _ = merge_layer(wg, wu, wd, np.zeros(3, np.int64),
+                             np.array([2.0, 1.0, 1.0]), "fix_dom",
+                             act_sample=act)
+    np.testing.assert_allclose(g[0], wg[0], atol=1e-5)
+    np.testing.assert_allclose(d[0], wd[0], atol=1e-5)
+
+
+def test_jax_merge_matches_numpy_reference():
+    wg, wu, wd = _weights(E=6)
+    labels = np.array([0, 0, 1, 2, 1, 2])
+    freq = np.array([5.0, 1.0, 2.0, 2.0, 0.0, 3.0])
+    g_np, u_np, d_np, _ = merge_layer(wg, wu, wd, labels, freq, "frequency")
+    combine = build_combine_matrix(labels, freq, "frequency", 3)
+    g_j, u_j, d_j = merge_stacked_jax(
+        jnp.asarray(wg)[None], jnp.asarray(wu)[None], jnp.asarray(wd)[None],
+        jnp.asarray(combine)[None])
+    np.testing.assert_allclose(np.asarray(g_j[0]), g_np, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(u_j[0]), u_np, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(d_j[0]), d_np, rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(0, 20))
+def test_zipit_shapes(seed):
+    wg, wu, wd = _weights(E=4, d=6, f=8, seed=seed)
+    labels = np.array([0, 0, 1, 1])
+    act = np.random.RandomState(seed).randn(4, 12, 8)
+    g, u, d, _ = merge_layer(wg, wu, wd, labels, np.ones(4), "zipit",
+                             act_sample=act)
+    assert g.shape == (2, 6, 8) and d.shape == (2, 8, 6)
+    assert np.isfinite(g).all() and np.isfinite(d).all()

@@ -1,0 +1,163 @@
+"""Per-arch smoke tests (assignment requirement f): reduced same-family
+configs, one forward + one train step on CPU, asserting shapes + finiteness,
+plus decode-parity integration tests across every mixer type."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import build_model
+
+ARCHS = list(ALL_ARCHS)
+
+
+def _batch_for(cfg, key, B=2, S=24):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["src_frames"] = jax.random.normal(
+            key, (B, S, cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.num_patch_tokens, cfg.d_model)).astype(
+                jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_config(arch).reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch_for(cfg, key)
+
+    logits, aux = model.forward(
+        params, **{k: v for k, v in batch.items() if k != "labels"},
+        moe_mode="dense")
+    # logits come back over the PADDED vocab (multiple of 256) with the
+    # padding ids masked to -inf-like values; slice to the live region
+    assert logits.shape[-1] == cfg.padded_vocab_size
+    logits = logits[..., :cfg.vocab_size]
+    S_text = batch["tokens"].shape[1]
+    expect_S = S_text + (cfg.num_patch_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, expect_S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+
+    # one real optimizer step
+    from repro.training import OptimizerConfig, apply_updates, init_opt_state
+
+    loss, metrics = model.train_loss(params, batch, moe_mode="dense",
+                                     remat="none")
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.train_loss(p, batch, moe_mode="dense",
+                                                remat="none")[0],
+                     allow_int=True)(params)
+    new_params, _, om = apply_updates(params, grads, init_opt_state(params),
+                                      OptimizerConfig(peak_lr=1e-3))
+    assert np.isfinite(float(om["grad_norm"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params))
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [
+    "llama3.2-1b", "gemma2-2b", "mixtral-8x7b", "deepseek-v2-236b",
+    "jamba-v0.1-52b", "xlstm-125m", "moonshot-v1-16b-a3b", "granite-3-2b",
+])
+def test_decode_matches_forward(arch, key):
+    """prefill + token-by-token decode == full parallel forward."""
+    cfg = get_config(arch).reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = model.forward(params, tokens=toks, moe_mode="dense")
+    p = S - 4
+    lp, cache = model.prefill(params, tokens=toks[:, :p], cache_max_len=S,
+                              moe_mode="dense")
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(full[:, p - 1]),
+                               rtol=2e-4, atol=2e-4)
+    for i in range(p, S):
+        ld, cache = model.decode_step(params, tokens=toks[:, i:i + 1],
+                                      cache=cache, moe_mode="dense")
+        np.testing.assert_allclose(np.asarray(ld[:, 0]),
+                                   np.asarray(full[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_encdec_decode_matches_forward(key):
+    cfg = get_config("seamless-m4t-large-v2").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S, Ssrc = 2, 16, 20
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    src = jax.random.normal(key, (B, Ssrc, cfg.d_model))
+    full, _ = model.forward(params, tokens=toks, src_frames=src,
+                            moe_mode="dense")
+    p = S - 3
+    lp, cache = model.prefill(params, tokens=toks[:, :p], src_frames=src,
+                              cache_max_len=max(S, Ssrc), moe_mode="dense")
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(full[:, p - 1]),
+                               rtol=2e-4, atol=2e-4)
+    for i in range(p, S):
+        ld, cache = model.decode_step(params, tokens=toks[:, i:i + 1],
+                                      cache=cache, moe_mode="dense")
+        np.testing.assert_allclose(np.asarray(ld[:, 0]), np.asarray(full[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_ring_buffer(key):
+    """gemma2 local layers: decoding far past the window must only attend to
+    the last `window` tokens — equivalence with a model fed only the tail is
+    NOT exact (global layers differ), so instead check ring-buffer caches stay
+    finite and the kv_pos window invariant holds."""
+    cfg = get_config("gemma2-2b").reduced(dtype="float32", sliding_window=8)
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 1, 20
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    lp, cache = model.prefill(params, tokens=toks[:, :4], cache_max_len=32)
+    for i in range(4, S):
+        ld, cache = model.decode_step(params, tokens=toks[:, i:i + 1],
+                                      cache=cache)
+        assert bool(jnp.isfinite(ld).all())
+    # local layer (pattern pos 0) cache is ring of size 8
+    local_cache = cache["blocks"][0]
+    assert local_cache["k"].shape[2] == 8
+    kvp = np.asarray(local_cache["kv_pos"])[:, 0]  # block 0
+    live = kvp[kvp >= 0]
+    assert live.max() == S - 1 and live.min() >= S - 8
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v2-236b"])
+def test_moe_paths_agree(arch, key):
+    cfg = get_config(arch).reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(key)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+    l_dense, _ = model.forward(params, tokens=toks, moe_mode="dense")
+    l_ragged, _ = model.forward(params, tokens=toks, moe_mode="ragged")
+    l_pallas, _ = model.forward(params, tokens=toks, moe_mode="pallas")
+    np.testing.assert_allclose(np.asarray(l_dense), np.asarray(l_ragged),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(l_dense), np.asarray(l_pallas),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_actual():
+    """Analytic param_counts (used for MODEL_FLOPS) vs real init, per family
+    representative. Allow small deviation (norm deltas etc.)."""
+    for arch in ["llama3.2-1b", "mixtral-8x7b"]:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(sds)
+                     if jnp.issubdtype(l.dtype, jnp.floating))
+        analytic, _ = cfg.param_counts()
+        assert abs(actual - analytic) / analytic < 0.02, (arch, actual, analytic)
