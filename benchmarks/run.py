@@ -22,6 +22,7 @@ TABLES = [
     ("ablation_fcm", "benchmarks.ablation_fcm"),          # Tables 16-17
     ("extreme_reduction", "benchmarks.extreme_reduction"),  # Tables 18-19
     ("efficiency", "benchmarks.efficiency"),              # Table 20
+    ("serving", "benchmarks.serving_bench"),              # deployment story
     ("cluster_quality", "benchmarks.cluster_quality"),    # Table 23
     ("roofline_bench", "benchmarks.roofline_bench"),      # Roofline section
 ]

@@ -37,12 +37,37 @@ def _accumulate(acc, new):
                         is_leaf=lambda x: hasattr(x, "out_sum"))
 
 
+def _check_unmerged(params):
+    """Calibration stats are defined over the ORIGINAL expert set; merged
+    params (non-identity group_map, possibly padded back to E slots) would
+    silently attribute merged-slot outputs to original expert ids. The slot
+    count is checked statically inside ``moe_forward``; this catches the
+    padded case (resize=False keeps E slots) by value, outside jit."""
+    import numpy as np
+
+    def visit(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        if keys and keys[-1] == "group_map":
+            gm = np.asarray(leaf)
+            ident = np.arange(gm.shape[-1], dtype=gm.dtype)
+            if not np.array_equal(gm, np.broadcast_to(ident, gm.shape)):
+                raise ValueError(
+                    "collect_moe_stats: params carry a non-identity "
+                    "group_map (merged experts). Calibrate on the original "
+                    "params, before apply_hcsmoe.")
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+
+
 def collect_moe_stats(model, params, batches, *, moe_mode: str = "dense"):
     """batches: iterable of input dicts. Returns stacked stats pytree.
 
     Uses the dense MoE path because Eq. 4 requires every expert's output on
-    every calibration token regardless of routing.
+    every calibration token regardless of routing. Raises if ``params`` have
+    already been merged (stats are pre-merge-only).
     """
+    _check_unmerged(params)
 
     @partial(jax.jit, static_argnames=("moe_mode",))
     def step(params, batch, moe_mode="dense"):

@@ -108,12 +108,25 @@ def kmeans_cluster(feats: np.ndarray, r: int, init: str = "fix",
             members = f[labels == c]
             if len(members):
                 centers[c] = members.mean(0)
-    # guarantee r non-empty clusters: seed empties with farthest points
+    # guarantee r non-empty clusters: seed each empty cluster with a distinct
+    # farthest point. Points already used as a reseed (or that are the sole
+    # member of their cluster) are excluded, otherwise successive empty
+    # clusters can claim the SAME farthest point and overwrite each other,
+    # leaving fewer than r clusters.
+    counts = np.bincount(labels, minlength=r)
+    reseeded: list = []
     for c in range(r):
-        if not np.any(labels == c):
-            d2 = ((f - centers[labels]) ** 2).sum(-1)
-            far = int(np.argmax(d2))
-            labels[far] = c
+        if counts[c]:
+            continue
+        d2 = ((f - centers[labels]) ** 2).sum(-1)
+        d2[reseeded] = -np.inf
+        d2[counts[labels] <= 1] = -np.inf
+        far = int(np.argmax(d2))
+        counts[labels[far]] -= 1
+        labels[far] = c
+        counts[c] = 1
+        reseeded.append(far)
+    assert np.all(np.bincount(labels, minlength=r) > 0)
     return canonical_labels(labels)
 
 

@@ -18,6 +18,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both so
+# the kernels import on every toolchain the repo targets.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 TQ = 128
 TK = 128
 NEG = -2.0e38
@@ -96,7 +101,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
             pltpu.VMEM((tq, hd), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qf, kf, vf)
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -17,6 +17,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both so
+# the kernels import on every toolchain the repo targets.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 TM = 128
 TF = 128
 
@@ -67,6 +72,6 @@ def fused_ffn(x, wg, wu, wd, act: str = "silu", *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((tm, d), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(x, wg, wu, wd)

@@ -19,6 +19,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both so
+# the kernels import on every toolchain the repo targets.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 TILE_N = 128
 TILE_F = 128
 
@@ -60,7 +65,7 @@ def grouped_matmul_padded(x_pad, w, tile_expert, *, interpret: bool = False):
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_pad, f), x_pad.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(tile_expert, x_pad, w)
 

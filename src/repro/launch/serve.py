@@ -1,7 +1,8 @@
-"""Serving launcher: batched generation with optional HC-SMoE merging.
+"""Serving launcher: continuous-batching generation with optional HC-SMoE
+merging, per-request sampling, and engine telemetry.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-      --merge-to 4 --requests 6
+      --merge-to 4 --requests 6 --temperature 0.7 --top-p 0.9
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, SamplingParams, ServingEngine
 
 
 def main():
@@ -27,6 +28,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--moe-mode", default="ragged")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples with per-request seeds")
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="exact-length per-request prefill (recompiles per "
+                         "distinct prompt length)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -46,26 +54,33 @@ def main():
         print(f"HC-SMoE merged {cfg.moe.num_experts} -> {args.merge_to} "
               f"experts/layer in {time.time() - t0:.1f}s")
 
-    engine = ServingEngine(model, params, batch_slots=args.slots,
-                           max_len=args.prompt_len + args.max_new + 8,
-                           moe_mode=args.moe_mode)
+    engine = ServingEngine(
+        model, params, batch_slots=args.slots,
+        max_len=args.prompt_len + args.max_new + 8,
+        moe_mode=args.moe_mode,
+        bucket_prompts=False if args.no_bucketing else None)
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(args.requests):
         r = Request(uid=i,
                     prompt=rng.randint(0, cfg.vocab_size,
                                        args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    sampling=SamplingParams(temperature=args.temperature,
+                                            top_p=args.top_p,
+                                            seed=args.seed + i))
         reqs.append(r)
         engine.submit(r)
-    t0 = time.time()
-    engine.run()
-    dt = time.time() - t0
-    total_tokens = sum(len(r.generated) for r in reqs)
-    print(f"served {len(reqs)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
-    for r in reqs[:3]:
-        print(f"  req {r.uid}: {r.generated[:10]}...")
+    finished = engine.run()
+    st = engine.stats()
+    print(f"served {st.requests} requests, {st.total_new_tokens} tokens "
+          f"in {st.wall_time_s:.2f}s ({st.tokens_per_s:.1f} tok/s, "
+          f"mean TTFT {st.mean_ttft_s * 1e3:.0f} ms, "
+          f"{st.prefill_calls} prefill calls / "
+          f"{st.prefill_compilations} compiled shapes)")
+    for r in finished[:3]:
+        print(f"  req {r.uid}: ttft={r.ttft * 1e3:.0f}ms "
+              f"{r.tokens_per_s:.1f} tok/s  {r.generated[:10]}...")
 
 
 if __name__ == "__main__":

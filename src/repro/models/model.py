@@ -204,8 +204,15 @@ def build_model(cfg) -> Model:
     # ------------------------------------------------------------ prefill
     def prefill(params, *, tokens=None, patch_embeds=None, src_frames=None,
                 cache_max_len: int = 0, moe_mode: str = "ragged",
-                unroll: bool = False, pc=None):
-        """Returns (last-token logits, cache)."""
+                last_pos=None, unroll: bool = False, pc=None):
+        """Returns (last-token logits, cache).
+
+        ``last_pos``: optional (B,) int32 per-row index of the last REAL
+        token. Serving buckets right-pad prompts to a shared length; with
+        causal masking the hidden state at each row's true last position is
+        unaffected by padding, so gathering there yields exact logits while
+        the compiled shape stays one-per-bucket.
+        """
         enc_out = None
         if is_encdec:
             enc_out = _encode(params, src_frames, moe_mode=moe_mode,
@@ -217,7 +224,12 @@ def build_model(cfg) -> Model:
                                   mode="prefill", cache_max_len=cache_max_len,
                                   moe_mode=moe_mode, enc_out=enc_out,
                                   unroll=unroll, pc=pc)
-        return _logits(params, h[:, -1:], pc), cache
+        if last_pos is not None:
+            h_last = jnp.take_along_axis(
+                h, jnp.asarray(last_pos, jnp.int32)[:, None, None], axis=1)
+        else:
+            h_last = h[:, -1:]
+        return _logits(params, h_last, pc), cache
 
     # -------------------------------------------------------- decode step
     def decode_step(params, *, tokens, cache, moe_mode: str = "ragged",

@@ -269,9 +269,19 @@ def moe_forward(params, cfg, x, *, group_map: Optional[jax.Array] = None,
 
     aux = {"lb_loss": lb_loss, "z_loss": z_loss}
     if capture_stats:
+        # Stats are defined over the ORIGINAL expert set only (paper Alg. 1
+        # calibrates the un-merged model): freq/logits use m.num_experts, so
+        # computing out_sum/act_sample over merged slot weights would emit a
+        # shape-inconsistent MoEStats. Refuse merged params outright — the
+        # slot count is static, so this raises at trace time.
+        if params["wg"].shape[0] != m.num_experts:
+            raise ValueError(
+                f"capture_stats=True requires pre-merge expert weights: "
+                f"params hold {params['wg'].shape[0]} expert slots but "
+                f"cfg.moe.num_experts={m.num_experts}. Run calibration on "
+                f"the original params (before apply_hcsmoe).")
         all_out = (_dense_expert_outputs(params, xt, cfg.act)
-                   if mode != "dense" else all_out)  # (T, E, d) original slots?
-        # stats are always over the ORIGINAL expert set (pre-merge)
+                   if mode != "dense" else all_out)  # (T, E, d) original slots
         f = activation(cfg.act)
         h_act = f(jnp.einsum("td,edf->tef", xt[:act_sub], params["wg"])) * \
             jnp.einsum("td,edf->tef", xt[:act_sub], params["wu"])  # (t, E, f)

@@ -1,0 +1,28 @@
+"""Version compatibility shims for the jax parallelism APIs.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed ``check_rep`` -> ``check_vma`` along the way; the repo targets
+both generations of toolchain, so every internal caller goes through
+:func:`shard_map_compat`.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old,
+    translating the replication-check kwarg between the two spellings."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm  # noqa: N813
+    params = inspect.signature(sm).parameters
+    kw = {}
+    if "check_vma" in params:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in params:
+        kw["check_rep"] = check_vma
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.compat import shard_map_compat
+
 
 def pipeline_forward(block_fn, stacked_params, x_micro, *, stage_axis: str,
                      n_stages: int):
@@ -77,7 +79,7 @@ def make_pipelined_stack(cfg, mesh: Mesh, stage_axis: str = "model"):
         mb = B // n_micro
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map_compat, mesh=mesh,
             in_specs=(P(stage_axis), P(None), P(None)),
             out_specs=P(None),
             check_vma=False)

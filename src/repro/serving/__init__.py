@@ -1,1 +1,5 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.bucketing import (  # noqa: F401
+    bucket_length, num_buckets, supports_bucketing)
+from repro.serving.engine import (  # noqa: F401
+    Request, ServingEngine, ServingStats)
+from repro.serving.sampling import GREEDY, SamplingParams  # noqa: F401

@@ -1,0 +1,103 @@
+"""Prompt-length bucketing for compile-count-bounded prefill.
+
+JAX recompiles the prefill function for every distinct ``(batch, seq_len)``
+shape. A naive engine therefore compiles once per distinct prompt length —
+unbounded on real traffic. Bucketing right-pads every prompt batch to the
+next power of two (floored at ``min_bucket``, capped at ``max_len``), so a
+mixed-length workload compiles at most ``O(log2(max_len))`` prefill shapes.
+
+Correctness of right padding (no special mask plumbing needed):
+
+* causal attention: a real token at position ``i`` only attends positions
+  ``<= i``; padding sits strictly AFTER every real token, so the hidden
+  state at each row's true last position is bit-identical to an unpadded
+  prefill. Logits are gathered there via ``prefill(..., last_pos=...)``.
+* the KV cache, however, does get garbage entries at padded positions; the
+  engine neutralises them after splicing by setting their ``kv_pos`` to -1
+  (the "unfilled slot" sentinel every decode mask already honours).
+
+Recurrent mixers (mamba/xLSTM) fold padded tokens into their O(1) state and
+local attention with a window smaller than the bucket drops real tokens from
+the ring buffer, so bucketing is only offered where it is exact — see
+:func:`supports_bucketing`.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+BUCKETABLE_MIXERS = ("attn", "attn_global", "attn_local", "mla")
+
+
+def bucket_length(n: int, min_bucket: int = 8, max_len: int = 1 << 30) -> int:
+    """Smallest power of two >= n, floored at min_bucket, capped at max_len."""
+    if n < 1:
+        raise ValueError(f"prompt length {n} < 1")
+    b = max(min_bucket, 1 << int(np.ceil(np.log2(max(n, 1)))))
+    if n > max_len:
+        raise ValueError(f"prompt length {n} exceeds max_len {max_len}")
+    return min(b, max_len)
+
+
+def num_buckets(max_len: int, min_bucket: int = 8) -> int:
+    """Upper bound on distinct bucket lengths for prompts up to max_len."""
+    n, count = min_bucket, 1
+    while n < max_len:
+        n *= 2
+        count += 1
+    return count
+
+
+def pad_prompts(prompts: Sequence[np.ndarray], batch: int, length: int,
+                pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-pad ``prompts`` into a fixed (batch, length) token matrix.
+
+    Rows beyond ``len(prompts)`` are dummy (all pad_id) so the batch
+    dimension also stays at one compiled size. Returns (tokens, last_pos)
+    where last_pos[i] is the index of row i's final real token (0 for dummy
+    rows — harmless, their logits are discarded).
+    """
+    if len(prompts) > batch:
+        raise ValueError(f"{len(prompts)} prompts > batch {batch}")
+    tokens = np.full((batch, length), pad_id, np.int32)
+    last_pos = np.zeros((batch,), np.int32)
+    for i, p in enumerate(prompts):
+        if len(p) > length:
+            raise ValueError(f"prompt length {len(p)} > bucket {length}")
+        tokens[i, :len(p)] = p
+        last_pos[i] = len(p) - 1
+    return tokens, last_pos
+
+
+def supports_bucketing(cfg, max_len: int) -> bool:
+    """True when right-padded prefill is exact for this architecture.
+
+    Requires: attention-family mixers only (recurrent state would absorb the
+    padding), no encoder/VLM inputs, and every sliding window at least
+    ``max_len`` (a shorter ring buffer would evict real tokens in favour of
+    padding when filling the cache from a padded prefill).
+    """
+    if cfg.family in ("encdec", "vlm"):
+        return False
+    mixers = {s.mixer for s in cfg.pattern}
+    if not mixers <= set(BUCKETABLE_MIXERS):
+        return False
+    if "attn_local" in mixers and cfg.sliding_window \
+            and cfg.sliding_window < max_len:
+        return False
+    return True
+
+
+def plan_admission(prompt_lens: List[int], free_slots: int, batch: int,
+                   min_bucket: int, max_len: int) -> Tuple[int, int]:
+    """(n_admit, bucket) for the next batched prefill call.
+
+    Greedy FCFS: admit the queue head up to min(free_slots, batch) requests
+    and pad them all to the bucket of the LONGEST admitted prompt (padding
+    shorter prompts further is free — same compiled shape).
+    """
+    n = min(len(prompt_lens), free_slots, batch)
+    if n == 0:
+        return 0, 0
+    return n, bucket_length(max(prompt_lens[:n]), min_bucket, max_len)

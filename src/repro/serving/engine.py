@@ -1,22 +1,51 @@
-"""Batched serving engine: jit'd prefill + decode with KV cache, greedy or
-temperature sampling, and a continuous-batching scheduler (slot-based).
+"""Continuous-batching serving engine.
 
-The merged-expert serving path is first-class: pass HC-SMoE-merged params and
-the engine runs them unchanged (group_map routing) — the paper's deployment
-story. Decode is a single fused step over the whole batch; finished requests
-free their slot and the scheduler refills from the queue.
+The merged-expert serving path is first-class: pass HC-SMoE-merged params
+and the engine runs them unchanged (group_map routing) — the paper's
+deployment story. Decode is a single fused jit step over the whole slot
+batch; finished requests free their slot and the scheduler refills from the
+FCFS queue.
+
+Engine anatomy (and the knobs that control it):
+
+* **Bucketed batched prefill** (``bucket_prompts``, ``min_bucket``,
+  ``prefill_batch``): admission right-pads up to ``prefill_batch`` queued
+  prompts to a shared power-of-two bucket and prefills them in ONE call, so
+  mixed-length traffic compiles at most ``O(log2(max_len))`` prefill shapes
+  (one per bucket — the batch dim is padded to a single size too). Exactness
+  of right padding under causal masking is argued in
+  :mod:`repro.serving.bucketing`; padded KV-cache entries are neutralised by
+  setting their ``kv_pos`` to -1 (the unfilled-slot sentinel every decode
+  mask honours). Architectures where padding is not exact (recurrent
+  mixers, short sliding windows, enc-dec/VLM) automatically fall back to
+  exact-length per-request prefill.
+* **Sampling** (:mod:`repro.serving.sampling`): each :class:`Request`
+  carries a :class:`SamplingParams` (temperature / top_p / seed); one
+  jitted vmapped sampler draws every slot's next token with per-request
+  parameters. ``temperature=0`` is greedy. Token ``i`` of a request is
+  always drawn from ``fold_in(PRNGKey(seed), i)`` — deterministic across
+  slot assignment and batch composition.
+* **Telemetry**: every request records submit/admit/first-token/done
+  timestamps (``queue_time``/``ttft``/``tokens_per_s`` properties);
+  :meth:`ServingEngine.stats` aggregates them into a :class:`ServingStats`
+  (throughput, mean TTFT, prefill call/compile counts, decode steps).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.kvcache import init_cache
+from repro.serving.bucketing import (
+    pad_prompts, plan_admission, supports_bucketing)
+from repro.serving.sampling import (
+    SamplingParams, sample_tokens, sampling_arrays)
 
 
 @dataclass
@@ -24,14 +53,52 @@ class Request:
     uid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 16
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # --- telemetry (filled by the engine; perf_counter timestamps) ---
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    prefill_time: float = 0.0     # duration of the prefill call it rode in
+
+    @property
+    def queue_time(self) -> float:
+        return max(0.0, self.t_admit - self.t_submit)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from submission."""
+        return max(0.0, self.t_first_token - self.t_submit)
+
+    @property
+    def tokens_per_s(self) -> float:
+        dt = self.t_done - self.t_admit
+        return len(self.generated) / dt if dt > 0 else 0.0
+
+
+@dataclass
+class ServingStats:
+    requests: int
+    total_new_tokens: int
+    wall_time_s: float
+    tokens_per_s: float            # aggregate decode throughput
+    mean_ttft_s: float
+    mean_queue_s: float
+    mean_prefill_s: float
+    prefill_calls: int
+    prefill_compilations: int      # distinct compiled prefill shapes
+    decode_steps: int
 
 
 class ServingEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, moe_mode: str = "ragged",
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 bucket_prompts: Optional[bool] = None,
+                 min_bucket: int = 8,
+                 prefill_batch: Optional[int] = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -39,82 +106,220 @@ class ServingEngine:
         self.max_len = max_len
         self.moe_mode = moe_mode
         self.eos_id = eos_id
+        self.min_bucket = min_bucket
+        self.prefill_batch = prefill_batch or batch_slots
+        if bucket_prompts is None:
+            bucket_prompts = supports_bucketing(self.cfg, max_len)
+        elif bucket_prompts and not supports_bucketing(self.cfg, max_len):
+            raise ValueError(
+                "bucket_prompts=True but right-padded prefill is not exact "
+                "for this architecture (recurrent mixer, short sliding "
+                "window, or enc-dec/VLM inputs)")
+        self.bucket_prompts = bucket_prompts
 
         self._decode = jax.jit(partial(model.decode_step, moe_mode=moe_mode))
-        self._prefill_one = jax.jit(
+        self._prefill = jax.jit(
             partial(model.prefill, moe_mode=moe_mode, cache_max_len=max_len))
 
         self.cache = init_cache(self.cfg, batch_slots, max_len,
                                 jnp.dtype(self.cfg.dtype))
         self.active: Dict[int, Request] = {}   # slot -> request
         self.queue: List[Request] = []
+        self.finished: List[Request] = []
         self.last_token = np.zeros((batch_slots, 1), np.int32)
         self.slot_live = np.zeros(batch_slots, bool)
 
+        # telemetry
+        self.prefill_calls = 0
+        self.prefill_shapes: set = set()
+        self.decode_steps = 0
+        self._run_time = 0.0
+
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds engine "
+                f"max_len ({self.max_len})")
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def _splice(self, slot: int, cache1):
-        """Copy a single-request cache (batch 1) into batch slot ``slot``.
+    def _splice(self, slots: List[int], cacheN, lens: np.ndarray):
+        """Copy rows ``0..len(slots)-1`` of a prefill cache (batch B') into
+        the engine cache at ``slots``. Batch dim is 0 for "pos"/"prefix"
+        leaves and 1 for stacked block leaves (leading n_blocks dim).
+        ``kv_pos`` entries at padded positions (>= the row's true length)
+        are reset to -1 so decode masks never attend to padding."""
+        n = len(slots)
+        slot_idx = np.asarray(slots, np.int32)
+        lens = np.asarray(lens, np.int32)
 
-        Batch dim is 0 for "pos"/prefix leaves and 1 for stacked block
-        leaves (which carry a leading n_blocks dim)."""
-
-        def visit(path, big, one):
+        def visit(path, big, small):
             top = path[0].key
+            leaf = getattr(path[-1], "key", None)
+            if top == "pos":
+                return big.at[slot_idx].set(jnp.asarray(lens))
             if top == "blocks":
-                return big.at[:, slot].set(one[:, 0])
-            return big.at[slot].set(one[0])
+                sel = small[:, :n]
+                if leaf == "kv_pos":
+                    sel = jnp.where(sel >= lens[None, :, None], -1, sel)
+                return big.at[:, slot_idx].set(sel)
+            sel = small[:n]
+            if leaf == "kv_pos":
+                sel = jnp.where(sel >= lens[:, None], -1, sel)
+            return big.at[slot_idx].set(sel)
 
         self.cache = jax.tree_util.tree_map_with_path(visit, self.cache,
-                                                      cache1)
+                                                      cacheN)
 
-    def _admit(self):
-        # NOTE: prefill jit-recompiles per distinct prompt length; a
-        # production deployment buckets prompt lengths (powers of two).
-        for slot in range(self.slots):
-            if self.slot_live[slot] or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            logits, cache1 = self._prefill_one(
-                self.params, tokens=jnp.asarray(req.prompt[None]))
-            self._splice(slot, cache1)
-            self.cache["pos"] = self.cache["pos"].at[slot].set(
-                len(req.prompt))
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(tok)
-            self.last_token[slot, 0] = tok
+    def _record_prefill(self, shape):
+        self.prefill_calls += 1
+        self.prefill_shapes.add(tuple(shape))
+
+    def _assign(self, reqs: List[Request], slots: List[int],
+                first_tokens: np.ndarray, t_admit: float, prefill_dt: float,
+                retired: List[Request]):
+        """Book-keeping shared by both admission paths: record telemetry,
+        store the first sampled token, occupy (or immediately retire)."""
+        now = time.perf_counter()
+        for req, slot, tok in zip(reqs, slots, first_tokens):
+            req.t_admit = t_admit
+            req.prefill_time = prefill_dt
+            req.generated.append(int(tok))
+            req.t_first_token = now
+            self.last_token[slot, 0] = int(tok)
             self.active[slot] = req
             self.slot_live[slot] = True
+            self._maybe_retire(slot, int(tok), retired)
+
+    def _admit(self, retired: List[Request]):
+        while self.queue:
+            free = [s for s in range(self.slots) if not self.slot_live[s]]
+            if not free:
+                return
+            if self.bucket_prompts:
+                n, L = plan_admission(
+                    [len(r.prompt) for r in self.queue], len(free),
+                    self.prefill_batch, self.min_bucket, self.max_len)
+                take = [self.queue.pop(0) for _ in range(n)]
+                Bp = self.prefill_batch
+                tokens, last_pos = pad_prompts(
+                    [r.prompt for r in take], Bp, L)
+                t0 = time.perf_counter()
+                logits, cacheN = self._prefill(
+                    self.params, tokens=jnp.asarray(tokens),
+                    last_pos=jnp.asarray(last_pos))
+                logits.block_until_ready()
+                dt = time.perf_counter() - t0
+                self._record_prefill((Bp, L))
+                lens = np.asarray([len(r.prompt) for r in take], np.int32)
+                slots = free[:n]
+                self._splice(slots, cacheN, lens)
+                sampling = [r.sampling for r in take] + [None] * (Bp - n)
+                counters = [0] * Bp
+                toks = np.asarray(sample_tokens(
+                    logits[:, 0], *sampling_arrays(sampling, counters)))
+                self._assign(take, slots, toks[:n], t0 + dt, dt, retired)
+            else:
+                # exact-length single-request prefill (recurrent mixers etc.)
+                req = self.queue.pop(0)
+                t0 = time.perf_counter()
+                logits, cache1 = self._prefill(
+                    self.params, tokens=jnp.asarray(req.prompt[None]))
+                logits.block_until_ready()
+                dt = time.perf_counter() - t0
+                self._record_prefill((1, len(req.prompt)))
+                self._splice(free[:1], cache1,
+                             np.asarray([len(req.prompt)], np.int32))
+                tok = np.asarray(sample_tokens(
+                    logits[:, 0], *sampling_arrays([req.sampling], [0])))
+                self._assign([req], free[:1], tok[:1], t0 + dt, dt, retired)
+
+    # ------------------------------------------------------------ retirement
+    def _maybe_retire(self, slot: int, tok: int, retired: List[Request]):
+        req = self.active[slot]
+        hit_eos = self.eos_id is not None and tok == self.eos_id
+        if len(req.generated) >= req.max_new_tokens or hit_eos:
+            req.done = True
+            req.t_done = time.perf_counter()
+            del self.active[slot]
+            self.slot_live[slot] = False
+            self.finished.append(req)
+            retired.append(req)
 
     # --------------------------------------------------------------- decode
-    def step(self):
+    def step(self) -> List[Request]:
         """One engine step: admit waiting requests, decode one token for
-        every live slot, retire finished requests."""
-        self._admit()
+        every live slot, retire finished requests. Returns the requests
+        that finished during this step."""
+        retired: List[Request] = []
+        self._admit(retired)
         if not self.slot_live.any():
-            return False
+            return retired
         logits, self.cache = self._decode(
             self.params, tokens=jnp.asarray(self.last_token),
             cache=self.cache)
-        next_tokens = np.asarray(jnp.argmax(logits[:, 0], axis=-1),
-                                 np.int32)
+        sampling = [self.active[s].sampling if self.slot_live[s] else None
+                    for s in range(self.slots)]
+        counters = [len(self.active[s].generated) if self.slot_live[s] else 0
+                    for s in range(self.slots)]
+        next_tokens = np.asarray(sample_tokens(
+            logits[:, 0], *sampling_arrays(sampling, counters)))
+        self.decode_steps += 1
         for slot, req in list(self.active.items()):
             tok = int(next_tokens[slot])
             req.generated.append(tok)
             self.last_token[slot, 0] = tok
-            hit_eos = self.eos_id is not None and tok == self.eos_id
-            if len(req.generated) >= req.max_new_tokens or hit_eos:
-                req.done = True
-                del self.active[slot]
-                self.slot_live[slot] = False
-        return True
+            self._maybe_retire(slot, tok, retired)
+        return retired
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        finished = []
+        """Drive the engine until the queue and all slots drain (or
+        ``max_steps``). Returns every request that finished during this
+        call, in retirement order."""
+        finished: List[Request] = []
         steps = 0
+        t0 = time.perf_counter()
         while (self.queue or self.slot_live.any()) and steps < max_steps:
-            self.step()
+            finished.extend(self.step())
             steps += 1
+        self._run_time += time.perf_counter() - t0
         return finished
+
+    # ------------------------------------------------------------ telemetry
+    def reset_stats(self):
+        """Clear telemetry accumulators (typically after a warm-up run that
+        paid the compile cost). Compiled executables are kept."""
+        self.finished = []
+        self.prefill_calls = 0
+        self.decode_steps = 0
+        self._run_time = 0.0
+
+    def prefill_compilations(self) -> int:
+        """Number of distinct compiled prefill executables."""
+        try:
+            return int(self._prefill._cache_size())
+        except Exception:  # noqa: BLE001 - private jax API may move
+            return len(self.prefill_shapes)
+
+    def stats(self) -> ServingStats:
+        """Aggregate telemetry over every request retired so far."""
+        reqs = self.finished
+        tokens = sum(len(r.generated) for r in reqs)
+        return ServingStats(
+            requests=len(reqs),
+            total_new_tokens=tokens,
+            wall_time_s=self._run_time,
+            tokens_per_s=tokens / self._run_time if self._run_time else 0.0,
+            mean_ttft_s=float(np.mean([r.ttft for r in reqs])) if reqs else 0.0,
+            mean_queue_s=float(np.mean([r.queue_time for r in reqs]))
+            if reqs else 0.0,
+            mean_prefill_s=float(np.mean([r.prefill_time for r in reqs]))
+            if reqs else 0.0,
+            prefill_calls=self.prefill_calls,
+            prefill_compilations=self.prefill_compilations(),
+            decode_steps=self.decode_steps,
+        )

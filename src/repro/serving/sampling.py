@@ -1,0 +1,84 @@
+"""Token sampling for serving: greedy / temperature / nucleus (top-p).
+
+One jitted, vmapped sampler serves the whole engine batch with PER-REQUEST
+parameters: each row carries its own (temperature, top_p, seed, counter).
+Determinism contract: token ``i`` of a request is drawn with
+``fold_in(PRNGKey(seed), i)`` — independent of slot assignment, batch
+composition, and admission order, so a request replays identically across
+engine configurations (asserted in tests/test_serving.py).
+
+``temperature <= 0`` means greedy (argmax); the stochastic branch is still
+computed under vmap but discarded by the final ``where`` — batch rows are
+tiny, so uniformity of the compiled shape wins over skipping work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration."""
+
+    temperature: float = 0.0   # 0 -> greedy
+    top_p: float = 1.0         # nucleus mass; 1.0 -> full distribution
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+
+
+GREEDY = SamplingParams()
+
+
+def _sample_one(logits, temperature, top_p, seed, counter):
+    """logits (V,) -> sampled token id (int32)."""
+    greedy_tok = jnp.argmax(logits).astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    probs = jax.nn.softmax(scaled)
+    # nucleus filter: sort descending, keep the minimal prefix whose mass
+    # reaches top_p (the first token is always kept)
+    sorted_idx = jnp.argsort(-probs)
+    sp = jnp.take(probs, sorted_idx)
+    keep = (jnp.cumsum(sp) - sp) < top_p
+    logp = jnp.where(keep, jnp.log(jnp.maximum(sp, 1e-38)), -jnp.inf)
+    choice = jax.random.categorical(key, logp)
+    sampled = jnp.take(sorted_idx, choice).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+@partial(jax.jit)
+def sample_tokens(logits, temperature, top_p, seed, counter):
+    """Batched per-row sampling.
+
+    logits (B, V); temperature/top_p float32 (B,); seed/counter int32 (B,).
+    Returns (B,) int32 token ids.
+    """
+    return jax.vmap(_sample_one)(logits, temperature, top_p, seed, counter)
+
+
+def sampling_arrays(params_list, counters):
+    """Pack per-request SamplingParams + token counters into device-ready
+    arrays for :func:`sample_tokens`. ``params_list`` entries may be None
+    (dead slot / dummy row) -> greedy with seed 0."""
+    n = len(params_list)
+    temp = np.zeros((n,), np.float32)
+    top_p = np.ones((n,), np.float32)
+    seed = np.zeros((n,), np.int32)
+    for i, sp in enumerate(params_list):
+        if sp is None:
+            continue
+        temp[i] = sp.temperature
+        top_p[i] = sp.top_p
+        seed[i] = sp.seed
+    return (jnp.asarray(temp), jnp.asarray(top_p), jnp.asarray(seed),
+            jnp.asarray(np.asarray(counters, np.int32)))

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.compat import shard_map_compat
+
 from repro.checkpoint import CheckpointManager
 from repro.parallel import ParallelConfig, batch_pspecs, param_pspecs
 from repro.parallel.compression import (
@@ -136,7 +138,7 @@ def make_ddp_train_step(model, opt_cfg, pc: ParallelConfig, mesh: Mesh,
                                          remat=pc.remat)
         return loss, metrics
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map_compat, mesh=mesh,
              in_specs=(P(), OptState(step=P(), m=P(), v=P()), P(), P(axis)),
              out_specs=(P(), OptState(step=P(), m=P(), v=P()), P(), P()),
              check_vma=False)

@@ -1,7 +1,7 @@
 """Unit + property tests for the clustering layer (paper §3.2.2 / App. A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.clustering import (
     fcm_cluster, hierarchical_cluster, kmeans_cluster, pairwise_euclidean)
@@ -81,6 +81,27 @@ class TestHierarchical:
         assert set(hierarchical_cluster(feats, 1, "single")) == {0}
 
 
+class TestPlainProperties:
+    """Fixed-seed parametrized versions of the property tests above, so the
+    core invariants stay covered when hypothesis is not installed."""
+
+    @pytest.mark.parametrize("n,r,seed", [(2, 1, 0), (5, 3, 1), (8, 8, 2),
+                                          (12, 4, 7), (9, 2, 13), (6, 5, 42)])
+    def test_r_clusters(self, n, r, seed):
+        feats = np.random.RandomState(seed).randn(n, 3)
+        labels = hierarchical_cluster(feats, r, "average")
+        assert len(set(labels)) == r
+        assert labels.min() == 0 and labels.max() == r - 1
+
+    @pytest.mark.parametrize("seed", [0, 7, 23, 31])
+    def test_identical_points_merge_first(self, seed):
+        rng = np.random.RandomState(seed)
+        base = rng.randn(5, 4) * 10
+        feats = np.concatenate([base, base[:1] + 1e-9])
+        labels = hierarchical_cluster(feats, 5, "average")
+        assert labels[0] == labels[5]
+
+
 class TestKMeansAndFCM:
     def test_kmeans_fix_deterministic(self):
         feats = _feats(12, 4, seed=2)
@@ -99,6 +120,26 @@ class TestKMeansAndFCM:
         feats = _feats(10, 3, seed=4)
         labels = kmeans_cluster(feats, 5, "rnd", seed=1)
         assert len(set(labels)) == 5
+
+    def test_kmeans_reseeds_distinct_points_for_multiple_empty_clusters(self):
+        """Regression: with several empty clusters and one dominant outlier,
+        the old reseeding picked the SAME farthest point for every empty
+        cluster (later assignments overwrote earlier ones), collapsing the
+        partition. Four near-identical points + one outlier with r=4 must
+        still yield 4 non-empty clusters."""
+        feats = np.array([[0.0, 0.0], [0.0, 1e-6], [1e-6, 0.0],
+                          [1e-6, 1e-6], [100.0, 100.0]])
+        labels = kmeans_cluster(feats, 4, "fix")
+        assert len(set(labels)) == 4
+        assert labels.min() == 0 and labels.max() == 3
+
+    @pytest.mark.parametrize("n,r,seed", [(6, 5, 0), (10, 7, 3), (8, 8, 5)])
+    def test_kmeans_always_r_nonempty_clusters(self, n, r, seed):
+        # degenerate data (many duplicates) maximises empty-cluster pressure
+        rng = np.random.RandomState(seed)
+        feats = np.repeat(rng.randn(max(2, (n + 2) // 3), 2), 3, axis=0)[:n]
+        labels = kmeans_cluster(feats, r, "rnd", seed=seed)
+        assert len(set(labels)) == r
 
     def test_fcm_membership_rows_sum_to_one(self):
         feats = _feats(9, 4, seed=6)

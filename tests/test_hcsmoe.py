@@ -40,6 +40,34 @@ def test_stats_shapes(setup):
                                float(st.token_count) * cfg.moe.top_k)
 
 
+def test_capture_stats_rejects_merged_params(setup):
+    """Calibration stats are pre-merge-only: freq/logits are indexed by the
+    ORIGINAL expert ids, so capturing stats over merged slot weights would
+    produce a shape- (resized) or semantics- (padded) inconsistent MoEStats.
+    Both merged representations must be refused."""
+    cfg, model, params, batches, stats = setup
+    from repro.models.moe import moe_forward
+
+    merged, _ = apply_hcsmoe(cfg, params, stats,
+                             HCSMoEConfig(target_experts=4))
+    with pytest.raises(ValueError, match="merged|pre-merge|original"):
+        collect_moe_stats(model, merged, batches[:1])
+
+    # resize=False keeps E padded slots — only the group_map betrays the
+    # merge; the value-level preflight must still catch it
+    padded, _ = apply_hcsmoe(cfg, params, stats,
+                             HCSMoEConfig(target_experts=4, resize=False))
+    with pytest.raises(ValueError, match="merged|pre-merge|original"):
+        collect_moe_stats(model, padded, batches[:1])
+
+    # layer-level: merged slot count != cfg.moe.num_experts raises at trace
+    moe_p = jax.tree.map(lambda x: x[0],
+                         merged["decoder"]["blocks"]["layer0"]["moe"])
+    x = jnp.zeros((1, 8, cfg.d_model), jnp.float32)
+    with pytest.raises(ValueError, match="pre-merge"):
+        moe_forward(moe_p, cfg, x, mode="dense", capture_stats=True)
+
+
 def test_merge_to_r_equals_e_is_exact_identity(setup):
     """r == E: every expert its own cluster -> merged model must be
     bit-identical in function to the original (key invariant)."""

@@ -3,7 +3,7 @@ equivariance, and the sharded-jax merge vs the numpy reference."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.merging import cluster_alphas, merge_layer
 from repro.core.pipeline import build_combine_matrix, merge_stacked_jax
@@ -22,6 +22,22 @@ def _weights(E=6, d=8, f=10, seed=0):
 @given(st.integers(2, 8), st.integers(0, 30),
        st.sampled_from(["average", "frequency"]))
 def test_alphas_form_simplex_per_cluster(E, seed, method):
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, max(1, E // 2), E)
+    labels[0] = 0
+    freq = rng.rand(E) * 10
+    alphas = cluster_alphas(labels, freq, method)
+    for c in np.unique(labels):
+        np.testing.assert_allclose(alphas[labels == c].sum(), 1.0, atol=1e-9)
+    assert (alphas >= 0).all()
+
+
+@pytest.mark.parametrize("E,seed,method", [
+    (2, 0, "average"), (4, 3, "average"), (8, 11, "average"),
+    (3, 1, "frequency"), (6, 7, "frequency"), (8, 29, "frequency")])
+def test_alphas_form_simplex_plain(E, seed, method):
+    """Fixed-seed version of the property test above — runs without
+    hypothesis installed."""
     rng = np.random.RandomState(seed)
     labels = rng.randint(0, max(1, E // 2), E)
     labels[0] = 0
@@ -95,6 +111,17 @@ def test_jax_merge_matches_numpy_reference():
 
 @given(st.integers(0, 20))
 def test_zipit_shapes(seed):
+    wg, wu, wd = _weights(E=4, d=6, f=8, seed=seed)
+    labels = np.array([0, 0, 1, 1])
+    act = np.random.RandomState(seed).randn(4, 12, 8)
+    g, u, d, _ = merge_layer(wg, wu, wd, labels, np.ones(4), "zipit",
+                             act_sample=act)
+    assert g.shape == (2, 6, 8) and d.shape == (2, 8, 6)
+    assert np.isfinite(g).all() and np.isfinite(d).all()
+
+
+@pytest.mark.parametrize("seed", [0, 4, 17])
+def test_zipit_shapes_plain(seed):
     wg, wu, wd = _weights(E=4, d=6, f=8, seed=seed)
     labels = np.array([0, 0, 1, 1])
     act = np.random.RandomState(seed).randn(4, 12, 8)

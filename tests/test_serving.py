@@ -1,11 +1,15 @@
-"""Serving engine: continuous batching correctness + merged-expert serving."""
+"""Serving engine: continuous batching correctness, bucketed prefill,
+sampling determinism, telemetry, and merged-expert serving."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import (
+    Request, SamplingParams, ServingEngine, bucket_length, num_buckets,
+    supports_bucketing)
+from repro.serving.bucketing import pad_prompts, plan_admission
 
 
 @pytest.fixture(scope="module")
@@ -14,6 +18,20 @@ def served():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def merged_served(served):
+    cfg, model, params = served
+    from repro.core import HCSMoEConfig, run_hcsmoe
+
+    key = jax.random.PRNGKey(3)
+    calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                           (2, 32), 0, cfg.vocab_size)}
+             for i in range(2)]
+    merged, _ = run_hcsmoe(model, params, calib,
+                           HCSMoEConfig(target_experts=4))
+    return merged
 
 
 def _greedy_reference(model, params, prompt, n_new):
@@ -32,15 +50,83 @@ def _greedy_reference(model, params, prompt, n_new):
     return toks
 
 
+# ---------------------------------------------------------------------------
+# Bucketing unit tests (no model)
+# ---------------------------------------------------------------------------
+
+
+class TestBucketing:
+    def test_bucket_length_powers_of_two(self):
+        assert bucket_length(1, min_bucket=8) == 8
+        assert bucket_length(8, min_bucket=8) == 8
+        assert bucket_length(9, min_bucket=8) == 16
+        assert bucket_length(16, min_bucket=8) == 16
+        assert bucket_length(17, min_bucket=8, max_len=64) == 32
+        assert bucket_length(33, min_bucket=8, max_len=64) == 64
+
+    def test_bucket_length_rejects_overlong(self):
+        with pytest.raises(ValueError):
+            bucket_length(65, max_len=64)
+
+    def test_num_buckets_is_logarithmic(self):
+        # min_bucket 8 up to 512: 8,16,32,64,128,256,512 -> 7 = log2 span + 1
+        assert num_buckets(512, min_bucket=8) == 7
+        assert num_buckets(8, min_bucket=8) == 1
+
+    def test_pad_prompts_layout(self):
+        prompts = [np.array([5, 6, 7], np.int32), np.array([9], np.int32)]
+        tokens, last_pos = pad_prompts(prompts, batch=3, length=4)
+        assert tokens.shape == (3, 4)
+        np.testing.assert_array_equal(tokens[0], [5, 6, 7, 0])
+        np.testing.assert_array_equal(tokens[1], [9, 0, 0, 0])
+        np.testing.assert_array_equal(tokens[2], [0, 0, 0, 0])  # dummy row
+        np.testing.assert_array_equal(last_pos, [2, 0, 0])
+
+    def test_plan_admission_uses_longest_admitted(self):
+        n, L = plan_admission([3, 11, 2, 60], free_slots=2, batch=4,
+                              min_bucket=8, max_len=64)
+        assert (n, L) == (2, 16)  # only first two admitted; max len 11 -> 16
+
+    def test_supports_bucketing_gate(self):
+        moe_cfg = get_config("mixtral-8x7b").reduced()
+        assert supports_bucketing(moe_cfg, 64)
+        ssm_cfg = get_config("jamba-v0.1-52b").reduced()
+        assert not supports_bucketing(ssm_cfg, 64)
+
+
+# ---------------------------------------------------------------------------
+# Engine correctness
+# ---------------------------------------------------------------------------
+
+
+def test_run_returns_every_finished_request(served):
+    """Regression: run() used to declare ``finished = []`` and never append,
+    silently returning [] for every workload."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    rng = np.random.RandomState(7)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 4 + i)
+                    .astype(np.int32), max_new_tokens=3) for i in range(5)]
+    for r in reqs:
+        engine.submit(r)
+    finished = engine.run()
+    assert sorted(r.uid for r in finished) == [r.uid for r in reqs]
+    assert all(r.done for r in finished)
+    assert engine.finished == finished
+
+
 def test_engine_matches_unbatched_reference(served):
+    """Mixed prompt lengths force real right-padding inside the buckets;
+    greedy tokens must still match the exact-length unbatched reference."""
     cfg, model, params = served
     rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
-               for _ in range(3)]
+    lens = [3, 6, 9, 12, 5]
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
     refs = [_greedy_reference(model, params, p, 5) for p in prompts]
 
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32,
-                           moe_mode="ragged")
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    assert engine.bucket_prompts
     reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
             for i, p in enumerate(prompts)]
     for r in reqs:
@@ -48,6 +134,26 @@ def test_engine_matches_unbatched_reference(served):
     engine.run()
     for r, ref in zip(reqs, refs):
         assert r.generated == ref, (r.uid, r.generated, ref)
+
+
+def test_bucketed_prefill_compilation_count(served):
+    """Many distinct prompt lengths must compile at most one prefill
+    executable per power-of-two bucket: O(log2(max_len)), not O(#lengths)."""
+    cfg, model, params = served
+    max_len = 64
+    engine = ServingEngine(model, params, batch_slots=2, max_len=max_len,
+                           min_bucket=8)
+    rng = np.random.RandomState(1)
+    lens = list(range(2, 34, 2))  # 16 distinct lengths spanning 3 buckets
+    for i, n in enumerate(lens):
+        engine.submit(Request(uid=i, prompt=rng.randint(
+            0, cfg.vocab_size, n).astype(np.int32), max_new_tokens=2))
+    engine.run()
+    bound = num_buckets(max_len, min_bucket=8)
+    assert engine.prefill_compilations() <= bound, (
+        engine.prefill_shapes, bound)
+    # and distinct shapes are exactly the buckets the workload touched
+    assert engine.prefill_shapes <= {(2, 8), (2, 16), (2, 32)}
 
 
 def test_slot_reuse_and_queueing(served):
@@ -63,23 +169,157 @@ def test_slot_reuse_and_queueing(served):
     assert all(len(r.generated) == 3 for r in reqs)
 
 
-def test_merged_model_serves(served):
-    """HC-SMoE-merged params drive the same engine unchanged (group_map
-    routing) — the paper's deployment story."""
+def test_submit_rejects_oversized_request(served):
     cfg, model, params = served
-    from repro.core import HCSMoEConfig, run_hcsmoe
+    engine = ServingEngine(model, params, batch_slots=2, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.submit(Request(uid=0, prompt=np.zeros(10, np.int32),
+                              max_new_tokens=10))
 
-    key = jax.random.PRNGKey(3)
-    calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
-                                           (2, 32), 0, cfg.vocab_size)}
-             for i in range(2)]
-    merged, _ = run_hcsmoe(model, params, calib,
-                           HCSMoEConfig(target_experts=4))
-    engine = ServingEngine(model, merged, batch_slots=2, max_len=32)
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_deterministic_given_seed(served):
+    """Same seed -> identical tokens, independent of batch composition and
+    slot assignment (key = fold_in(PRNGKey(seed), token_index))."""
+    cfg, model, params = served
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=123)
+
+    def serve(batch_slots, extra):
+        engine = ServingEngine(model, params, batch_slots=batch_slots,
+                               max_len=32)
+        target = Request(uid=0, prompt=prompt, max_new_tokens=6, sampling=sp)
+        engine.submit(target)
+        for i in range(extra):  # co-tenants shuffle slot assignment
+            engine.submit(Request(
+                uid=100 + i,
+                prompt=rng.randint(0, cfg.vocab_size, 5).astype(np.int32),
+                max_new_tokens=4,
+                sampling=SamplingParams(temperature=1.2, seed=77 + i)))
+        engine.run()
+        return target.generated
+
+    a = serve(batch_slots=1, extra=0)
+    b = serve(batch_slots=3, extra=2)
+    assert a == b
+
+    # a different seed must eventually diverge at this temperature
+    engine = ServingEngine(model, params, batch_slots=1, max_len=32)
+    other = Request(uid=1, prompt=prompt, max_new_tokens=6,
+                    sampling=SamplingParams(temperature=0.8, top_p=0.9,
+                                            seed=124))
+    engine.submit(other)
+    engine.run()
+    assert other.generated != a
+
+
+def test_greedy_is_temperature_zero(served):
+    cfg, model, params = served
+    rng = np.random.RandomState(6)
+    prompt = rng.randint(0, cfg.vocab_size, 4).astype(np.int32)
+    ref = _greedy_reference(model, params, prompt, 4)
+    engine = ServingEngine(model, params, batch_slots=1, max_len=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4,
+                  sampling=SamplingParams(temperature=0.0))
+    engine.submit(req)
+    engine.run()
+    assert req.generated == ref
+
+
+def test_tiny_top_p_is_greedy(served):
+    """top_p -> 0 keeps only the argmax token, so any temperature degrades
+    to greedy decoding."""
+    cfg, model, params = served
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    ref = _greedy_reference(model, params, prompt, 4)
+    engine = ServingEngine(model, params, batch_slots=1, max_len=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4,
+                  sampling=SamplingParams(temperature=1.5, top_p=1e-6,
+                                          seed=9))
+    engine.submit(req)
+    engine.run()
+    assert req.generated == ref
+
+
+def test_recurrent_arch_falls_back_to_exact_prefill():
+    """Hybrid SSM stacks (mamba mixers) can't right-pad: the recurrent state
+    would absorb the padding. The engine must auto-disable bucketing and
+    still serve correctly via exact-length per-request prefill."""
+    cfg = get_config("jamba-v0.1-52b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    assert not engine.bucket_prompts
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 9)]
+    refs = [_greedy_reference(model, params, p, 3) for p in prompts]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.generated == ref, (r.uid, r.generated, ref)
+    with pytest.raises(ValueError, match="not exact"):
+        ServingEngine(model, params, batch_slots=2, max_len=32,
+                      bucket_prompts=True)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_serving_stats_record(served):
+    cfg, model, params = served
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
     rng = np.random.RandomState(2)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 4).astype(np.int32),
                     max_new_tokens=4) for i in range(3)]
     for r in reqs:
         engine.submit(r)
+    finished = engine.run()
+    st = engine.stats()
+    assert st.requests == 3
+    assert st.total_new_tokens == sum(len(r.generated) for r in finished) == 12
+    assert st.wall_time_s > 0 and st.tokens_per_s > 0
+    assert st.mean_ttft_s > 0 and st.mean_prefill_s > 0
+    assert st.prefill_calls >= 1
+    assert st.decode_steps >= 3
+    for r in finished:
+        assert r.t_submit <= r.t_admit <= r.t_first_token <= r.t_done
+        assert r.ttft >= r.queue_time
+        assert r.tokens_per_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Merged-expert serving (the paper's deployment story)
+# ---------------------------------------------------------------------------
+
+
+def test_merged_model_serving_parity(served, merged_served):
+    """HC-SMoE-merged params drive the same engine unchanged (group_map
+    routing), and bucketed continuous batching matches the token-by-token
+    merged reference exactly."""
+    cfg, model, _ = served
+    merged = merged_served
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 7, 10)]
+    refs = [_greedy_reference(model, merged, p, 4) for p in prompts]
+
+    engine = ServingEngine(model, merged, batch_slots=2, max_len=32)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
     engine.run()
-    assert all(r.done and len(r.generated) == 4 for r in reqs)
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.generated == ref, (r.uid, r.generated, ref)
