@@ -9,12 +9,23 @@ time-to-first-token for the original and the merged model, across the
 
 Emits ``serving/<model>/<mode>`` rows (us_per_call = us per generated token;
 derived = ``tok_s=..;ttft_ms=..;prefill_compiles=..``).
+
+Standalone expert-parallel mode::
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --ep [--fast]
+
+runs the merged and unmerged models under an expert-sharded
+(data=1, model=N) mesh and reports, next to throughput, the PER-DEVICE
+expert-parameter bytes — the paper's memory-saving claim measured where it
+matters for deployment, per chip. Forces an 8-way host-platform device view
+when run on a single-device box (so jax must not be imported before
+``main()`` parses flags).
 """
 from __future__ import annotations
 
-import numpy as np
+import os
 
-from benchmarks.common import emit_csv, record
+import numpy as np
 
 MOE_MODES = ("ragged", "capacity", "pallas")
 
@@ -32,11 +43,11 @@ def _workload(cfg, *, n_requests, max_new, seed=0):
 
 
 def _serve_once(model, params, cfg, moe_mode, *, n_requests, max_new,
-                slots=4, max_len=64):
+                slots=4, max_len=64, parallel=None, mesh=None):
     from repro.serving import ServingEngine
 
     engine = ServingEngine(model, params, batch_slots=slots, max_len=max_len,
-                           moe_mode=moe_mode)
+                           moe_mode=moe_mode, parallel=parallel, mesh=mesh)
     # warm-up with the IDENTICAL workload so every prefill bucket shape the
     # timed window will hit is already compiled (same seed -> same prompt
     # lengths -> same admission groupings)
@@ -48,10 +59,12 @@ def _serve_once(model, params, cfg, moe_mode, *, n_requests, max_new,
     for r in _workload(cfg, n_requests=n_requests, max_new=max_new):
         engine.submit(r)
     engine.run()
-    return engine.stats()
+    return engine.stats(), engine
 
 
 def run(ctx):
+    from benchmarks.common import emit_csv, record
+
     model, cfg = ctx.model, ctx.cfg
     params = ctx.params
     from repro.core import HCSMoEConfig, apply_hcsmoe
@@ -65,8 +78,8 @@ def run(ctx):
     rows = []
     for mode in MOE_MODES:
         for name, p in (("unmerged", params), ("merged", merged)):
-            st = _serve_once(model, p, cfg, mode,
-                             n_requests=n_requests, max_new=max_new)
+            st, _ = _serve_once(model, p, cfg, mode,
+                                n_requests=n_requests, max_new=max_new)
             us_per_tok = (st.wall_time_s * 1e6 / st.total_new_tokens
                           if st.total_new_tokens else float("inf"))
             derived = (f"tok_s={st.tokens_per_s:.1f};"
@@ -83,3 +96,122 @@ def run(ctx):
                          "prefill_compilations": st.prefill_compilations,
                          "decode_steps": st.decode_steps})
     record("serving", rows)
+
+
+def run_ep(args) -> None:
+    """Expert-parallel serving table: merged vs unmerged under an
+    expert-sharded mesh, with per-device expert-parameter bytes."""
+    import jax
+
+    from benchmarks.common import emit_csv, record
+    from repro.configs import get_config
+    from repro.core import HCSMoEConfig, run_hcsmoe
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import build_model
+    from repro.parallel import ParallelConfig
+
+    cfg = get_config(args.arch).reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                           (2, 32), 0, cfg.vocab_size)}
+             for i in range(2)]
+    target = max(2, cfg.moe.num_experts // 2)
+    merged, _ = run_hcsmoe(model, params, calib,
+                           HCSMoEConfig(target_experts=target))
+
+    # default EP degree: divides BOTH expert counts, so neither model needs
+    # zero-padded slots and the merged model's per-device bytes genuinely
+    # shrink (padding a 4-slot merged stack back to 8 for an 8-way mesh
+    # would erase the memory saving this table exists to measure)
+    import math
+
+    ep_degree = args.ep_degree or min(
+        len(jax.devices()), math.gcd(cfg.moe.num_experts, target))
+    if ep_degree < 2:
+        # coprime counts: fall back to sharding over everything (merged
+        # stacks get zero-padded, diluting their per-device saving) rather
+        # than silently benchmarking with EP disabled
+        ep_degree = min(len(jax.devices()), cfg.moe.num_experts)
+        print(f"# NOTE: gcd({cfg.moe.num_experts}, {target}) < 2; using "
+              f"ep_degree={ep_degree}, merged per-device bytes include "
+              f"zero padding")
+    if ep_degree < 2:
+        raise RuntimeError(
+            "--ep needs >= 2 devices to shard experts (found "
+            f"{len(jax.devices())}); on a single-device box run under "
+            "JAX_PLATFORMS=cpu so the forced "
+            "xla_force_host_platform_device_count takes effect")
+    mesh = make_serving_mesh(ep_degree)
+    parallel = ParallelConfig(fsdp_axis=None, weight_gather=False, ep=True)
+    print(f"# expert-parallel serving on {mesh}")
+
+    n_requests = 4 if args.fast else 8
+    max_new = 4 if args.fast else 8
+    rows = []
+    for name, p in (("unmerged", params), ("merged", merged)):
+        st, engine = _serve_once(model, p, cfg, "ragged",
+                                 n_requests=n_requests, max_new=max_new,
+                                 parallel=parallel, mesh=mesh)
+        eb = engine.expert_bytes_per_device()
+        us_per_tok = (st.wall_time_s * 1e6 / st.total_new_tokens
+                      if st.total_new_tokens else float("inf"))
+        derived = (f"tok_s={st.tokens_per_s:.1f};"
+                   f"ttft_ms={st.mean_ttft_s * 1e3:.1f};"
+                   f"expert_MB_per_device={eb['max_per_device'] / 1e6:.3f};"
+                   f"expert_MB_total={eb['total'] / 1e6:.3f};"
+                   f"ep_degree={ep_degree}")
+        emit_csv(f"serving_ep/{name}/ragged", us_per_tok, derived)
+        rows.append({"model": name, "moe_mode": "ragged",
+                     "ep_degree": ep_degree,
+                     "tokens_per_s": st.tokens_per_s,
+                     "mean_ttft_s": st.mean_ttft_s,
+                     "total_new_tokens": st.total_new_tokens,
+                     "requests": st.requests,
+                     "expert_bytes_total": eb["total"],
+                     "expert_bytes_max_per_device": eb["max_per_device"]})
+        print(f"# {name}: {eb['total'] / 1e6:.3f} MB expert params total, "
+              f"{eb['max_per_device'] / 1e6:.3f} MB max/device")
+    record("serving_ep", rows)
+
+
+def main() -> None:
+    import argparse
+    import sys
+
+    if __package__ in (None, ""):  # `python benchmarks/serving_bench.py`
+        sys.path.insert(0, os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ep", action="store_true",
+                    help="serve under an expert-sharded (data=1, model=N) "
+                         "mesh and report per-device expert-param bytes")
+    ap.add_argument("--ep-degree", type=int, default=0,
+                    help="EP mesh size (default: the largest degree that "
+                         "divides both expert counts, so the merged model "
+                         "needs no zero-padded slots)")
+    ap.add_argument("--arch", default="mixtral-8x7b",
+                    help="architecture for --ep mode (the non-EP table "
+                         "always uses BenchContext's trained tiny model)")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    if args.ep and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # must happen before the first jax import anywhere in this process
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+
+    if args.ep:
+        run_ep(args)
+    else:
+        from benchmarks.common import BenchContext
+
+        run(BenchContext(fast=args.fast))
+
+
+if __name__ == "__main__":
+    main()

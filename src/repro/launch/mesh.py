@@ -33,3 +33,19 @@ def make_local_mesh(shape=None, axes=("data", "model")):
     n = int(np.prod(shape))
     devs = np.asarray(devices[:n]).reshape(shape)
     return jax.sharding.Mesh(devs, axes)
+
+
+def make_serving_mesh(ep_degree: int | None = None):
+    """(data=1, model=ep_degree) mesh for expert-parallel serving.
+
+    Decode batches are small, so serving puts EVERY device on the 'model'
+    axis (expert/tensor parallelism) and keeps 'data' trivial; the expert
+    dim of each MoE stack then shards ``ep_degree`` ways. Defaults to all
+    visible devices."""
+    n = len(jax.devices())
+    if ep_degree is None:
+        ep_degree = n
+    if ep_degree > n:
+        raise RuntimeError(
+            f"ep_degree {ep_degree} exceeds visible devices {n}")
+    return make_local_mesh((1, ep_degree))

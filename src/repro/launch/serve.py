@@ -1,8 +1,15 @@
 """Serving launcher: continuous-batching generation with optional HC-SMoE
-merging, per-request sampling, and engine telemetry.
+merging, expert-parallel sharding, per-request sampling, and engine
+telemetry.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
       --merge-to 4 --requests 6 --temperature 0.7 --top-p 0.9
+
+Expert-parallel serving (shards every MoE expert stack over the 'model'
+axis; on a CPU dev box force a multi-device view first):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --reduced --ep --merge-to 4
 """
 from __future__ import annotations
 
@@ -35,6 +42,11 @@ def main():
     ap.add_argument("--no-bucketing", action="store_true",
                     help="exact-length per-request prefill (recompiles per "
                          "distinct prompt length)")
+    ap.add_argument("--ep", action="store_true",
+                    help="expert-parallel serving: shard MoE expert stacks "
+                         "over the 'model' mesh axis")
+    ap.add_argument("--ep-degree", type=int, default=0,
+                    help="EP mesh size (default: all visible devices)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,11 +66,27 @@ def main():
         print(f"HC-SMoE merged {cfg.moe.num_experts} -> {args.merge_to} "
               f"experts/layer in {time.time() - t0:.1f}s")
 
+    parallel = mesh = None
+    if args.ep:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel import ParallelConfig
+
+        mesh = make_serving_mesh(args.ep_degree or None)
+        parallel = ParallelConfig(fsdp_axis=None, weight_gather=False,
+                                  ep=True, moe_mode=args.moe_mode)
+        print(f"expert-parallel serving on {mesh}")
+
     engine = ServingEngine(
         model, params, batch_slots=args.slots,
         max_len=args.prompt_len + args.max_new + 8,
         moe_mode=args.moe_mode,
-        bucket_prompts=False if args.no_bucketing else None)
+        bucket_prompts=False if args.no_bucketing else None,
+        parallel=parallel, mesh=mesh)
+    if args.ep:
+        eb = engine.expert_bytes_per_device()
+        print(f"expert params: {eb['total'] / 1e6:.2f} MB total, "
+              f"{eb['max_per_device'] / 1e6:.2f} MB max/device "
+              f"({mesh.shape['model']}-way EP)")
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(args.requests):

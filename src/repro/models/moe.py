@@ -119,6 +119,77 @@ def _ragged_expert_ffn(x_sorted, params, group_sizes, act: str, use_pallas: bool
     return jax.lax.ragged_dot(h, params["wd"], group_sizes)
 
 
+def _ep_ragged_forward(params, xt, probs, dispatch_idx, n_slots: int, *,
+                       mesh, ep_axis: str, dp_axes, act: str,
+                       use_pallas: bool):
+    """Expert-parallel ragged forward: shard-local grouped GEMMs + psum.
+
+    ``xt (T, d)``, ``probs``/``dispatch_idx (T, k)`` enter through a
+    ``shard_map`` whose in_specs never mention ``ep_axis`` — the explicit
+    replication point that guarantees every expert shard sees IDENTICAL
+    routing decisions (computed once, in GSPMD land, from replicated router
+    logits). The seed instead let GSPMD partition the dispatch and the XLA
+    partitioner sharded ``group_sizes`` over 'model', misreading local
+    slices as global cumulative offsets (err ~5.0, the old
+    ``test_ep_sharding_lowers`` xfail).
+
+    Each shard owns the contiguous expert slice ``[s*E/tp, (s+1)*E/tp)``:
+    it remaps the replicated dispatch ids to local group ids (non-owned
+    tokens go to a zero-weight sentinel group and combine with weight 0),
+    runs the grouped GEMMs on its local experts only — no weight
+    all-gather — and one ``psum`` over ``ep_axis`` combines the partial
+    token outputs. The token dim shards over ``dp_axes`` when divisible so
+    data parallelism is preserved end-to-end.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.compat import shard_map_compat
+
+    T, d = xt.shape
+    k = dispatch_idx.shape[-1]
+    ep_size = int(mesh.shape[ep_axis])
+    if n_slots % ep_size != 0:
+        raise ValueError(
+            f"expert parallelism needs the expert slot count ({n_slots}) "
+            f"divisible by the '{ep_axis}' mesh axis ({ep_size}); pad the "
+            f"stacks with repro.parallel.pad_expert_slots first")
+    e_loc = n_slots // ep_size
+    dp_axes = tuple(a for a in dp_axes if a in mesh.shape and a != ep_axis)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= int(mesh.shape[a])
+    tok = dp_axes if (dp_axes and T % dp_size == 0) else None
+
+    def local(xt, didx, dprobs, wg, wu, wd):
+        shard = jax.lax.axis_index(ep_axis)
+        flat_idx = didx.reshape(-1)
+        local_idx = flat_idx - shard * e_loc
+        owned = (local_idx >= 0) & (local_idx < e_loc)
+        local_idx = jnp.where(owned, local_idx, e_loc)  # sentinel group
+        order = jnp.argsort(local_idx, stable=True)
+        inv_token = order // k
+        xs = jnp.take(xt, inv_token, axis=0)
+        group_sizes = jnp.bincount(local_idx, length=e_loc + 1).astype(
+            jnp.int32)
+        pad = lambda w: jnp.concatenate([w, jnp.zeros_like(w[:1])])  # noqa: E731
+        ys = _ragged_expert_ffn(
+            xs, {"wg": pad(wg), "wu": pad(wu), "wd": pad(wd)}, group_sizes,
+            act, use_pallas)
+        w = jnp.take(jnp.where(owned, dprobs.reshape(-1), 0.0), order)
+        ys = ys * w[:, None].astype(ys.dtype)
+        out = jnp.zeros((xt.shape[0], d), ys.dtype).at[inv_token].add(ys)
+        return jax.lax.psum(out, ep_axis)
+
+    e_spec = P(ep_axis, None, None)
+    fn = shard_map_compat(
+        local, mesh=mesh,
+        in_specs=(P(tok, None), P(tok, None), P(tok, None),
+                  e_spec, e_spec, e_spec),
+        out_specs=P(tok, None))
+    return fn(xt, dispatch_idx, probs, params["wg"], params["wu"],
+              params["wd"])
+
+
 def _capacity_dispatch(x, probs, dispatch_idx, n_slots: int,
                        capacity_factor: float):
     """GShard/Switch capacity dispatch, ROW-WISE and GATHER-ONLY.
@@ -198,12 +269,18 @@ def moe_forward(params, cfg, x, *, group_map: Optional[jax.Array] = None,
                 num_groups: Optional[int] = None, mode: str = "ragged",
                 capture_stats: bool = False, t_sub: int = 256,
                 act_sub: int = 64, capacity_factor: float = 1.25,
-                act_shard=None):
+                act_shard=None, ep_axis: Optional[str] = None,
+                dp_axes=()):
     """x: (B, S, d) -> (out (B, S, d), aux dict).
 
     group_map/num_groups implement merged-expert serving: after HC-SMoE the
     stacked expert weights have ``num_groups`` live entries (padded back to E
     slots or resized) and routing ids are remapped through ``group_map``.
+
+    ``ep_axis`` (with a mesh in context) switches the ragged/pallas paths to
+    the expert-parallel ``shard_map`` forward (:func:`_ep_ragged_forward`):
+    routing stays replicated, expert GEMMs run shard-local on the E/tp
+    slice each device owns.
     """
     m = cfg.moe
     B, S, d = x.shape
@@ -251,16 +328,39 @@ def moe_forward(params, cfg, x, *, group_map: Optional[jax.Array] = None,
         out = _capacity_combine(y_exp, info, S, d).reshape(T, d)
     elif mode in ("ragged", "pallas"):
         k = m.top_k
-        flat_idx = dispatch_idx.reshape(T * k)
-        flat_probs = probs.reshape(T * k)
-        order = jnp.argsort(flat_idx, stable=True)
-        inv_token = order // k  # source token of each sorted slot
-        xs = jnp.take(xt, inv_token, axis=0)  # (T*k, d)
-        group_sizes = jnp.bincount(flat_idx, length=n_slots).astype(jnp.int32)
-        ys = _ragged_expert_ffn(xs, params, group_sizes, cfg.act,
-                                use_pallas=(mode == "pallas"))
-        ys = ys * jnp.take(flat_probs, order)[:, None].astype(ys.dtype)
-        out = jnp.zeros((T, d), ys.dtype).at[inv_token].add(ys)
+        ep_mesh = None
+        if ep_axis is not None:
+            from repro.parallel.sharding import get_context_mesh
+
+            ep_mesh = get_context_mesh()
+            if ep_mesh is None:
+                # refuse to fall through: the plain GSPMD path on
+                # EP-sharded weights is exactly the silent err~5.0
+                # divergence this module exists to prevent
+                raise ValueError(
+                    "ep_axis was requested (ParallelConfig.ep=True) but no "
+                    "mesh is in context; run the jitted call under "
+                    "`with mesh:` so the shard_map EP forward can bind it")
+        # an ep_axis absent from the mesh or of size 1 cannot actually
+        # shard the expert dim, so the plain path is exact there
+        if (ep_mesh is not None and ep_axis in ep_mesh.shape
+                and int(ep_mesh.shape[ep_axis]) > 1):
+            out = _ep_ragged_forward(
+                params, xt, probs, dispatch_idx, n_slots, mesh=ep_mesh,
+                ep_axis=ep_axis, dp_axes=dp_axes, act=cfg.act,
+                use_pallas=(mode == "pallas"))
+        else:
+            flat_idx = dispatch_idx.reshape(T * k)
+            flat_probs = probs.reshape(T * k)
+            order = jnp.argsort(flat_idx, stable=True)
+            inv_token = order // k  # source token of each sorted slot
+            xs = jnp.take(xt, inv_token, axis=0)  # (T*k, d)
+            group_sizes = jnp.bincount(flat_idx,
+                                       length=n_slots).astype(jnp.int32)
+            ys = _ragged_expert_ffn(xs, params, group_sizes, cfg.act,
+                                    use_pallas=(mode == "pallas"))
+            ys = ys * jnp.take(flat_probs, order)[:, None].astype(ys.dtype)
+            out = jnp.zeros((T, d), ys.dtype).at[inv_token].add(ys)
     else:
         raise ValueError(mode)
 

@@ -191,9 +191,19 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
         gm = lp["moe"].get("group_map")
         act_shard = None
+        ep_axis = None
         if pc is not None:
             from repro.parallel.sharding import _mesh_in_context
 
+            if pc.ep and pc.tp_axis is not None:
+                # expert parallelism: the ragged/pallas paths switch to the
+                # shard_map EP forward (replicated routing, shard-local
+                # expert GEMMs — see repro.parallel.sharding module docs);
+                # capacity mode keeps its GSPMD constraint. Set even with
+                # no mesh in context: moe_forward raises there rather than
+                # silently running the divergent GSPMD path on EP-sharded
+                # weights.
+                ep_axis = pc.tp_axis
             if _mesh_in_context():
                 if mode == "decode":
                     # decode: token batch is tiny (B*k rows) — REPLICATE the
@@ -210,7 +220,8 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
                     act_shard = (pc.dp, pc.tp_axis if pc.ep else None)
         out_m, moe_aux = moe_forward(
             lp["moe"], cfg, h2, group_map=gm, mode=moe_mode,
-            capture_stats=capture_stats, act_shard=act_shard)
+            capture_stats=capture_stats, act_shard=act_shard,
+            ep_axis=ep_axis, dp_axes=(pc.dp_axes if pc is not None else ()))
         x = x + out_m
         aux.update(moe_aux)
     return x, new_cache, aux

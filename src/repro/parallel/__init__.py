@@ -3,5 +3,8 @@ from repro.parallel.sharding import (  # noqa: F401
     batch_pspecs,
     cache_pspecs,
     cache_pspecs_sized,
+    expert_param_bytes_per_device,
+    get_context_mesh,
+    pad_expert_slots,
     param_pspecs,
 )

@@ -6,6 +6,34 @@ cross-pod (DCN) traffic is one all-reduce per step. Expert weights default to
 FSDP×TP slicing of (E, d, f); ``ep=True`` switches them to expert parallelism
 (E over 'model'), which removes the TP collectives from expert GEMMs — one of
 the §Perf hillclimb levers.
+
+Expert parallelism (EP) design
+------------------------------
+
+Under ``ep=True`` the expert dim of every MoE stack is sharded over the
+``tp_axis`` ('model'). Two rules keep the ragged (dropless) forward exact:
+
+1. **Routing is replicated.** Router logits and top-k indices are computed
+   ONCE in GSPMD land from the (replicated-over-'model') activations, and
+   enter the expert compute through a ``shard_map`` boundary whose in_specs
+   do not mention the 'model' axis — i.e. every expert shard receives the
+   IDENTICAL routing decisions for its expert slice. Letting GSPMD partition
+   the routed dispatch itself is what the seed did: the XLA partitioner
+   sharded ``group_sizes`` over 'model' and each shard misread its local
+   slice as global cumulative row offsets (err ~5.0 vs the reference, the
+   old ``test_ep_sharding_lowers`` xfail).
+2. **Expert compute is shard-local.** Inside the ``shard_map``
+   (``repro.models.moe._ep_ragged_forward``) each 'model' shard gathers the
+   tokens routed to its local expert slice (non-owned tokens fall into a
+   zero-weight sentinel group), runs the grouped GEMMs on its E/tp experts,
+   and a single ``psum`` over 'model' combines the partial outputs. No
+   expert weight is ever all-gathered — each device holds and reads
+   ``expert_bytes / tp`` (see :func:`expert_param_bytes_per_device`).
+
+Merged (HC-SMoE) stacks ride the same path: ``group_map`` routing happens in
+the replicated stage, so expert shards agree on merged-slot ids too. When the
+merged slot count does not divide the EP degree, pad with
+:func:`pad_expert_slots` (zero-weight slots that routing can never reach).
 """
 from __future__ import annotations
 
@@ -246,7 +274,8 @@ def compute_pspecs_for_layer(layer_params, pc: ParallelConfig):
     return jax.tree_util.tree_map_with_path(visit, layer_params)
 
 
-def _mesh_in_context() -> bool:
+def get_context_mesh():
+    """The ``with mesh:`` context Mesh, or None when no mesh is active."""
     try:  # deprecated-but-functional introspection of the `with mesh:` env
         import warnings
 
@@ -254,9 +283,84 @@ def _mesh_in_context() -> bool:
             warnings.simplefilter("ignore")
             from jax.interpreters import pxla
 
-            return not pxla.thread_resources.env.physical_mesh.empty
+            mesh = pxla.thread_resources.env.physical_mesh
+            return None if mesh.empty else mesh
     except Exception:  # pragma: no cover
-        return False
+        return None
+
+
+def _mesh_in_context() -> bool:
+    return get_context_mesh() is not None
+
+
+def _is_expert_stack(names) -> bool:
+    """True for routed MoE expert stacks (E, d, f)/(E, f, d) — NOT the
+    shared-expert dense FFN that also lives under the 'moe' subtree."""
+    return ("moe" in names and "shared" not in names
+            and names[-1] in ("wg", "wu", "wd"))
+
+
+def pad_expert_slots(params, multiple: int):
+    """Pad every MoE expert stack with zero-weight slots so the expert dim
+    divides ``multiple`` (the EP shard count).
+
+    Routing can never reach a padded slot (``group_map`` values index only
+    the live slots), so outputs are bit-identical; each EP shard simply gets
+    an even slice of the (padded) expert dim. Only the ragged/pallas EP path
+    needs this — ``capacity`` mode derives its per-expert capacity from the
+    slot count, so pad before choosing a capacity factor there.
+    """
+    import jax.numpy as jnp
+
+    def visit(path, leaf):
+        names = tuple(
+            p.key for p in path if isinstance(p, jax.tree_util.DictKey))
+        e_axis = 1 if "blocks" in names else 0  # stacked: (L, E, ...)
+        if not _is_expert_stack(names) or leaf.ndim != e_axis + 3:
+            return leaf
+        pad = (-leaf.shape[e_axis]) % multiple
+        if not pad:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[e_axis] = (0, pad)
+        return jnp.pad(leaf, widths)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def expert_param_bytes_per_device(params) -> dict:
+    """Per-device byte footprint of the MoE expert stacks (wg/wu/wd).
+
+    Reads the ACTUAL addressable shards, so an EP-sharded tree reports
+    ``total / ep_degree`` per device while a replicated tree reports the
+    full stack on every device — the number the serving benchmark uses to
+    show merged-vs-unmerged memory savings per chip.
+
+    Returns ``{"total": int, "per_device": {device_id: bytes},
+    "max_per_device": int}``.
+    """
+    per_device: dict = {}
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        names = tuple(
+            p.key for p in path if isinstance(p, jax.tree_util.DictKey))
+        if not _is_expert_stack(names):
+            return leaf
+        total += leaf.nbytes
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards:
+            for sh in shards:
+                key = getattr(sh.device, "id", sh.device)
+                per_device[key] = per_device.get(key, 0) + sh.data.nbytes
+        else:  # plain numpy / single-device array
+            per_device[0] = per_device.get(0, 0) + leaf.nbytes
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return {"total": total, "per_device": per_device,
+            "max_per_device": max(per_device.values()) if per_device else 0}
 
 
 def gather_layer_params(layer_params, pc: ParallelConfig):

@@ -28,13 +28,31 @@ Engine anatomy (and the knobs that control it):
 * **Telemetry**: every request records submit/admit/first-token/done
   timestamps (``queue_time``/``ttft``/``tokens_per_s`` properties);
   :meth:`ServingEngine.stats` aggregates them into a :class:`ServingStats`
-  (throughput, mean TTFT, prefill call/compile counts, decode steps).
+  (throughput, mean TTFT, prefill call/compile counts, decode steps). Wall
+  time accrues inside :meth:`ServingEngine.step`, so driving the engine
+  step-by-step and via :meth:`ServingEngine.run` report the same clock;
+  ``prefill_compilations`` counts executables compiled SINCE the last
+  :meth:`ServingEngine.reset_stats` (warm-up compiles drop out of the
+  post-reset window).
+* **Expert-parallel serving** (``parallel=ParallelConfig(ep=True, ...)``,
+  optional ``mesh``): params are placed per ``param_pspecs(..., ep=True)``
+  — each device holds ``expert_bytes / ep_degree`` of every MoE stack —
+  and ``_prefill``/``_decode`` are jitted with ``in_shardings`` /
+  ``out_shardings`` built from those pspecs plus ``cache_pspecs_sized``,
+  so the KV cache stays in its sharded steady-state across decode steps.
+  Routing correctness under EP comes from the shard_map forward in
+  :mod:`repro.models.moe` (replicated routing, shard-local expert GEMMs —
+  design notes in :mod:`repro.parallel.sharding`). Host-side cache splices
+  are re-placed with ``device_put`` onto the cache shardings after every
+  admission. Expert stacks whose slot count does not divide the EP degree
+  (merged models) are zero-padded up front via ``pad_expert_slots`` —
+  routing can never reach the padded slots. Per-device expert-parameter
+  bytes are reported by :meth:`ServingEngine.expert_bytes_per_device`.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -98,9 +116,9 @@ class ServingEngine:
                  eos_id: Optional[int] = None,
                  bucket_prompts: Optional[bool] = None,
                  min_bucket: int = 8,
-                 prefill_batch: Optional[int] = None):
+                 prefill_batch: Optional[int] = None,
+                 parallel=None, mesh=None):
         self.model = model
-        self.params = params
         self.cfg = model.cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -117,12 +135,58 @@ class ServingEngine:
                 "window, or enc-dec/VLM inputs)")
         self.bucket_prompts = bucket_prompts
 
-        self._decode = jax.jit(partial(model.decode_step, moe_mode=moe_mode))
-        self._prefill = jax.jit(
-            partial(model.prefill, moe_mode=moe_mode, cache_max_len=max_len))
+        self.pc = parallel
+        self.mesh = None
+        self._cache_sh = None
+        if parallel is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.launch.mesh import make_serving_mesh
+            from repro.models.kvcache import cache_specs
+            from repro.parallel.sharding import (
+                cache_pspecs_sized, pad_expert_slots, param_pspecs)
+
+            if mesh is None:
+                mesh = make_serving_mesh()
+            self.mesh = mesh
+            tp_size = (int(mesh.shape[parallel.tp_axis])
+                       if parallel.tp_axis in mesh.shape else 1)
+            if (parallel.ep and self.cfg.moe is not None and tp_size > 1
+                    and moe_mode in ("ragged", "pallas")):
+                # merged models may have a slot count that does not divide
+                # the EP degree; zero slots are never routed to. Capacity
+                # mode must NOT be padded: it derives per-expert capacity
+                # from the slot count (dead slots would shrink it), and its
+                # GSPMD einsum path handles uneven expert sharding itself.
+                params = pad_expert_slots(params, tp_size)
+            is_spec = lambda s: isinstance(s, PartitionSpec)  # noqa: E731
+            ns = lambda s: NamedSharding(mesh, s)  # noqa: E731
+            param_sh = jax.tree.map(ns, param_pspecs(params, parallel),
+                                    is_leaf=is_spec)
+            params = jax.device_put(params, param_sh)
+            repl = ns(PartitionSpec())
+            struct = cache_specs(self.cfg, batch_slots, max_len,
+                                 jnp.dtype(self.cfg.dtype))
+            self._cache_sh = jax.tree.map(
+                ns, cache_pspecs_sized(self.cfg, struct, parallel, tp_size),
+                is_leaf=is_spec)
+            self._decode = jax.jit(
+                self._decode_fn,
+                in_shardings=(param_sh, repl, self._cache_sh),
+                out_shardings=(repl, self._cache_sh))
+            self._prefill = jax.jit(
+                self._prefill_fn,
+                in_shardings=(param_sh, repl, repl),
+                out_shardings=(repl, self._cache_sh))
+        else:
+            self._decode = jax.jit(self._decode_fn)
+            self._prefill = jax.jit(self._prefill_fn)
+        self.params = params
 
         self.cache = init_cache(self.cfg, batch_slots, max_len,
                                 jnp.dtype(self.cfg.dtype))
+        if self._cache_sh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_sh)
         self.active: Dict[int, Request] = {}   # slot -> request
         self.queue: List[Request] = []
         self.finished: List[Request] = []
@@ -134,6 +198,24 @@ class ServingEngine:
         self.prefill_shapes: set = set()
         self.decode_steps = 0
         self._run_time = 0.0
+        self._prefill_cache_base = 0
+
+    def _prefill_fn(self, params, tokens, last_pos):
+        return self.model.prefill(params, tokens=tokens, last_pos=last_pos,
+                                  moe_mode=self.moe_mode,
+                                  cache_max_len=self.max_len, pc=self.pc)
+
+    def _decode_fn(self, params, tokens, cache):
+        return self.model.decode_step(params, tokens=tokens, cache=cache,
+                                      moe_mode=self.moe_mode, pc=self.pc)
+
+    def _call(self, fn, *args):
+        """Dispatch a jitted model call, under the mesh context in parallel
+        mode (apply_layer reads the context mesh for EP/ZeRO-3 layouts)."""
+        if self.mesh is None:
+            return fn(*args)
+        with self.mesh:
+            return fn(*args)
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
@@ -174,6 +256,12 @@ class ServingEngine:
 
         self.cache = jax.tree_util.tree_map_with_path(visit, self.cache,
                                                       cacheN)
+        if self._cache_sh is not None:
+            # the host-side splice runs eagerly and may leave leaves with
+            # whatever sharding GSPMD picked for the scatter; re-place onto
+            # the engine cache shardings so the next decode dispatch matches
+            # its in_shardings with zero resharding
+            self.cache = jax.device_put(self.cache, self._cache_sh)
 
     def _record_prefill(self, shape):
         self.prefill_calls += 1
@@ -209,9 +297,9 @@ class ServingEngine:
                 tokens, last_pos = pad_prompts(
                     [r.prompt for r in take], Bp, L)
                 t0 = time.perf_counter()
-                logits, cacheN = self._prefill(
-                    self.params, tokens=jnp.asarray(tokens),
-                    last_pos=jnp.asarray(last_pos))
+                logits, cacheN = self._call(
+                    self._prefill, self.params, jnp.asarray(tokens),
+                    jnp.asarray(last_pos))
                 logits.block_until_ready()
                 dt = time.perf_counter() - t0
                 self._record_prefill((Bp, L))
@@ -227,8 +315,10 @@ class ServingEngine:
                 # exact-length single-request prefill (recurrent mixers etc.)
                 req = self.queue.pop(0)
                 t0 = time.perf_counter()
-                logits, cache1 = self._prefill(
-                    self.params, tokens=jnp.asarray(req.prompt[None]))
+                logits, cache1 = self._call(
+                    self._prefill, self.params,
+                    jnp.asarray(req.prompt[None]),
+                    jnp.asarray([len(req.prompt) - 1], jnp.int32))
                 logits.block_until_ready()
                 dt = time.perf_counter() - t0
                 self._record_prefill((1, len(req.prompt)))
@@ -254,56 +344,84 @@ class ServingEngine:
     def step(self) -> List[Request]:
         """One engine step: admit waiting requests, decode one token for
         every live slot, retire finished requests. Returns the requests
-        that finished during this step."""
-        retired: List[Request] = []
-        self._admit(retired)
-        if not self.slot_live.any():
+        that finished during this step.
+
+        Wall time accrues HERE (not in :meth:`run`), so engines driven
+        step-by-step report the same ``wall_time_s``/``tokens_per_s`` as
+        engines driven through :meth:`run`."""
+        t0 = time.perf_counter()
+        try:
+            retired: List[Request] = []
+            self._admit(retired)
+            if not self.slot_live.any():
+                return retired
+            logits, self.cache = self._call(
+                self._decode, self.params, jnp.asarray(self.last_token),
+                self.cache)
+            sampling = [self.active[s].sampling if self.slot_live[s] else None
+                        for s in range(self.slots)]
+            counters = [len(self.active[s].generated) if self.slot_live[s]
+                        else 0 for s in range(self.slots)]
+            next_tokens = np.asarray(sample_tokens(
+                logits[:, 0], *sampling_arrays(sampling, counters)))
+            self.decode_steps += 1
+            for slot, req in list(self.active.items()):
+                tok = int(next_tokens[slot])
+                req.generated.append(tok)
+                self.last_token[slot, 0] = tok
+                self._maybe_retire(slot, tok, retired)
             return retired
-        logits, self.cache = self._decode(
-            self.params, tokens=jnp.asarray(self.last_token),
-            cache=self.cache)
-        sampling = [self.active[s].sampling if self.slot_live[s] else None
-                    for s in range(self.slots)]
-        counters = [len(self.active[s].generated) if self.slot_live[s] else 0
-                    for s in range(self.slots)]
-        next_tokens = np.asarray(sample_tokens(
-            logits[:, 0], *sampling_arrays(sampling, counters)))
-        self.decode_steps += 1
-        for slot, req in list(self.active.items()):
-            tok = int(next_tokens[slot])
-            req.generated.append(tok)
-            self.last_token[slot, 0] = tok
-            self._maybe_retire(slot, tok, retired)
-        return retired
+        finally:
+            self._run_time += time.perf_counter() - t0
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Drive the engine until the queue and all slots drain (or
         ``max_steps``). Returns every request that finished during this
-        call, in retirement order."""
+        call, in retirement order. Wall time is accumulated by each
+        :meth:`step` (not double-counted here)."""
         finished: List[Request] = []
         steps = 0
-        t0 = time.perf_counter()
         while (self.queue or self.slot_live.any()) and steps < max_steps:
             finished.extend(self.step())
             steps += 1
-        self._run_time += time.perf_counter() - t0
         return finished
 
     # ------------------------------------------------------------ telemetry
-    def reset_stats(self):
-        """Clear telemetry accumulators (typically after a warm-up run that
-        paid the compile cost). Compiled executables are kept."""
-        self.finished = []
-        self.prefill_calls = 0
-        self.decode_steps = 0
-        self._run_time = 0.0
-
-    def prefill_compilations(self) -> int:
-        """Number of distinct compiled prefill executables."""
+    def _jit_prefill_cache_size(self) -> Optional[int]:
         try:
             return int(self._prefill._cache_size())
         except Exception:  # noqa: BLE001 - private jax API may move
-            return len(self.prefill_shapes)
+            return None
+
+    def reset_stats(self):
+        """Clear telemetry accumulators (typically after a warm-up run that
+        paid the compile cost). Compiled executables are kept, but they drop
+        out of the :meth:`prefill_compilations` window: both the observed
+        prefill shape set and the jit-cache baseline restart here, so
+        post-reset stats begin clean."""
+        self.finished = []
+        self.prefill_calls = 0
+        self.prefill_shapes = set()
+        self.decode_steps = 0
+        self._run_time = 0.0
+        self._prefill_cache_base = self._jit_prefill_cache_size() or 0
+
+    def prefill_compilations(self) -> int:
+        """Distinct prefill executables compiled since the last
+        :meth:`reset_stats` (or engine construction)."""
+        n = self._jit_prefill_cache_size()
+        if n is not None:
+            return n - self._prefill_cache_base
+        return len(self.prefill_shapes)
+
+    def expert_bytes_per_device(self) -> dict:
+        """Per-device MoE expert-parameter bytes of the SERVED params (after
+        any EP padding/sharding) — ``{"total", "per_device",
+        "max_per_device"}``; see
+        :func:`repro.parallel.sharding.expert_param_bytes_per_device`."""
+        from repro.parallel.sharding import expert_param_bytes_per_device
+
+        return expert_param_bytes_per_device(self.params)
 
     def stats(self) -> ServingStats:
         """Aggregate telemetry over every request retired so far."""

@@ -277,6 +277,64 @@ def test_recurrent_arch_falls_back_to_exact_prefill():
 # ---------------------------------------------------------------------------
 
 
+def test_reset_stats_starts_clean(served):
+    """Regression: reset_stats() left ``prefill_shapes`` populated, so the
+    fallback prefill_compilations() count still included warm-up shapes
+    after a reset. Post-reset stats must start from zero — including the
+    compilation count, which now measures compiles SINCE the reset."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    rng = np.random.RandomState(4)
+    for i in range(3):
+        engine.submit(Request(uid=i, prompt=rng.randint(
+            0, cfg.vocab_size, 4 + 3 * i).astype(np.int32),
+            max_new_tokens=2))
+    engine.run()
+    assert engine.prefill_shapes and engine.prefill_compilations() > 0
+
+    engine.reset_stats()
+    assert engine.prefill_shapes == set()
+    st = engine.stats()
+    assert st.requests == 0 and st.total_new_tokens == 0
+    assert st.wall_time_s == 0.0 and st.tokens_per_s == 0.0
+    assert st.prefill_calls == 0 and st.decode_steps == 0
+    assert st.prefill_compilations == 0
+
+    # the same workload again hits only warm executables: zero NEW compiles
+    for i in range(3):
+        engine.submit(Request(uid=10 + i, prompt=rng.randint(
+            0, cfg.vocab_size, 4 + 3 * i).astype(np.int32),
+            max_new_tokens=2))
+    engine.run()
+    st = engine.stats()
+    assert st.requests == 3 and st.prefill_calls > 0
+    if engine._jit_prefill_cache_size() is not None:
+        assert st.prefill_compilations == 0, engine.prefill_shapes
+    else:  # fallback counts shapes SEEN since reset (upper bound on compiles)
+        assert st.prefill_compilations <= 2, engine.prefill_shapes
+
+
+def test_step_driven_engine_accrues_wall_time(served):
+    """Regression: wall time only accrued inside run(), so driving the
+    engine via step() reported wall_time_s == 0 and tokens_per_s == 0."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    rng = np.random.RandomState(9)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 5)
+                    .astype(np.int32), max_new_tokens=3) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    for _ in range(100):
+        engine.step()
+        if not (engine.queue or engine.slot_live.any()):
+            break
+    assert all(r.done for r in reqs)
+    st = engine.stats()
+    assert st.wall_time_s > 0
+    assert st.tokens_per_s > 0
+    assert st.total_new_tokens == 9
+
+
 def test_serving_stats_record(served):
     cfg, model, params = served
     engine = ServingEngine(model, params, batch_slots=2, max_len=32)
@@ -297,6 +355,35 @@ def test_serving_stats_record(served):
         assert r.t_submit <= r.t_admit <= r.t_first_token <= r.t_done
         assert r.ttft >= r.queue_time
         assert r.tokens_per_s > 0
+
+
+def test_pad_expert_slots_skips_shared_experts():
+    """Regression: pad_expert_slots matched ANY wg/wu/wd under the 'moe'
+    subtree, so shared-expert FFN weights got their d/ffn dims padded and
+    the forward pass crashed. Only routed (E, d, f) stacks may grow slots;
+    padded slots must not change outputs."""
+    import jax.numpy as jnp
+
+    from repro.parallel import pad_expert_slots
+
+    cfg = get_config("qwen1.5-moe-a2.7b").reduced(dtype="float32")
+    assert cfg.moe.num_shared_experts > 0
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    padded = pad_expert_slots(params, 3)
+
+    moe = params["decoder"]["blocks"]["layer0"]["moe"]
+    moe_p = padded["decoder"]["blocks"]["layer0"]["moe"]
+    E = cfg.moe.num_experts
+    assert moe_p["wg"].shape[1] == E + (-E) % 3
+    assert jax.tree.map(lambda a: a.shape, moe_p["shared"]) == \
+        jax.tree.map(lambda a: a.shape, moe["shared"])
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    ref, _ = model.forward(params, tokens=toks, moe_mode="ragged")
+    out, _ = model.forward(padded, tokens=toks, moe_mode="ragged")
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
 
 
 # ---------------------------------------------------------------------------
