@@ -112,6 +112,15 @@ class ModelConfig:
     attn_logit_softcap: float = 0.0
     final_logit_softcap: float = 0.0
     attn_scale: Optional[float] = None  # None -> 1/sqrt(head_dim)
+    # attention compute backend (mirrors the MoE ``mode=`` convention):
+    #   "jnp"    — pure-jnp grouped-einsum attention (train + inference)
+    #   "pallas" — Pallas kernels on the inference hot paths: flash-decode
+    #              (kernels/flash_decode.py) for every decode step and blocked
+    #              flash attention (kernels/flash_attention.py) for causal
+    #              full-window prefill; non-eligible layers (cross-attention,
+    #              sliding-window/softcapped prefill) fall back to jnp.
+    #              Inference-only: no VJP is defined for the kernels.
+    attn_impl: str = "jnp"
 
     # FFN
     act: str = "silu"  # silu | gelu
@@ -150,6 +159,10 @@ class ModelConfig:
         if self.encoder_layers and self.encoder_pattern:
             if self.encoder_layers % len(self.encoder_pattern) != 0:
                 raise ValueError(f"{self.name}: encoder pattern mismatch")
+        if self.attn_impl not in ("jnp", "pallas"):
+            raise ValueError(
+                f"{self.name}: attn_impl must be 'jnp' or 'pallas', got "
+                f"{self.attn_impl!r}")
 
     @property
     def num_blocks(self) -> int:

@@ -1,10 +1,25 @@
-"""Pallas TPU kernels for the framework's compute hot-spots:
+"""Pallas TPU kernels for the framework's compute hot-spots, and where each
+one is wired into the model forward:
 
   moe_gemm        — ragged grouped GEMM (MoE expert FFN), scalar-prefetched
-                    per-tile expert ids (MegaBlocks adapted to the MXU)
-  flash_attention — causal blocked online-softmax attention
+                    per-tile expert ids (MegaBlocks adapted to the MXU);
+                    drives ``moe_forward(mode="pallas")``
+  flash_attention — causal blocked online-softmax attention, GQA-native
+                    (K/V stay at K heads; the BlockSpec index map folds each
+                    query head onto its KV group); serves the bucketed
+                    batched PREFILL path under ``cfg.attn_impl="pallas"``
+                    (repro.models.attention.attention_forward)
+  flash_decode    — length-aware split-KV GQA decode attention over the
+                    ring-buffered KV cache: per-slot lengths are
+                    scalar-prefetched and tiles past each slot's filled
+                    prefix are skipped; ring ``kv_pos`` masking, sliding
+                    window, and logit softcap are fused in-kernel. Serves
+                    EVERY decode step under ``cfg.attn_impl="pallas"``
+                    (repro.models.attention.decode_attention — the serving
+                    engine's hot path)
   fused_ffn       — fused SwiGLU/GeGLU (no (M, F) hidden in HBM)
 
-``ops.py`` holds the jit'd public wrappers (+custom VJPs); ``ref.py`` the
+``ops.py`` holds the jit'd public wrappers (custom VJPs for the training
+kernels; flash_decode is inference-only and VJP-free); ``ref.py`` the
 pure-jnp oracles every kernel is allclose-tested against.
 """

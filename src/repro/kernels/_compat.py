@@ -1,0 +1,12 @@
+"""jax version compat for the Pallas kernels.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` around 0.5; resolve
+whichever exists once so every kernel imports on every toolchain the repo
+targets.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -6,6 +6,12 @@ VMEM scratch across the k steps of one (bh, q) cell; the output tile is
 written once on the final k step. Causal tiles above the diagonal are
 skipped via @pl.when, so the kernel does ~half the work of the dense matmul.
 
+GQA is native: k/v may carry K <= H heads (K | H). The folded K/V batch is
+(B*K, S, hd) and the K/V BlockSpec index map sends query-head cell ``bh`` to
+KV row ``bh // (H/K)`` — each KV tile is streamed once per head GROUP, never
+expanded to H heads in HBM. This is the prefill path behind
+``cfg.attn_impl="pallas"`` (see repro.models.attention.attention_forward).
+
 VMEM per step: TQ*hd (q) + 2*TK*hd (k,v) + TQ*TK logits + TQ*hd f32 acc —
 ~0.6 MB at TQ=TK=128, hd=128.
 """
@@ -18,10 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both so
-# the kernels import on every toolchain the repo targets.
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
-    pltpu, "TPUCompilerParams")
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 TQ = 128
 TK = 128
@@ -70,17 +73,21 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,
                     interpret: bool = False):
-    """q,k,v: (B, S, H, hd) -> (B, S, H, hd)."""
+    """q: (B, S, H, hd); k, v: (B, S, K, hd) with K | H (un-expanded GQA).
+    Returns (B, S, H, hd)."""
     import math
 
     B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    assert H == K * G, (H, K)
     tq = math.gcd(S, TQ)
     tk = math.gcd(S, TK)
     scale = scale or 1.0 / (hd ** 0.5)
-    # fold batch and heads: (BH, S, hd)
+    # fold batch and heads: q (B*H, S, hd); k/v stay at K heads (B*K, S, hd)
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
     kv_steps = S // tk
 
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
@@ -90,8 +97,9 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
         grid=(B * H, S // tq, kv_steps),
         in_specs=[
             pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b, j, 0)),
+            # query-head cell b*H+h reads KV head group (b*H+h)//G = b*K+h//G
+            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b // G, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),

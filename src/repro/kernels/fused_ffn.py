@@ -17,10 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both so
-# the kernels import on every toolchain the repo targets.
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
-    pltpu, "TPUCompilerParams")
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 TM = 128
 TF = 128

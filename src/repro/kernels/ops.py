@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import moe_gemm as mg
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.fused_ffn import fused_ffn as _ffn
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -83,9 +84,25 @@ def grouped_ffn(x_sorted, wg, wu, wd, group_sizes, act: str = "silu"):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("causal",))
-def flash_attention(q, k, v, causal: bool = True):
-    return _flash(q, k, v, causal=causal, interpret=INTERPRET)
+@functools.partial(jax.jit, static_argnames=("causal", "scale"))
+def flash_attention(q, k, v, causal: bool = True, scale=None):
+    """q: (B,S,H,hd); k,v: (B,S,K,hd) un-expanded GQA (K | H)."""
+    return _flash(q, k, v, causal=causal, scale=scale, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# Flash decode (serving hot path; inference-only, no VJP)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "logit_cap"))
+def flash_decode(q, k, v, kv_pos, pos, *, scale=None, window: int = 0,
+                 logit_cap: float = 0.0):
+    """Length-aware split-KV GQA decode attention over a ring-buffered KV
+    cache. q: (B,H,hd); k,v: (B,W,K,hd); kv_pos: (B,W) int32 (-1 =
+    unfilled); pos: (B,) int32. Returns (B,H,hd)."""
+    return _flash_decode(q, k, v, kv_pos, pos, scale=scale, window=window,
+                         logit_cap=logit_cap, interpret=INTERPRET)
 
 
 # ---------------------------------------------------------------------------

@@ -20,15 +20,41 @@ def grouped_ffn_ref(x_sorted, wg, wu, wd, group_sizes, act: str = "silu"):
 
 
 def attention_ref(q, k, v, *, causal: bool = True, scale=None):
-    """q,k,v: (B, S, H, hd) -> (B, S, H, hd), fp32 softmax."""
+    """q: (B, S, H, hd); k, v: (B, S, K, hd), K | H (GQA: each kv head
+    serves H/K query heads). Returns (B, S, H, hd), fp32 softmax."""
     B, S, H, hd = q.shape
+    K = k.shape[2]
     scale = scale or 1.0 / (hd ** 0.5)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qg = q.reshape(B, S, K, H // K, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
     if causal:
         mask = jnp.tril(jnp.ones((S, S), bool))
-        logits = jnp.where(mask[None, None], logits, -2.0e38)
+        logits = jnp.where(mask[None, None, None], logits, -2.0e38)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def flash_decode_ref(q, k, v, kv_pos, pos, *, scale=None, window: int = 0,
+                     logit_cap: float = 0.0):
+    """Decode-step oracle. q: (B, H, hd); k, v: (B, W, K, hd) ring buffers;
+    kv_pos: (B, W) absolute positions (-1 = unfilled); pos: (B,) query
+    positions. Mask = filled & causal (& sliding window); softcap before
+    masking — mirrors repro.models.attention decode semantics exactly."""
+    B, H, hd = q.shape
+    K = k.shape[2]
+    scale = scale or 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, K, H // K, hd)
+    logits = jnp.einsum("bkgd,bwkd->bkgw", qg, k).astype(jnp.float32) * scale
+    if logit_cap:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    ok = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window:
+        ok &= (pos[:, None] - kv_pos) < window
+    logits = jnp.where(ok[:, None, None, :], logits, -2.0e38)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgw,bwkd->bkgd", w, v)
+    return out.reshape(B, H, hd)
 
 
 def fused_ffn_ref(x, wg, wu, wd, act: str = "silu"):

@@ -3,7 +3,8 @@ merging, expert-parallel sharding, per-request sampling, and engine
 telemetry.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-      --merge-to 4 --requests 6 --temperature 0.7 --top-p 0.9
+      --merge-to 4 --requests 6 --temperature 0.7 --top-p 0.9 \
+      --attn-impl pallas
 
 Expert-parallel serving (shards every MoE expert stack over the 'model'
 axis; on a CPU dev box force a multi-device view first):
@@ -35,6 +36,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--moe-mode", default="ragged")
+    ap.add_argument("--attn-impl", default="jnp", choices=("jnp", "pallas"),
+                    help="decode/prefill attention backend: 'pallas' runs "
+                         "the flash-decode + flash-attention kernels "
+                         "(interpret mode on CPU)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with per-request seeds")
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -79,7 +84,7 @@ def main():
     engine = ServingEngine(
         model, params, batch_slots=args.slots,
         max_len=args.prompt_len + args.max_new + 8,
-        moe_mode=args.moe_mode,
+        moe_mode=args.moe_mode, attn_impl=args.attn_impl,
         bucket_prompts=False if args.no_bucketing else None,
         parallel=parallel, mesh=mesh)
     if args.ep:
@@ -104,6 +109,7 @@ def main():
     print(f"served {st.requests} requests, {st.total_new_tokens} tokens "
           f"in {st.wall_time_s:.2f}s ({st.tokens_per_s:.1f} tok/s, "
           f"mean TTFT {st.mean_ttft_s * 1e3:.0f} ms, "
+          f"decode step {st.decode_step_ms:.2f} ms [{engine.attn_impl}], "
           f"{st.prefill_calls} prefill calls / "
           f"{st.prefill_compilations} compiled shapes)")
     for r in finished[:3]:

@@ -4,6 +4,20 @@ variants, logit soft-capping, RoPE, and a ring-buffered KV cache for decode.
 Prefill & training use q-chunked (memory-efficient) attention: a
 ``lax.scan`` over query chunks with a rematted chunk body, so neither the
 forward nor the backward pass ever materialises the full (S, S) logit matrix.
+
+GQA is never expanded: ``_attend`` contracts q reshaped to (B, S, K, H/K,
+hd) against the K-head K/V directly, so neither prefill nor the per-step
+decode path materialises an (.., H, hd) K/V copy.
+
+``cfg.attn_impl`` selects the compute backend (mirroring the MoE ``mode=``
+convention): "jnp" is the grouped-einsum path everywhere; "pallas" routes
+every decode step through the length-aware split-KV flash-decode kernel
+(:mod:`repro.kernels.flash_decode` — ring-buffer ``kv_pos`` masking,
+sliding window, and logit softcap fused in-kernel) and eligible prefill
+layers (causal full-window, no softcap, self-attention — positions are
+``arange(S)`` on every such call in this codebase) through the blocked
+flash-attention kernel. Non-eligible layers fall back to jnp. The pallas
+backend is inference-only: the kernels define no VJP.
 """
 from __future__ import annotations
 
@@ -38,21 +52,29 @@ def init_attention(key, cfg) -> dict:
 
 
 def _expand_kv(k, num_heads):
-    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head."""
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head.
+
+    Kept only as a reference/debug helper — the forward paths contract
+    grouped q against un-expanded K/V (see ``_attend``)."""
     B, S, K, hd = k.shape
     rep = num_heads // K
     return jnp.repeat(k, rep, axis=2) if rep > 1 else k
 
 
 def _attend(q, k, v, mask, scale, logit_cap):
-    """q: (B,Sq,H,hd); k,v: (B,Skv,H,hd); mask: (B,Sq,Skv) or (Sq,Skv) bool."""
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    """q: (B,Sq,H,hd); k,v: (B,Skv,K,hd) with K | H (un-expanded GQA — each
+    kv head serves H/K query heads); mask: (B,Sq,Skv) or (Sq,Skv) bool."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, Sq, K, H // K, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
     logits = softcap(logits, logit_cap)
     if mask.ndim == 2:
         mask = mask[None]
-    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
     weights = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", weights, v)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", weights, v)
+    return out.reshape(B, Sq, H, hd)
 
 
 def _chunked_attend(q, k, v, mask_fn, q_positions, kv_positions, scale,
@@ -129,20 +151,39 @@ def attention_forward(params, cfg, spec_mixer: str, x, positions,
         kv_positions = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
         mask_kind = "full"
 
-    k_exp, v_exp = _expand_kv(k, H), _expand_kv(v, H)
     scale = cfg.attn_scale or 1.0 / (hd ** 0.5)
     mask_fn = make_mask_fn(mask_kind, cfg.sliding_window)
+
+    # pallas prefill path: blocked flash attention for plain causal
+    # self-attention (no window, no softcap). The kernel masks by tile ROW
+    # INDEX, which equals the positions-based causal mask whenever each
+    # row's positions ascend by 1 (q_pos >= k_pos <=> i >= j; a shared base
+    # offset cancels). That holds for every self-attention call in this
+    # codebase (model._decoder_inputs builds arange(S)). It does NOT hold
+    # for packed sequences with position resets — such a caller must keep
+    # attn_impl="jnp" or extend the kernel with explicit positions.
+    # Inference-only — no VJP.
+    use_flash = (cfg.attn_impl == "pallas" and not is_cross
+                 and mask_kind == "causal" and not cfg.attn_logit_softcap)
+    if use_flash:
+        from repro.kernels.ops import flash_attention as _flash_prefill
+
+        out = _flash_prefill(q, k, v, causal=True, scale=scale)
+        out = out.reshape(B, S, H * hd) @ params["wo"]
+        if return_kv:
+            return out, (k, v)
+        return out, None
 
     from repro.models.flags import chunking
 
     q_chunk, unroll_inner = chunking(S, q_chunk)
     if S > q_chunk and S % q_chunk == 0:
-        out = _chunked_attend(q, k_exp, v_exp, mask_fn, positions, kv_positions,
+        out = _chunked_attend(q, k, v, mask_fn, positions, kv_positions,
                               scale, cfg.attn_logit_softcap, q_chunk,
                               unroll=unroll_inner)
     else:
         mask = mask_fn(positions, kv_positions)
-        out = _attend(q, k_exp, v_exp, mask, scale, cfg.attn_logit_softcap)
+        out = _attend(q, k, v, mask, scale, cfg.attn_logit_softcap)
 
     out = out.reshape(B, S, H * hd) @ params["wo"]
     if return_kv:
@@ -173,8 +214,7 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
         v = (kv_override @ params["wv"]).reshape(B, Skv, K, hd)
         kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
         mask = make_mask_fn("full")(pos[:, None], kv_pos)
-        out = _attend(q, _expand_kv(k, H), _expand_kv(v, H), mask, scale,
-                      cfg.attn_logit_softcap)
+        out = _attend(q, k, v, mask, scale, cfg.attn_logit_softcap)
         return (out.reshape(B, 1, H * hd) @ params["wo"]), cache_layer
 
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
@@ -195,9 +235,20 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
         kv_pos, slot, pos[:, None].astype(jnp.int32))
 
     kind = "local" if spec_mixer == "attn_local" else "causal"
-    mask = make_mask_fn(kind, cfg.sliding_window)(pos[:, None], kv_pos)
-    out = _attend(q, _expand_kv(k_buf, H), _expand_kv(v_buf, H), mask, scale,
-                  cfg.attn_logit_softcap)
+    if cfg.attn_impl == "pallas":
+        # split-KV flash decode: ring-buffer kv_pos masking, sliding window,
+        # and softcap fused in-kernel; tiles beyond each slot's filled
+        # prefix are skipped via the scalar-prefetched pos
+        from repro.kernels.ops import flash_decode as _flash_decode
+
+        window = cfg.sliding_window if kind == "local" else 0
+        out = _flash_decode(q[:, 0], k_buf, v_buf, kv_pos,
+                            pos.astype(jnp.int32), scale=scale,
+                            window=window,
+                            logit_cap=cfg.attn_logit_softcap)[:, None]
+    else:
+        mask = make_mask_fn(kind, cfg.sliding_window)(pos[:, None], kv_pos)
+        out = _attend(q, k_buf, v_buf, mask, scale, cfg.attn_logit_softcap)
     out = out.reshape(B, 1, H * hd) @ params["wo"]
     return out, {"k": k_buf, "v": v_buf, "kv_pos": kv_pos}
 

@@ -158,8 +158,8 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
             B = hc.shape[0]
             H, hd = cfg.num_heads, cfg.head_dim
             q = (hc @ lp["cross"]["wq"]).reshape(B, 1, H, hd)
-            k = attn._expand_kv(new_cache["ck"], H)
-            v = attn._expand_kv(new_cache["cv"], H)
+            k = new_cache["ck"]  # (B, Skv, K, hd) — _attend handles GQA
+            v = new_cache["cv"]
             Skv = k.shape[1]
             mask = (jnp.arange(Skv, dtype=jnp.int32)[None, None, :]
                     < new_cache["c_len"][:, None, None])

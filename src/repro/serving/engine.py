@@ -34,6 +34,18 @@ Engine anatomy (and the knobs that control it):
   ``prefill_compilations`` counts executables compiled SINCE the last
   :meth:`ServingEngine.reset_stats` (warm-up compiles drop out of the
   post-reset window).
+* **Attention backend** (``attn_impl="jnp" | "pallas"``): the decode hot
+  path — one attention call per layer per generated token — either runs the
+  grouped-einsum jnp fallback or the Pallas **flash-decode** kernel
+  (:mod:`repro.kernels.flash_decode`): split-KV online softmax over the
+  un-expanded GQA ring buffer with scalar-prefetched per-slot lengths, so
+  short requests stop paying O(max_len) K/V traffic. ``attn_impl="pallas"``
+  also routes eligible bucketed-prefill layers through the blocked flash
+  attention kernel (power-of-two buckets tile cleanly). Greedy outputs are
+  token-identical across backends (tested); on CPU the kernels run in
+  interpret mode so CI exercises the same code path. Per-step decode
+  latency is tracked separately (``ServingStats.decode_step_ms``) so the
+  serving bench can report the backend speedup.
 * **Expert-parallel serving** (``parallel=ParallelConfig(ep=True, ...)``,
   optional ``mesh``): params are placed per ``param_pspecs(..., ep=True)``
   — each device holds ``expert_bytes / ep_degree`` of every MoE stack —
@@ -108,6 +120,8 @@ class ServingStats:
     prefill_calls: int
     prefill_compilations: int      # distinct compiled prefill shapes
     decode_steps: int
+    decode_time_s: float = 0.0     # wall time inside decode dispatches
+    decode_step_ms: float = 0.0    # mean per-step decode latency
 
 
 class ServingEngine:
@@ -117,10 +131,32 @@ class ServingEngine:
                  bucket_prompts: Optional[bool] = None,
                  min_bucket: int = 8,
                  prefill_batch: Optional[int] = None,
+                 attn_impl: Optional[str] = None,
                  parallel=None, mesh=None):
+        if attn_impl is not None and attn_impl != model.cfg.attn_impl:
+            # build_model closes over cfg, so a backend switch needs a
+            # rebuild (cheap: closures only, no params)
+            import dataclasses
+
+            from repro.models import build_model
+
+            model = build_model(
+                dataclasses.replace(model.cfg, attn_impl=attn_impl))
+        if parallel is not None and model.cfg.attn_impl == "pallas":
+            raise NotImplementedError(
+                "attn_impl='pallas' under expert-parallel serving needs a "
+                "partitioning rule for the pallas_call; use attn_impl='jnp' "
+                "with parallel= (tracked in ROADMAP)")
         self.model = model
         self.cfg = model.cfg
+        self.attn_impl = self.cfg.attn_impl
         self.slots = batch_slots
+        if self.attn_impl == "pallas" and max_len > 128:
+            # flash-decode streams the cache window in 128-row KV tiles;
+            # round the window up so the tile size never degenerates to
+            # gcd(max_len, 128) slivers on TPU (windows <= 128 run as one
+            # tile of any size). Requests simply get a little extra room.
+            max_len += (-max_len) % 128
         self.max_len = max_len
         self.moe_mode = moe_mode
         self.eos_id = eos_id
@@ -198,6 +234,7 @@ class ServingEngine:
         self.prefill_shapes: set = set()
         self.decode_steps = 0
         self._run_time = 0.0
+        self._decode_time = 0.0
         self._prefill_cache_base = 0
 
     def _prefill_fn(self, params, tokens, last_pos):
@@ -355,9 +392,12 @@ class ServingEngine:
             self._admit(retired)
             if not self.slot_live.any():
                 return retired
+            t_dec = time.perf_counter()
             logits, self.cache = self._call(
                 self._decode, self.params, jnp.asarray(self.last_token),
                 self.cache)
+            logits.block_until_ready()
+            self._decode_time += time.perf_counter() - t_dec
             sampling = [self.active[s].sampling if self.slot_live[s] else None
                         for s in range(self.slots)]
             counters = [len(self.active[s].generated) if self.slot_live[s]
@@ -404,6 +444,7 @@ class ServingEngine:
         self.prefill_shapes = set()
         self.decode_steps = 0
         self._run_time = 0.0
+        self._decode_time = 0.0
         self._prefill_cache_base = self._jit_prefill_cache_size() or 0
 
     def prefill_compilations(self) -> int:
@@ -440,4 +481,7 @@ class ServingEngine:
             prefill_calls=self.prefill_calls,
             prefill_compilations=self.prefill_compilations(),
             decode_steps=self.decode_steps,
+            decode_time_s=self._decode_time,
+            decode_step_ms=(self._decode_time * 1e3 / self.decode_steps
+                            if self.decode_steps else 0.0),
         )
