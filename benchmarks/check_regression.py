@@ -1,0 +1,140 @@
+"""Bench-regression gate: compare a fresh ``serving_bench.py --json`` run
+against the committed ``results/BENCH_serving.json`` baseline.
+
+CI runs::
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --fast --json fresh.json
+  python benchmarks/check_regression.py --fresh fresh.json
+
+and fails the job when any (model, moe_mode, attn_impl) row regresses
+beyond ``--tolerance`` (default 2.0x — generous, because CI boxes are
+noisy CPU runners and the pallas backend runs in interpret mode there):
+
+* ``decode_step_ms``  must not exceed ``baseline * tolerance``
+* ``tokens_per_s``    must not drop below ``baseline / tolerance``
+
+The paged table (``paged.rows``, keyed by ``config``) is gated on
+``tokens_per_s`` the same way. Rows present on only one side are reported
+but never fail the gate (new configurations must be able to land before
+they have a baseline). Runs on a different jax backend skip the whole
+gate with exit 0; a table whose own workload stanza changed is skipped
+per-table — comparing either would gate on noise, not regressions. The
+bench records each row's best-of-N timed repetition (compile excluded),
+so the numbers being compared are floors, not single noisy samples.
+
+Re-baselining: see benchmarks/README.md (short version: re-run the bench
+with ``--fast --json results/BENCH_serving.json`` and commit the result
+together with the change that legitimately moved the numbers).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_serving.json")
+
+
+def _key(row) -> tuple:
+    return (row["model"], row["moe_mode"], row["attn_impl"])
+
+
+def _index(payload, table: str, keyfn):
+    if table == "rows":
+        rows = payload.get("rows", [])
+    else:
+        rows = payload.get("paged", {}).get("rows", [])
+    return {keyfn(r): r for r in rows}
+
+
+def _check_metric(name, key, base, fresh, tol, worse_high: bool):
+    """Returns (verdict, message); verdict True = regression."""
+    if not base or not fresh or base <= 0 or fresh <= 0:
+        return False, None
+    ratio = fresh / base
+    if worse_high:
+        bad = ratio > tol
+        arrow = f"{base:.3g} -> {fresh:.3g} ({ratio:.2f}x, limit {tol:.1f}x)"
+    else:
+        bad = ratio < 1.0 / tol
+        arrow = (f"{base:.3g} -> {fresh:.3g} ({ratio:.2f}x, "
+                 f"limit {1.0 / tol:.2f}x)")
+    tag = "REGRESSION" if bad else "ok"
+    return bad, f"  [{tag}] {'/'.join(map(str, key))} {name}: {arrow}"
+
+
+def compare(base: dict, fresh: dict, tolerance: float) -> int:
+    if base.get("backend") != fresh.get("backend"):
+        print(f"# backend changed ({base.get('backend')} -> "
+              f"{fresh.get('backend')}): baseline not comparable, skipping "
+              "gate (re-baseline on the new backend)")
+        return 0
+
+    regressions = 0
+    checked = 0
+    # each table carries its own workload stanza; a changed workload makes
+    # THAT table incomparable (skip + re-baseline) without silencing the
+    # gate on the other
+    for table, keyfn, metrics, wl in (
+        ("rows", _key, (("decode_step_ms", True), ("tokens_per_s", False)),
+         "workload"),
+        ("paged", lambda r: (r["config"],), (("tokens_per_s", False),),
+         "paged workload"),
+    ):
+        if table == "rows":
+            b_wl, f_wl = base.get("workload"), fresh.get("workload")
+        else:
+            b_wl = base.get("paged", {}).get("workload")
+            f_wl = fresh.get("paged", {}).get("workload")
+        if b_wl != f_wl:
+            print(f"# {wl} changed vs baseline: skipping the '{table}' "
+                  "table (re-baseline with the new workload)")
+            continue
+        b_rows = _index(base, table, keyfn)
+        f_rows = _index(fresh, table, keyfn)
+        for k in sorted(set(b_rows) | set(f_rows), key=str):
+            if k not in b_rows:
+                print(f"  [new] {'/'.join(map(str, k))}: no baseline yet")
+                continue
+            if k not in f_rows:
+                print(f"  [gone] {'/'.join(map(str, k))}: row vanished from "
+                      "the fresh run (bench coverage shrank?)")
+                continue
+            for metric, worse_high in metrics:
+                bad, msg = _check_metric(metric, k, b_rows[k].get(metric),
+                                         f_rows[k].get(metric), tolerance,
+                                         worse_high)
+                if msg:
+                    checked += 1
+                    print(msg)
+                if bad:
+                    regressions += 1
+    print(f"# {checked} metric(s) checked, {regressions} regression(s) at "
+          f"{tolerance:.1f}x tolerance")
+    return 1 if regressions else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="committed baseline JSON (default: "
+                         "results/BENCH_serving.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="JSON written by this run's serving_bench.py")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="allowed slowdown factor before the gate fails "
+                         "(default 2.0 — CPU CI noise headroom)")
+    args = ap.parse_args()
+    if args.tolerance <= 1.0:
+        ap.error("--tolerance must be > 1.0")
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    return compare(base, fresh, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,6 @@ from repro.core.quality import cluster_quality_report, output_fidelity
 from repro.data import TokenStream
 
 from benchmarks.common import emit_csv, record, timed
-import jax
 
 
 def run(ctx):

@@ -48,7 +48,6 @@ def analytic_rows():
 
 def measured_throughput(ctx):
     """Tiny-model serving tokens/s before vs after 50% merging."""
-    import jax
     import numpy as np
 
     from repro.core import HCSMoEConfig, apply_hcsmoe

@@ -14,7 +14,16 @@ Emits ``serving/<model>/<mode>/<attn_impl>`` rows (us_per_call = us per
 generated token; derived = ``tok_s=..;ttft_ms=..;decode_ms=..``) and writes
 ``results/BENCH_serving.json`` (schema: moe path x attn impl x merged ->
 tokens/s, TTFT, decode step ms) so future PRs can regress-check the perf
-trajectory. On a no-TPU box the pallas backend runs in interpret mode —
+trajectory — CI enforces it via ``benchmarks/check_regression.py`` (see
+benchmarks/README.md for the re-baselining contract).
+
+A second table drives a MIXED short/long prompt workload through three KV
+configurations — contiguous, paged, and paged+chunked-prefill — reporting
+the KV bytes actually resident (page-pool peak) vs contiguous
+provisioning, plus the TTFT and decode-stall (longest single engine step)
+deltas that chunked prefill buys the co-tenants of a long prompt.
+
+On a no-TPU box the pallas backend runs in interpret mode —
 wall-clock there measures the interpreter, not the kernel — so the JSON
 also carries the analytic per-step FLOP/byte accounting
 (:func:`repro.kernels.flash_decode.decode_attn_accounting`) that quantifies
@@ -58,9 +67,12 @@ def _workload(cfg, *, n_requests, max_new, seed=0):
             for i, n in enumerate(lens)]
 
 
+REPEATS = 3  # timed repetitions per row; the BEST one is recorded
+
+
 def _serve_once(model, params, cfg, moe_mode, *, n_requests, max_new,
                 slots=4, max_len=64, attn_impl="jnp", parallel=None,
-                mesh=None):
+                mesh=None, repeats=REPEATS):
     from repro.serving import ServingEngine
 
     engine = ServingEngine(model, params, batch_slots=slots, max_len=max_len,
@@ -68,16 +80,139 @@ def _serve_once(model, params, cfg, moe_mode, *, n_requests, max_new,
                            parallel=parallel, mesh=mesh)
     # warm-up with the IDENTICAL workload so every prefill bucket shape the
     # timed window will hit is already compiled (same seed -> same prompt
-    # lengths -> same admission groupings)
+    # lengths -> same admission groupings); then record the BEST of
+    # `repeats` timed repetitions — single CPU-runner samples swing by
+    # multiples on a noisy box, and the regression gate needs a floor,
+    # not a lottery ticket
     for r in _workload(cfg, n_requests=n_requests, max_new=max_new):
         engine.submit(r)
     engine.run()
-    engine.reset_stats()
 
-    for r in _workload(cfg, n_requests=n_requests, max_new=max_new):
+    best = None
+    for _ in range(repeats):
+        engine.reset_stats()
+        for r in _workload(cfg, n_requests=n_requests, max_new=max_new):
+            engine.submit(r)
+        engine.run()
+        st = engine.stats()
+        if best is None or st.tokens_per_s > best.tokens_per_s:
+            best = st
+    return best, engine
+
+
+def _mixed_workload(cfg, *, n_short, n_long, long_len, max_new, seed=0):
+    rng = np.random.RandomState(seed)
+    from repro.serving import Request
+
+    lens = list(rng.choice(WORKLOAD_LENS, size=n_short)) + [long_len] * n_long
+    rng.shuffle(lens)
+    return [Request(uid=i,
+                    prompt=rng.randint(0, cfg.vocab_size, int(n))
+                    .astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lens)]
+
+
+def _serve_paged_config(model, cfg, params, *, label, engine_kw, n_short,
+                        n_long, long_len, max_new, slots, max_len):
+    from repro.serving import ServingEngine
+
+    engine = ServingEngine(model, params, batch_slots=slots, max_len=max_len,
+                           **engine_kw)
+    wl = dict(n_short=n_short, n_long=n_long, long_len=long_len,
+              max_new=max_new)
+    for r in _mixed_workload(cfg, **wl):     # warm-up: compile every shape
         engine.submit(r)
     engine.run()
-    return engine.stats(), engine
+    # best-of-N timed repetitions, like _serve_once (gate needs a floor)
+    st = best_finished = None
+    for _ in range(REPEATS):
+        engine.reset_stats()
+        for r in _mixed_workload(cfg, **wl):
+            engine.submit(r)
+        engine.run()
+        rep = engine.stats()
+        if st is None or rep.tokens_per_s > st.tokens_per_s:
+            st, best_finished = rep, list(engine.finished)
+    mem = engine.kv_memory()
+    short_ttft = [r.ttft for r in best_finished
+                  if len(r.prompt) < long_len]
+    long_ttft = [r.ttft for r in best_finished
+                 if len(r.prompt) >= long_len]
+    return {
+        "config": label,
+        "tokens_per_s": st.tokens_per_s,
+        "mean_ttft_s": st.mean_ttft_s,
+        "short_ttft_s": float(np.mean(short_ttft)) if short_ttft else 0.0,
+        "long_ttft_s": float(np.mean(long_ttft)) if long_ttft else 0.0,
+        "decode_step_ms": st.decode_step_ms,
+        "max_step_s": st.max_step_s,
+        "prefill_chunk_calls": st.prefill_chunk_calls,
+        "prefill_compilations": st.prefill_compilations,
+        "kv_pages_peak": st.kv_pages_peak,
+        "kv_pages_total": st.kv_pages_total,
+        "kv_page_util": st.kv_page_util,
+        "kv_bytes_peak": st.kv_bytes_peak,
+        "kv_bytes_provisioned": mem["kv_bytes_provisioned"],
+        "kv_bytes_contiguous": mem["kv_bytes_contiguous"],
+    }
+
+
+def run_paged(ctx, json_payload):
+    """Paged-KV / chunked-prefill table on the ragged MoE path."""
+    from benchmarks.common import emit_csv, record
+
+    model, cfg, params = ctx.model, ctx.cfg, ctx.params
+    slots, max_len = 4, 64
+    page = 8
+    chunk = 8
+    n_short, n_long = (3, 1) if ctx.fast else (6, 2)
+    long_len = 48
+    max_new = 4 if ctx.fast else 8
+    configs = (
+        ("contiguous", {}),
+        ("paged", dict(kv_layout="paged", kv_page_size=page)),
+        ("paged_chunked", dict(kv_layout="paged", kv_page_size=page,
+                               prefill_chunk=chunk)),
+    )
+    rows = []
+    for label, kw in configs:
+        row = _serve_paged_config(
+            model, cfg, params, label=label, engine_kw=kw, n_short=n_short,
+            n_long=n_long, long_len=long_len, max_new=max_new, slots=slots,
+            max_len=max_len)
+        rows.append(row)
+        us = (1e6 / row["tokens_per_s"]) if row["tokens_per_s"] else 0.0
+        emit_csv(
+            f"serving_paged/{label}", us,
+            f"tok_s={row['tokens_per_s']:.1f};"
+            f"short_ttft_ms={row['short_ttft_s'] * 1e3:.1f};"
+            f"max_step_ms={row['max_step_s'] * 1e3:.1f};"
+            f"kv_peak_B={row['kv_bytes_peak']};"
+            f"kv_contig_B={row['kv_bytes_contiguous']}")
+    record("serving_paged", rows)
+
+    by = {r["config"]: r for r in rows}
+    pk, cg = by["paged"]["kv_bytes_peak"], by["paged"]["kv_bytes_contiguous"]
+    if pk:
+        print(f"# paged KV: peak {pk} B resident vs {cg} B contiguous "
+              f"provisioning ({cg / pk:.1f}x saving on this workload, "
+              f"page util {by['paged']['kv_page_util']:.2f})")
+    stall_m = by["paged"]["max_step_s"]
+    stall_c = by["paged_chunked"]["max_step_s"]
+    if stall_m and stall_c:
+        print(f"# chunked prefill: longest engine step "
+              f"{stall_m * 1e3:.1f} -> {stall_c * 1e3:.1f} ms "
+              f"({stall_m / stall_c:.2f}x stall reduction), short-prompt "
+              f"TTFT {by['paged']['short_ttft_s'] * 1e3:.1f} -> "
+              f"{by['paged_chunked']['short_ttft_s'] * 1e3:.1f} ms")
+    json_payload["paged"] = {
+        "workload": {"n_short": n_short, "n_long": n_long,
+                     "long_len": long_len, "max_new": max_new,
+                     "slots": slots, "max_len": max_len,
+                     "kv_page_size": page, "prefill_chunk": chunk},
+        "rows": rows,
+    }
 
 
 def run(ctx, impls=ATTN_IMPLS, json_path=JSON_PATH):
@@ -156,7 +291,8 @@ def run(ctx, impls=ATTN_IMPLS, json_path=JSON_PATH):
 
     payload = {
         "schema": "moe path x attn impl x merged -> "
-                  "{tokens_per_s, mean_ttft_s, decode_step_ms}",
+                  "{tokens_per_s, mean_ttft_s, decode_step_ms}; "
+                  "+ paged: kv layout x chunking -> {tok/s, ttft, kv bytes}",
         "backend": __import__("jax").default_backend(),
         "workload": {"n_requests": n_requests, "max_new": max_new,
                      "slots": slots, "max_len": max_len,
@@ -167,6 +303,7 @@ def run(ctx, impls=ATTN_IMPLS, json_path=JSON_PATH):
         "decode_attn_accounting": {"bench_config": accounting,
                                    "at_scale_b8_len2048": at_scale},
     }
+    run_paged(ctx, payload)
     os.makedirs(os.path.dirname(os.path.abspath(json_path)), exist_ok=True)
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

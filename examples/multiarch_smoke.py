@@ -7,7 +7,6 @@ encoder-decoder, and VLM — through the same Model API.
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import build_model

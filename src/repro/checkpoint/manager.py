@@ -13,7 +13,7 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -10,7 +10,7 @@ This keeps the lowered HLO size independent of depth, which is what makes the
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -121,6 +121,16 @@ class ModelConfig:
     #              sliding-window/softcapped prefill) fall back to jnp.
     #              Inference-only: no VJP is defined for the kernels.
     attn_impl: str = "jnp"
+    # serving KV-cache knobs (consumed by ServingEngine defaults):
+    #   kv_page_size  — rows per physical page of the PAGED KV layout
+    #                   (kv_layout="paged"); 128 matches the flash-decode
+    #                   KV tile so one page == one kernel grid tile on TPU.
+    #   prefill_chunk — chunked-prefill threshold AND chunk length: prompts
+    #                   longer than this are prefilled chunk-by-chunk,
+    #                   interleaved with decode steps of the running batch
+    #                   (paged layout only). 0 disables chunking.
+    kv_page_size: int = 128
+    prefill_chunk: int = 0
 
     # FFN
     act: str = "silu"  # silu | gelu
@@ -163,6 +173,14 @@ class ModelConfig:
             raise ValueError(
                 f"{self.name}: attn_impl must be 'jnp' or 'pallas', got "
                 f"{self.attn_impl!r}")
+        if self.kv_page_size < 1:
+            raise ValueError(
+                f"{self.name}: kv_page_size must be >= 1, got "
+                f"{self.kv_page_size}")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"{self.name}: prefill_chunk must be >= 0, got "
+                f"{self.prefill_chunk}")
 
     @property
     def num_blocks(self) -> int:
@@ -267,7 +285,9 @@ class ModelConfig:
                 total += a + t_f + 2 * d
                 active += a + a_f + 2 * d
             # cross attention in every decoder layer
-            ca = self.num_layers * (self.d_model * self.q_dim + 2 * self.d_model * self.kv_dim + self.q_dim * self.d_model)
+            ca = self.num_layers * (self.d_model * self.q_dim
+                                    + 2 * self.d_model * self.kv_dim
+                                    + self.q_dim * self.d_model)
             total += ca
             active += ca
         return total, active

@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import merging as mrg
 from repro.core import metrics as met
 from repro.core.calibration import flatten_stats
 from repro.core.pipeline import _layer_weights, _moe_positions

@@ -12,7 +12,6 @@ from functools import partial
 from typing import List
 
 import jax
-import jax.numpy as jnp
 
 
 def _accumulate(acc, new):

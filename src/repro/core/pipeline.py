@@ -11,9 +11,8 @@ Two merge executors:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

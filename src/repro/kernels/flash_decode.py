@@ -45,6 +45,34 @@ TK = 128
 NEG = -2.0e38
 
 
+def _online_step(q_ref, k_ref, v_ref, kvp_ref, m_scr, l_scr, acc_scr,
+                 pos_b, *, scale, window, logit_cap):
+    """One KV tile of the online softmax, shared by the contiguous and paged
+    kernels: softcap, filled/causal/window masking, rescale, accumulate."""
+    q = q_ref[0]          # (G, hd)
+    k = k_ref[0]          # (TK, hd)
+    v = v_ref[0]
+    kvp = kvp_ref[...]    # (1, TK) int32
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    ok = (kvp >= 0) & (kvp <= pos_b)          # filled & causal
+    if window:
+        ok &= (pos_b - kvp) < window          # sliding-window local
+    s = jnp.where(ok, s, NEG)                 # (1,TK) broadcasts to (G,TK)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # zero masked probs explicitly: a tile with NO valid slot would
+    # otherwise yield exp(NEG - NEG) = 1 for every masked entry
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+
 def _kernel(pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref, m_scr, l_scr,
             acc_scr, *, scale, window, logit_cap, kv_steps, tk, w):
     b = pl.program_id(0)
@@ -61,28 +89,8 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref, m_scr, l_scr,
 
     @pl.when(ki * tk < n_valid)
     def _step():
-        q = q_ref[0]          # (G, hd)
-        k = k_ref[0]          # (TK, hd)
-        v = v_ref[0]
-        kvp = kvp_ref[...]    # (1, TK) int32
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        if logit_cap:
-            s = logit_cap * jnp.tanh(s / logit_cap)
-        ok = (kvp >= 0) & (kvp <= pos_b)          # filled & causal
-        if window:
-            ok &= (pos_b - kvp) < window          # sliding-window local
-        s = jnp.where(ok, s, NEG)                 # (1,TK) broadcasts to (G,TK)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        # zero masked probs explicitly: a tile with NO valid slot would
-        # otherwise yield exp(NEG - NEG) = 1 for every masked entry
-        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
-        acc_scr[...] = (acc_scr[...] * alpha[:, None]
-                        + jnp.dot(p.astype(v.dtype), v,
-                                  preferred_element_type=jnp.float32))
-        m_scr[...] = m_new
+        _online_step(q_ref, k_ref, v_ref, kvp_ref, m_scr, l_scr, acc_scr,
+                     pos_b, scale=scale, window=window, logit_cap=logit_cap)
 
     @pl.when(ki == kv_steps - 1)
     def _finish():
@@ -153,6 +161,123 @@ def flash_decode(q, k, v, kv_pos, pos, *, scale=None, window: int = 0,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(pos, qf, kf, vf, kv_pos)
+    return out.reshape(B, H, hd)
+
+
+def _paged_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, window, logit_cap,
+                  kv_steps, page):
+    del pt_ref  # consumed by the index maps
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos_b = pos_ref[b]
+    # paged caches never wrap: logical row == absolute position, so the
+    # filled prefix is exactly pos+1 rows and — unlike the ring layout,
+    # where old positions scatter across every tile — a sliding window also
+    # bounds the LIVE tiles from below: pages wholly before pos-window hold
+    # only masked rows and are skipped (their DMAs elided by the clamped
+    # index maps).
+    run = ki * page < pos_b + 1
+    if window:
+        # live rows are kvp >= pos-window+1, so a tile is live iff its last
+        # row (ki+1)*page - 1 reaches that bound — this gate must match
+        # _live_tile's `first` exactly, or a dead tile would run on the
+        # first live page's clamped DMA and double-count it
+        run &= (ki + 1) * page > pos_b - window + 1
+
+    @pl.when(run)
+    def _step():
+        _online_step(q_ref, k_ref, v_ref, kvp_ref, m_scr, l_scr, acc_scr,
+                     pos_b, scale=scale, window=window, logit_cap=logit_cap)
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q, k_pool, v_pool, kv_pos, page_table, pos, *,
+                       scale=None, window: int = 0, logit_cap: float = 0.0,
+                       interpret: bool = False):
+    """Page-table-aware split-KV flash decode.
+
+    q: (B, H, hd); k_pool, v_pool: (N, page, K, hd) shared physical pools;
+    kv_pos: (N, page) int32 absolute positions (-1 = unfilled); page_table:
+    (B, P) int32 physical page ids (0 = reserved null page for unallocated
+    entries); pos: (B,) int32 query positions. Returns (B, H, hd).
+
+    The grid is (B, K, P) with one KV tile per page. Both scalars are
+    prefetched to SMEM: ``pos`` drives the length-aware skip exactly like
+    the contiguous kernel, and ``page_table`` is consumed by the K/V/kv_pos
+    index maps, which gather each grid tile's PHYSICAL page. Skipped tiles
+    clamp onto the slot's last live page so the pipelined DMA re-targets an
+    already-resident block (elided) instead of streaming dead pool lines —
+    unallocated pages are never fetched.
+    """
+    B, H, hd = q.shape
+    N, page, K, _ = k_pool.shape
+    P = page_table.shape[1]
+    G = H // K
+    assert H == K * G, (H, K)
+    scale = scale or 1.0 / (hd ** 0.5)
+
+    qf = q.reshape(B * K, G, hd)
+    kf = k_pool.reshape(N, page, K * hd)
+    vf = v_pool.reshape(N, page, K * hd)
+    pos = pos.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+
+    def _live_tile(pos_s, b, ki):
+        # clamp ki into the slot's live page range; with a sliding window
+        # the live range is two-sided (see _paged_kernel)
+        last = jnp.maximum(pos_s[b], 0) // page
+        first = 0
+        if window:
+            first = jnp.maximum(pos_s[b] - window + 1, 0) // page
+        return jnp.clip(ki, first, last)
+
+    def kv_index(b, kh, ki, pos_s, pt_s):
+        return (pt_s[b, _live_tile(pos_s, b, ki)], 0, kh)
+
+    def kvp_index(b, kh, ki, pos_s, pt_s):
+        return (pt_s[b, _live_tile(pos_s, b, ki)], 0)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, window=window, logit_cap=logit_cap,
+        kv_steps=P, page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, P),
+        in_specs=[
+            pl.BlockSpec((1, G, hd),
+                         lambda b, kh, ki, pos_s, pt_s: (b * K + kh, 0, 0)),
+            pl.BlockSpec((1, page, hd), kv_index),
+            pl.BlockSpec((1, page, hd), kv_index),
+            pl.BlockSpec((1, page), kvp_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, G, hd), lambda b, kh, ki, pos_s, pt_s: (b * K + kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(pos, page_table, qf, kf, vf, kv_pos)
     return out.reshape(B, H, hd)
 
 

@@ -12,7 +12,6 @@ the ~16 MB/core budget; both matmul dims are 128-aligned for the MXU.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

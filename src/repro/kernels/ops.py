@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels import moe_gemm as mg
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import flash_decode_paged as _flash_decode_paged
 from repro.kernels.fused_ffn import fused_ffn as _ffn
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -103,6 +104,17 @@ def flash_decode(q, k, v, kv_pos, pos, *, scale=None, window: int = 0,
     unfilled); pos: (B,) int32. Returns (B,H,hd)."""
     return _flash_decode(q, k, v, kv_pos, pos, scale=scale, window=window,
                          logit_cap=logit_cap, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "logit_cap"))
+def flash_decode_paged(q, k_pool, v_pool, kv_pos, page_table, pos, *,
+                       scale=None, window: int = 0, logit_cap: float = 0.0):
+    """Page-table-aware flash decode over the shared KV pool. q: (B,H,hd);
+    k_pool,v_pool: (N,page,K,hd); kv_pos: (N,page) int32 (-1 = unfilled);
+    page_table: (B,P) int32 (0 = null page); pos: (B,) int32."""
+    return _flash_decode_paged(q, k_pool, v_pool, kv_pos, page_table, pos,
+                               scale=scale, window=window,
+                               logit_cap=logit_cap, interpret=INTERPRET)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,21 @@ def flash_decode_ref(q, k, v, kv_pos, pos, *, scale=None, window: int = 0,
     return out.reshape(B, H, hd)
 
 
+def flash_decode_paged_ref(q, k_pool, v_pool, kv_pos, page_table, pos, *,
+                           scale=None, window: int = 0,
+                           logit_cap: float = 0.0):
+    """Paged decode oracle: gather each slot's logical KV view through its
+    page table (unallocated entries hit the null page, whose kv_pos is -1),
+    then reduce to the contiguous ring oracle."""
+    from repro.models.kvcache import gather_paged_kv
+
+    k = gather_paged_kv(k_pool, page_table)      # (B, P*page, K, hd)
+    v = gather_paged_kv(v_pool, page_table)
+    kvp = gather_paged_kv(kv_pos, page_table)    # (B, P*page)
+    return flash_decode_ref(q, k, v, kvp, pos, scale=scale, window=window,
+                            logit_cap=logit_cap)
+
+
 def fused_ffn_ref(x, wg, wu, wd, act: str = "silu"):
     from repro.models.layers import activation
 

@@ -22,8 +22,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config, shape_skip_reason
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
@@ -229,7 +227,8 @@ def main():
                     r = res["roofline"]
                     extra = (f" bottleneck={r['bottleneck']}"
                              f" t={r['step_time_lower_bound_s']:.4f}s"
-                             f" mem/dev={res['memory'].get('total_bytes_per_device', 0)/2**30:.2f}GiB"
+                             f" mem/dev="
+                             f"{res['memory'].get('total_bytes_per_device', 0) / 2**30:.2f}GiB"
                              f" compile={res['compile_s']}s")
                 elif status == "error":
                     extra = " " + res["error"][:200]

@@ -40,6 +40,20 @@ def main():
                     help="decode/prefill attention backend: 'pallas' runs "
                          "the flash-decode + flash-attention kernels "
                          "(interpret mode on CPU)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="'paged' serves from a shared page pool (block-"
+                         "table allocator, on-demand growth, release on "
+                         "retirement) instead of per-slot max_len rings")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="rows per KV page (default: cfg.kv_page_size)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="physical pages in the pool (default: worst case "
+                         "slots * max_len / page + null page)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: prompts longer than this many "
+                         "tokens prefill chunk-by-chunk interleaved with "
+                         "decode (paged layout only; 0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with per-request seeds")
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -86,6 +100,10 @@ def main():
         max_len=args.prompt_len + args.max_new + 8,
         moe_mode=args.moe_mode, attn_impl=args.attn_impl,
         bucket_prompts=False if args.no_bucketing else None,
+        kv_layout=args.kv_layout,
+        kv_page_size=args.kv_page_size or None,
+        kv_pages=args.kv_pages or None,
+        prefill_chunk=args.prefill_chunk or None,
         parallel=parallel, mesh=mesh)
     if args.ep:
         eb = engine.expert_bytes_per_device()
@@ -112,6 +130,12 @@ def main():
           f"decode step {st.decode_step_ms:.2f} ms [{engine.attn_impl}], "
           f"{st.prefill_calls} prefill calls / "
           f"{st.prefill_compilations} compiled shapes)")
+    if args.kv_layout == "paged":
+        mem = engine.kv_memory()
+        print(f"paged KV: {st.kv_pages_peak}/{st.kv_pages_total} pages peak "
+              f"({st.kv_page_util:.0%} util, {st.prefill_chunk_calls} "
+              f"prefill chunks), {mem['kv_bytes_peak']} B resident peak vs "
+              f"{mem['kv_bytes_contiguous']} B contiguous provisioning")
     for r in finished[:3]:
         print(f"  req {r.uid}: ttft={r.ttft * 1e3:.0f}ms "
               f"{r.tokens_per_s:.1f} tok/s  {r.generated[:10]}...")

@@ -3,11 +3,7 @@ train / prefill / decode steps with explicit in/out shardings, plus their
 ShapeDtypeStruct argument pytrees (zero device allocation)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ShapeConfig, input_specs

@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro.configs import get_config
 from repro.data import TokenStream
 from repro.models import build_model

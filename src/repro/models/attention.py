@@ -21,7 +21,6 @@ backend is inference-only: the kernels define no VJP.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -251,6 +250,64 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
         out = _attend(q, k_buf, v_buf, mask, scale, cfg.attn_logit_softcap)
     out = out.reshape(B, 1, H * hd) @ params["wo"]
     return out, {"k": k_buf, "v": v_buf, "kv_pos": kv_pos}
+
+
+def paged_attention_step(params, cfg, spec_mixer: str, x, paged, cache_layer):
+    """Cached attention over the PAGED KV layout, for 1..C query tokens per
+    slot (C == 1 is a decode step; C > 1 is a chunked-prefill extend).
+
+    x: (B, C, d). ``paged`` carries the step's precomputed coordinates (see
+    ``model.extend``): positions (B, C) absolute query positions, pos (B,),
+    valid (B,) real-token counts (rows >= valid are padding/dead slots whose
+    writes are redirected to the null page), flat (B, C) flattened pool-row
+    write indices, kv_pos (N, page) ALREADY updated for this step's rows,
+    page_table (B, P). cache_layer: {"k","v"} physical pools (N, page, K,
+    hd). Returns (out (B, C, d), new pools).
+
+    Reads: ``attn_impl == "pallas"`` routes single-token steps through the
+    page-table-aware flash-decode kernel (O(resident pages) traffic); the
+    jnp path and multi-token extends gather the slot's logical view through
+    the page table — unallocated entries hit the null page, whose kv_pos is
+    -1, so the standard mask neutralises them.
+    """
+    from repro.models.kvcache import gather_paged_kv
+
+    B, C, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = cfg.attn_scale or 1.0 / (hd ** 0.5)
+    positions = paged["positions"]
+    flat = paged["flat"].reshape(-1)
+
+    q = (x @ params["wq"]).reshape(B, C, H, hd)
+    k_new = (x @ params["wk"]).reshape(B, C, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, C, K, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    k_pool, v_pool = cache_layer["k"], cache_layer["v"]
+    N, page, _, _ = k_pool.shape
+    k_pool = k_pool.reshape(N * page, K, hd).at[flat].set(
+        k_new.reshape(B * C, K, hd)).reshape(N, page, K, hd)
+    v_pool = v_pool.reshape(N * page, K, hd).at[flat].set(
+        v_new.reshape(B * C, K, hd)).reshape(N, page, K, hd)
+    new_cache = {"k": k_pool, "v": v_pool}
+
+    kind = "local" if spec_mixer == "attn_local" else "causal"
+    window = cfg.sliding_window if kind == "local" else 0
+    if cfg.attn_impl == "pallas" and C == 1:
+        from repro.kernels.ops import flash_decode_paged as _fd_paged
+
+        out = _fd_paged(q[:, 0], k_pool, v_pool, paged["kv_pos"],
+                        paged["page_table"], paged["pos"].astype(jnp.int32),
+                        scale=scale, window=window,
+                        logit_cap=cfg.attn_logit_softcap)[:, None]
+    else:
+        k = gather_paged_kv(k_pool, paged["page_table"])   # (B, L, K, hd)
+        v = gather_paged_kv(v_pool, paged["page_table"])
+        kvp = gather_paged_kv(paged["kv_pos"], paged["page_table"])
+        mask = make_mask_fn(kind, cfg.sliding_window)(positions, kvp)
+        out = _attend(q, k, v, mask, scale, cfg.attn_logit_softcap)
+    return out.reshape(B, C, H * hd) @ params["wo"], new_cache
 
 
 def fill_cache_from_prefill(cfg, spec_mixer: str, k, v, positions, max_len: int):

@@ -1,20 +1,48 @@
 """Decode-time cache construction: zeros + specs (via eval_shape, no alloc).
 
-Cache layout mirrors the scanned block structure:
+Two cache layouts coexist:
+
+**Contiguous** (the PR-1..3 layout) mirrors the scanned block structure:
   {"pos": (B,) int32,
    "prefix": (per prefix layer dict,),
    "blocks": (per pattern-position dict, leaves stacked over n_blocks)}
 Attention layers use a ring buffer of length ``cache_window`` (= sliding
-window for local layers); recurrent mixers carry O(1) state.
+window for local layers); recurrent mixers carry O(1) state. Every slot
+owns ``max_len`` rows up front — KV memory is provisioned for the worst
+case.
+
+**Paged** (vLLM-style) replaces the per-slot ring buffers with a shared
+pool of fixed-size pages:
+  {"pos": (B,) int32,
+   "page_table": (B, P) int32        # logical page -> physical page id
+   "kv_pos":     (N, page) int32     # shared across layers (-1 = unfilled)
+   "prefix": (per layer {"k","v"} pools,),
+   "blocks": (stacked {"k","v"} pools,)}
+where every attention layer's k/v pool is ``(N, page, K, hd)``. Page id 0
+is a reserved **null page** that is never allocated: unassigned page-table
+entries point at it, its ``kv_pos`` rows stay -1 forever, so gathers
+through unallocated entries are masked rather than garbage (the same trick
+the flash-decode kernel's DMA-eliding clamp relies on). There is no ring
+wrap in paged mode — logical row == absolute position — which is
+token-identical to the contiguous path because a ring only ever overwrites
+positions the sliding-window mask has already excluded.
+
+Physical pages are handed out by the host-side :class:`PageAllocator`
+(free-list alloc on admission/growth, release on retirement); KV memory
+scales with the tokens actually resident, not ``slots * max_len``.
+Paging supports attention-family mixers only (:func:`supports_paging`).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.attention import cache_window
+
+PAGEABLE_MIXERS = ("attn", "attn_local", "attn_global")
 
 
 def _layer_cache(cfg, spec, batch, max_len, dtype):
@@ -95,3 +123,221 @@ def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     """ShapeDtypeStruct pytree of the cache — zero allocation."""
     return jax.eval_shape(
         partial(init_cache, cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache
+# ---------------------------------------------------------------------------
+
+
+def supports_paging(cfg) -> bool:
+    """True when the paged layout covers every layer's cache: attention-family
+    mixers only (MLA / recurrent mixers keep their own state layouts) and no
+    encoder/cross-attention side caches."""
+    if cfg.family in ("encdec", "vlm"):
+        return False
+    mixers = {s.mixer for s in cfg.pattern}
+    if cfg.first_dense_layers:
+        mixers.add(cfg.pattern[0].mixer)
+    return mixers <= set(PAGEABLE_MIXERS)
+
+
+class PageExhausted(RuntimeError):
+    """The page pool has no free page for a required allocation."""
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the paged KV pool.
+
+    Pages ``1..num_pages-1`` are allocatable; page 0 is the reserved null
+    page. Each serving slot owns an ordered list of pages covering its
+    logical rows ``[0, len)``; :meth:`ensure` grows a slot on demand
+    (admission, chunked prefill, decode crossing a page boundary) and
+    :meth:`release` returns every page of a retired slot to the free list.
+
+    :meth:`reserve` is the admission-time backpressure primitive: it
+    budgets a slot's WORST-CASE page count (prompt + max_new rows) against
+    :attr:`pages_available` without allocating anything, so later
+    :meth:`ensure` growth — a decode step crossing a page boundary, the
+    next prefill chunk — can never exhaust the pool mid-request. Physical
+    pages are still handed out lazily; reservations are pure accounting.
+
+    Invariants (property-tested): a physical page is owned by at most one
+    slot, ``free + owned == num_pages - 1`` at all times, and
+    ``pages_available >= 0``.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(f"num_pages ({num_pages}) must be >= 2 "
+                             "(page 0 is the reserved null page)")
+        if page_size < 1:
+            raise ValueError(f"page_size ({page_size}) must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}
+        self._reserved: Dict[int, int] = {}   # slot -> budgeted page count
+
+    # ------------------------------------------------------------ queries
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_available(self) -> int:
+        """Free pages not spoken for by an outstanding reservation."""
+        unbacked = sum(max(r - len(self._owned.get(s, ())), 0)
+                       for s, r in self._reserved.items())
+        return len(self._free) - unbacked
+
+    def pages_for(self, n_rows: int) -> int:
+        """Pages needed to hold ``n_rows`` logical rows."""
+        return -(-max(n_rows, 0) // self.page_size)
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    # ---------------------------------------------------------- mutation
+    def reserve(self, slot: int, n_rows: int):
+        """Budget pages so ``slot`` can grow to ``n_rows`` rows without
+        ever failing an :meth:`ensure`. Raises :class:`PageExhausted` —
+        with nothing recorded — if the unreserved pool cannot cover it."""
+        need = self.pages_for(n_rows)
+        backed = max(self._reserved.get(slot, 0),
+                     len(self._owned.get(slot, ())))
+        grow = need - backed
+        if grow <= 0:
+            return
+        if grow > self.pages_available:
+            raise PageExhausted(
+                f"slot {slot} needs a budget of {need} page(s) for "
+                f"{n_rows} rows but only {self.pages_available} of "
+                f"{self.num_pages - 1} are unreserved (raise kv_pages or "
+                "admit fewer requests)")
+        self._reserved[slot] = need
+
+    def ensure(self, slot: int, n_rows: int) -> List[int]:
+        """Grow ``slot`` to cover rows ``[0, n_rows)``; returns the newly
+        allocated page ids (empty if already covered). Raises
+        :class:`PageExhausted` — with the slot untouched — if the pool
+        cannot satisfy the growth."""
+        have = self._owned.setdefault(slot, [])
+        need = self.pages_for(n_rows) - len(have)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise PageExhausted(
+                f"slot {slot} needs {need} more page(s) for {n_rows} rows "
+                f"but only {len(self._free)} of {self.num_pages - 1} are "
+                "free (raise kv_pages or shrink the admitted batch)")
+        fresh = [self._free.pop() for _ in range(need)]
+        have.extend(fresh)
+        return fresh
+
+    def release(self, slot: int) -> List[int]:
+        """Free every page of ``slot`` (and drop its reservation); returns
+        the released page ids."""
+        self._reserved.pop(slot, None)
+        pages = self._owned.pop(slot, [])
+        self._free.extend(pages)
+        return pages
+
+    def table_row(self, slot: int, table_len: int):
+        """The slot's page table row, null-padded to ``table_len``."""
+        import numpy as np
+
+        row = np.zeros((table_len,), np.int32)
+        pages = self._owned.get(slot, ())
+        row[:len(pages)] = pages
+        return row
+
+
+def _attn_layer_counts(cfg) -> int:
+    """Number of attention-layer caches (prefix + per-block pattern slots)."""
+    return cfg.first_dense_layers + cfg.num_blocks * len(cfg.pattern)
+
+
+def init_paged_cache(cfg, batch: int, max_len: int, *, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    """Device-side paged cache pytree (see module docstring for layout)."""
+    if not supports_paging(cfg):
+        raise ValueError(
+            f"{cfg.name}: paged KV requires attention-family mixers only")
+    if max_len % page_size:
+        raise ValueError(f"max_len ({max_len}) must be a multiple of "
+                         f"kv_page_size ({page_size})")
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    P = max_len // page_size
+
+    def pool():
+        return {
+            "k": jnp.zeros((num_pages, page_size, K, hd), dtype),
+            "v": jnp.zeros((num_pages, page_size, K, hd), dtype),
+        }
+
+    prefix = tuple(pool() for _ in range(cfg.first_dense_layers))
+    blocks = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[pool() for _ in range(cfg.num_blocks)])
+        for _ in cfg.pattern
+    )
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "page_table": jnp.zeros((batch, P), jnp.int32),
+        "kv_pos": jnp.full((num_pages, page_size), -1, jnp.int32),
+        "prefix": prefix,
+        "blocks": blocks,
+    }
+
+
+def paged_write_coords(page_table, pos, n_tokens: int, page_size: int,
+                       valid):
+    """Flat pool-row indices for writing ``n_tokens`` rows per slot starting
+    at ``pos``. Rows at or beyond ``valid[b]`` are redirected to flat index 0
+    (null page, row 0) so dead slots / tail padding never corrupt live pages;
+    their ``kv_pos`` value is -1. Returns (flat (B, C) int32 into the
+    ``(N * page,)``-flattened pool, positions (B, C), kv_pos_vals (B, C))."""
+    C = n_tokens
+    offs = pos[:, None].astype(jnp.int32) + jnp.arange(C, dtype=jnp.int32)
+    P = page_table.shape[1]
+    pi = jnp.clip(offs // page_size, 0, P - 1)
+    phys = jnp.take_along_axis(page_table, pi, axis=1)
+    flat = phys * page_size + offs % page_size
+    ok = jnp.arange(C, dtype=jnp.int32)[None] < valid[:, None]
+    return (jnp.where(ok, flat, 0), offs,
+            jnp.where(ok, offs, jnp.int32(-1)))
+
+
+def gather_paged_kv(pool, page_table):
+    """Materialise the logical view of a paged pool for the jnp backend:
+    pool (N, page, ...) gathered by page_table (B, P) -> (B, P*page, ...).
+    Unallocated entries gather the null page (kv_pos -1 -> masked)."""
+    g = jnp.take(pool, page_table, axis=0)  # (B, P, page, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_kv_page_bytes(cfg, page_size: int) -> int:
+    """HBM bytes one physical page costs across every attention layer
+    (k + v pools) plus its shared kv_pos rows."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    kv = 2 * page_size * cfg.num_kv_heads * cfg.head_dim * itemsize
+    return _attn_layer_counts(cfg) * kv + page_size * 4  # + int32 kv_pos
+
+
+def contiguous_kv_bytes(cfg, batch: int, max_len: int) -> int:
+    """What the contiguous layout provisions up front: every slot owns a
+    ``cache_window``-row ring (+ kv_pos) in every attention layer."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    total = 0
+    specs = [cfg.pattern[0].mixer] * cfg.first_dense_layers + \
+        [s.mixer for s in cfg.pattern] * cfg.num_blocks
+    for mixer in specs:
+        W = cache_window(cfg, mixer, max_len)
+        total += batch * W * (
+            2 * cfg.num_kv_heads * cfg.head_dim * itemsize + 4)
+    return total

@@ -5,7 +5,7 @@ covering every assigned family (dense, moe, hybrid, ssm, encdec, vlm).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,7 @@ class Model:
     train_loss: Callable
     prefill: Callable
     decode_step: Callable
+    extend: Callable  # paged multi-token cached step (chunked prefill/decode)
 
 
 def build_model(cfg) -> Model:
@@ -236,11 +237,55 @@ def build_model(cfg) -> Model:
                     unroll: bool = False, pc=None):
         """tokens: (B, 1). Returns (logits (B,1,V), new cache)."""
         pos = cache["pos"]  # (B,)
+        if "page_table" in cache:
+            raise ValueError(
+                "decode_step got a PAGED cache; use model.extend(tokens, "
+                "cache, valid) — a single-token extend IS the paged decode "
+                "step")
         h = embed(tokens, params["embed"])
         h, new_cache, _ = apply_stack(params["decoder"], cfg, h, pos,
                                       mode="decode", cache=cache,
                                       moe_mode=moe_mode, unroll=unroll, pc=pc)
         return _logits(params, h, pc), new_cache
 
+    # ------------------------------------------------- extend (paged cache)
+    def extend(params, *, tokens, cache, valid, moe_mode: str = "ragged",
+               unroll: bool = False, pc=None):
+        """Multi-token cached step over a PAGED cache (see
+        :mod:`repro.models.kvcache`).
+
+        tokens: (B, C); valid: (B,) int32 — row counts actually appended per
+        slot (0 freezes a slot entirely: its writes are redirected to the
+        null page and its ``pos`` does not advance). ``C == 1`` with
+        ``valid = 1`` is a decode step; ``C > 1`` is one chunk of a chunked
+        prefill — both run the same compiled function shape-per-C. Returns
+        (logits (B, 1, V) gathered at each slot's LAST VALID row, new
+        cache). Rows at or beyond ``valid`` contribute nothing to any live
+        slot's cache or logits.
+        """
+        from repro.models.kvcache import paged_write_coords
+
+        pos = cache["pos"]
+        page_table = cache["page_table"]
+        kv_pos = cache["kv_pos"]
+        C = tokens.shape[1]
+        page = kv_pos.shape[1]
+        valid = jnp.asarray(valid, jnp.int32)
+        flat, positions, kv_vals = paged_write_coords(
+            page_table, pos, C, page, valid)
+        new_kv_pos = kv_pos.reshape(-1).at[flat.reshape(-1)].set(
+            kv_vals.reshape(-1)).reshape(kv_pos.shape)
+        paged = {"positions": positions, "pos": pos, "valid": valid,
+                 "flat": flat, "kv_pos": new_kv_pos,
+                 "page_table": page_table, "page_size": page}
+        h = embed(tokens, params["embed"])
+        h, new_cache, _ = apply_stack(params["decoder"], cfg, h, positions,
+                                      mode="extend", cache=cache,
+                                      moe_mode=moe_mode, unroll=unroll,
+                                      pc=pc, paged=paged)
+        idx = jnp.maximum(valid - 1, 0)[:, None, None]
+        h_last = jnp.take_along_axis(h, idx, axis=1)
+        return _logits(params, h_last, pc), new_cache
+
     return Model(cfg=cfg, init=init, forward=forward, train_loss=train_loss,
-                 prefill=prefill, decode_step=decode_step)
+                 prefill=prefill, decode_step=decode_step, extend=extend)

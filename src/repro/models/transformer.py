@@ -6,7 +6,6 @@ merged-expert group maps.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -90,8 +89,15 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
                 cache_layer=None, cache_max_len: int = 0,
                 moe_mode: str = "ragged", capture_stats: bool = False,
                 enc_out: Optional[jax.Array] = None,
-                mask_kind: str = "causal", pc=None):
-    """Returns (x, new_cache_layer, aux)."""
+                mask_kind: str = "causal", pc=None, paged=None):
+    """Returns (x, new_cache_layer, aux).
+
+    ``paged`` (decode/extend modes only) carries the paged-KV step
+    coordinates built by ``model.extend``; attention mixers then read/write
+    the shared page pools instead of per-slot ring buffers. ``mode ==
+    "extend"`` is the multi-token cached step (chunked prefill) and is only
+    defined for paged attention layers.
+    """
     if pc is not None:
         from repro.parallel.sharding import gather_layer_params
 
@@ -101,7 +107,15 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
 
     mixer = spec.mixer
-    if mode == "decode":
+    if mode in ("decode", "extend") and paged is not None:
+        if mixer not in ATTN_KINDS:
+            raise ValueError(
+                f"paged KV cache supports attention mixers only, got {mixer}")
+        out, new_cache = attn.paged_attention_step(lp["mixer"], cfg, mixer,
+                                                   h, paged, cache_layer)
+    elif mode == "extend":
+        raise ValueError("mode='extend' requires a paged cache")
+    elif mode == "decode":
         pos = positions  # (B,)
         if mixer in ATTN_KINDS:
             out, new_cache = attn.decode_attention(lp["mixer"], cfg, mixer, h, pos,
@@ -237,7 +251,7 @@ def apply_stack(params, cfg, x, positions, *, mode: str,
                 moe_mode: str = "ragged", capture_stats: bool = False,
                 enc_out: Optional[jax.Array] = None,
                 mask_kind: str = "causal", remat: str = "full",
-                unroll: bool = False, pc=None):
+                unroll: bool = False, pc=None, paged=None):
     """x: (B,S,d) hidden states (post-embedding). Returns
     (x, new_cache, aux) where aux aggregates MoE losses and optional stats."""
 
@@ -255,7 +269,7 @@ def apply_stack(params, cfg, x, positions, *, mode: str,
             params["prefix"][i], cfg, spec, x, positions, mode=mode,
             cache_layer=cl, cache_max_len=cache_max_len, moe_mode=moe_mode,
             capture_stats=capture_stats, enc_out=enc_out, mask_kind=mask_kind,
-            pc=pc)
+            pc=pc, paged=paged)
         new_prefix_cache.append(nc)
         total_lb += aux.get("lb_loss", 0.0)
         total_z += aux.get("z_loss", 0.0)
@@ -281,7 +295,7 @@ def apply_stack(params, cfg, x, positions, *, mode: str,
                 block_params[f"layer{i}"], cfg, spec, xx, positions, mode=mode,
                 cache_layer=cl, cache_max_len=cache_max_len, moe_mode=moe_mode,
                 capture_stats=capture_stats, enc_out=enc_out,
-                mask_kind=mask_kind, pc=pc)
+                mask_kind=mask_kind, pc=pc, paged=paged)
             if seq_constraint is not None:
                 # sequence parallelism: the residual stream lives sharded
                 # over (dp, tp); GSPMD turns the post-block all-reduce into
@@ -321,13 +335,26 @@ def apply_stack(params, cfg, x, positions, *, mode: str,
         unroll=cfg.num_blocks if unroll else 1)
 
     new_cache = None
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "extend"):
         new_blocks = ys[0]
+        if mode == "extend":
+            # paged multi-token step: only the VALID rows advanced the slot
+            new_pos = paged["pos"] + paged["valid"]
+        elif mode == "decode":
+            new_pos = positions + 1
+        else:
+            new_pos = positions[:, -1] + 1
         new_cache = {
-            "pos": (positions[:, -1] + 1 if mode != "decode" else positions + 1),
+            "pos": new_pos,
             "prefix": tuple(new_prefix_cache),
             "blocks": new_blocks,
         }
+        if paged is not None:
+            # shared paged-KV metadata rides at the cache top level: kv_pos
+            # was updated once for this step (model.extend), the page table
+            # is host-managed and passes through unchanged
+            new_cache["kv_pos"] = paged["kv_pos"]
+            new_cache["page_table"] = paged["page_table"]
     aux = {"lb_loss": total_lb, "z_loss": total_z}
     if capture_stats:
         aux["stats"] = ys[1]

@@ -37,7 +37,7 @@ merged slot count does not divide the EP degree, pad with
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax

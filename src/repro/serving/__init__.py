@@ -1,5 +1,7 @@
+from repro.models.kvcache import (  # noqa: F401
+    PageAllocator, PageExhausted, supports_paging)
 from repro.serving.bucketing import (  # noqa: F401
-    bucket_length, num_buckets, supports_bucketing)
+    bucket_length, num_buckets, plan_chunks, supports_bucketing)
 from repro.serving.engine import (  # noqa: F401
     Request, ServingEngine, ServingStats)
 from repro.serving.sampling import GREEDY, SamplingParams  # noqa: F401

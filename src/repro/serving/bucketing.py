@@ -70,6 +70,21 @@ def pad_prompts(prompts: Sequence[np.ndarray], batch: int, length: int,
     return tokens, last_pos
 
 
+def plan_chunks(prompt_len: int, chunk: int) -> List[Tuple[int, int]]:
+    """Chunk spans ``[(start, end), ...]`` for chunked prefill: full
+    ``chunk``-token spans plus a final ragged tail (the engine right-pads
+    the tail to ``chunk`` so every chunk call compiles at ONE shape; padded
+    rows are neutralised by the paged write's valid mask). Replaces the
+    power-of-two bucket blowup for long prompts: a 4k-token prompt costs
+    ceil(4k/chunk) calls of one shape instead of a dedicated 4k bucket."""
+    if prompt_len < 1:
+        raise ValueError(f"prompt length {prompt_len} < 1")
+    if chunk < 1:
+        raise ValueError(f"chunk {chunk} < 1")
+    return [(s, min(s + chunk, prompt_len))
+            for s in range(0, prompt_len, chunk)]
+
+
 def supports_bucketing(cfg, max_len: int) -> bool:
     """True when right-padded prefill is exact for this architecture.
 

@@ -46,6 +46,29 @@ Engine anatomy (and the knobs that control it):
   interpret mode so CI exercises the same code path. Per-step decode
   latency is tracked separately (``ServingStats.decode_step_ms``) so the
   serving bench can report the backend speedup.
+* **KV layout** (``kv_layout="contiguous" | "paged"``, ``kv_page_size``,
+  ``kv_pages``): contiguous is the PR-3 layout — every slot owns a
+  ``max_len``-row ring buffer per layer, provisioned for the worst case.
+  ``"paged"`` switches to the vLLM-style shared page pool
+  (:mod:`repro.models.kvcache`): fixed-size pages handed out by a host-side
+  free-list :class:`~repro.models.kvcache.PageAllocator` on admission,
+  grown on demand as decode crosses page boundaries, and released when a
+  request retires — KV memory tracks the tokens actually resident instead
+  of ``slots * max_len``. Attention reads go through the per-slot page
+  table: the jnp backend gathers the logical view, ``attn_impl="pallas"``
+  runs the page-table-aware flash-decode kernel (page table scalar-
+  prefetched to SMEM; unallocated pages are never fetched). Greedy outputs
+  are token-identical to the contiguous layout (tested). Paged serving
+  currently requires attention-family mixers and no expert parallelism
+  (both rejected with clear errors; paged+EP is a ROADMAP item).
+* **Chunked prefill** (``prefill_chunk``, paged layout only): prompts
+  longer than ``prefill_chunk`` tokens skip the bucketed batch prefill and
+  are instead prefilled chunk-by-chunk through ``model.extend`` —
+  page-by-page cache writes at ONE compiled shape — interleaved with decode
+  steps of the running batch, so a long prompt no longer stalls every
+  in-flight request for one monolithic prefill (``ServingStats.max_step_s``
+  is the stall proxy) and no power-of-two mega-bucket is compiled for it.
+  Short prompts keep the bucketed path unchanged.
 * **Expert-parallel serving** (``parallel=ParallelConfig(ep=True, ...)``,
   optional ``mesh``): params are placed per ``param_pspecs(..., ep=True)``
   — each device holds ``expert_bytes / ep_degree`` of every MoE stack —
@@ -71,9 +94,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.kvcache import init_cache
+from repro.models.kvcache import (
+    PageAllocator, contiguous_kv_bytes, init_cache, init_paged_cache,
+    paged_kv_page_bytes, supports_paging)
 from repro.serving.bucketing import (
-    pad_prompts, plan_admission, supports_bucketing)
+    pad_prompts, plan_admission, plan_chunks, supports_bucketing)
 from repro.serving.sampling import (
     SamplingParams, sample_tokens, sampling_arrays)
 
@@ -91,7 +116,11 @@ class Request:
     t_admit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
-    prefill_time: float = 0.0     # duration of the prefill call it rode in
+    # total prefill wall time this request rode in, ACCUMULATED (+=) so a
+    # chunked prefill sums its chunks exactly once — never overwritten per
+    # call, which would double-count shared calls or drop all but the last
+    # chunk
+    prefill_time: float = 0.0
 
     @property
     def queue_time(self) -> float:
@@ -122,6 +151,15 @@ class ServingStats:
     decode_steps: int
     decode_time_s: float = 0.0     # wall time inside decode dispatches
     decode_step_ms: float = 0.0    # mean per-step decode latency
+    prefill_chunk_calls: int = 0   # chunked-prefill extend dispatches
+    max_step_s: float = 0.0        # longest single engine step (stall proxy)
+    # paged-KV occupancy (zeros under the contiguous layout)
+    kv_pages_total: int = 0        # allocatable pages in the pool
+    kv_pages_in_use: int = 0       # pages owned by resident requests NOW
+    kv_pages_peak: int = 0         # high-water mark since reset_stats
+    kv_page_util: float = 0.0      # kv_pages_peak / kv_pages_total
+    kv_bytes_peak: int = 0         # pages_peak * per-page bytes (all layers)
+    kv_bytes_contiguous: int = 0   # what the contiguous layout provisions
 
 
 class ServingEngine:
@@ -132,7 +170,15 @@ class ServingEngine:
                  min_bucket: int = 8,
                  prefill_batch: Optional[int] = None,
                  attn_impl: Optional[str] = None,
+                 kv_layout: str = "contiguous",
+                 kv_page_size: Optional[int] = None,
+                 kv_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  parallel=None, mesh=None):
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(
+                f"kv_layout must be 'contiguous' or 'paged', got "
+                f"{kv_layout!r}")
         if attn_impl is not None and attn_impl != model.cfg.attn_impl:
             # build_model closes over cfg, so a backend switch needs a
             # rebuild (cheap: closures only, no params)
@@ -157,6 +203,31 @@ class ServingEngine:
             # gcd(max_len, 128) slivers on TPU (windows <= 128 run as one
             # tile of any size). Requests simply get a little extra room.
             max_len += (-max_len) % 128
+
+        self.paged = kv_layout == "paged"
+        # cfg.prefill_chunk only takes effect under the paged layout; an
+        # EXPLICIT prefill_chunk argument with contiguous is an error
+        self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
+                              else model.cfg.prefill_chunk) if self.paged \
+            else 0
+        if self.paged:
+            if parallel is not None:
+                raise NotImplementedError(
+                    "kv_layout='paged' under expert-parallel serving needs "
+                    "sharded page pools; use kv_layout='contiguous' with "
+                    "parallel= (tracked in ROADMAP)")
+            if not supports_paging(model.cfg):
+                raise ValueError(
+                    f"{model.cfg.name}: kv_layout='paged' requires "
+                    "attention-family mixers only (MLA / recurrent state "
+                    "and enc-dec caches keep the contiguous layout)")
+            self.page_size = min(kv_page_size or model.cfg.kv_page_size,
+                                 max_len)
+            max_len += (-max_len) % self.page_size
+        elif prefill_chunk:
+            raise ValueError(
+                "prefill_chunk > 0 requires kv_layout='paged' (chunked "
+                "prefill writes the cache page-by-page)")
         self.max_len = max_len
         self.moe_mode = moe_mode
         self.eos_id = eos_id
@@ -219,11 +290,24 @@ class ServingEngine:
             self._prefill = jax.jit(self._prefill_fn)
         self.params = params
 
-        self.cache = init_cache(self.cfg, batch_slots, max_len,
-                                jnp.dtype(self.cfg.dtype))
+        if self.paged:
+            self.pages_per_slot = self.max_len // self.page_size
+            num_pages = kv_pages or (batch_slots * self.pages_per_slot + 1)
+            self.allocator = PageAllocator(num_pages, self.page_size)
+            self.cache = init_paged_cache(
+                self.cfg, batch_slots, self.max_len, num_pages=num_pages,
+                page_size=self.page_size, dtype=jnp.dtype(self.cfg.dtype))
+            self._extend = jax.jit(self._extend_fn)
+            self._table_dirty = False
+        else:
+            self.allocator = None
+            self.cache = init_cache(self.cfg, batch_slots, max_len,
+                                    jnp.dtype(self.cfg.dtype))
         if self._cache_sh is not None:
             self.cache = jax.device_put(self.cache, self._cache_sh)
         self.active: Dict[int, Request] = {}   # slot -> request
+        # slot -> {"req", "chunks": plan_chunks spans, "next": span index}
+        self.prefilling: Dict[int, dict] = {}
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.last_token = np.zeros((batch_slots, 1), np.int32)
@@ -231,20 +315,31 @@ class ServingEngine:
 
         # telemetry
         self.prefill_calls = 0
+        self.prefill_chunk_calls = 0
         self.prefill_shapes: set = set()
         self.decode_steps = 0
         self._run_time = 0.0
         self._decode_time = 0.0
+        self._max_step_s = 0.0
+        self._kv_pages_peak = 0
         self._prefill_cache_base = 0
 
     def _prefill_fn(self, params, tokens, last_pos):
+        # paged mode splices the transient prefill cache into the page pool
+        # row-by-row, so it only needs to cover the bucket, not max_len
+        cml = tokens.shape[1] if self.paged else self.max_len
         return self.model.prefill(params, tokens=tokens, last_pos=last_pos,
                                   moe_mode=self.moe_mode,
-                                  cache_max_len=self.max_len, pc=self.pc)
+                                  cache_max_len=cml, pc=self.pc)
 
     def _decode_fn(self, params, tokens, cache):
         return self.model.decode_step(params, tokens=tokens, cache=cache,
                                       moe_mode=self.moe_mode, pc=self.pc)
+
+    def _extend_fn(self, params, tokens, cache, valid):
+        return self.model.extend(params, tokens=tokens, cache=cache,
+                                 valid=valid, moe_mode=self.moe_mode,
+                                 pc=self.pc)
 
     def _call(self, fn, *args):
         """Dispatch a jitted model call, under the mesh context in parallel
@@ -300,6 +395,138 @@ class ServingEngine:
             # its in_shardings with zero resharding
             self.cache = jax.device_put(self.cache, self._cache_sh)
 
+    # ------------------------------------------------------- paged helpers
+    def _note_pages(self):
+        self._kv_pages_peak = max(self._kv_pages_peak,
+                                  self.allocator.pages_in_use)
+
+    def _sync_page_table(self):
+        """Push the host allocator's state to the device page table (only
+        when an alloc/release actually changed it)."""
+        if not self._table_dirty:
+            return
+        t = np.stack([self.allocator.table_row(s, self.pages_per_slot)
+                      for s in range(self.slots)])
+        self.cache["page_table"] = jnp.asarray(t)
+        self._table_dirty = False
+
+    def _ensure_pages(self, slot: int, n_rows: int):
+        if self.allocator.ensure(slot, n_rows):
+            self._table_dirty = True
+            self._note_pages()
+
+    def _release_pages(self, slot: int):
+        released = self.allocator.release(slot)
+        if released:
+            # stale kv_pos rows in a recycled page would masquerade as
+            # filled positions for its next owner; reset them to -1 (the
+            # leftover k/v bytes are then masked like any unfilled slot)
+            self.cache["kv_pos"] = self.cache["kv_pos"].at[
+                jnp.asarray(np.asarray(released, np.int32))].set(-1)
+            self._table_dirty = True
+
+    def _worst_rows(self, req: Request) -> int:
+        return len(req.prompt) + req.max_new_tokens
+
+    def _fits_pages(self, n_rows_list) -> bool:
+        """Can the unreserved pool budget these admissions right now?
+        Raises instead of deadlocking when nothing resident could ever
+        free a page. Admission always budgets WORST-CASE rows (prompt +
+        max_new), so an admitted request can never hit pool exhaustion
+        mid-decode or mid-chunk."""
+        need = sum(self.allocator.pages_for(r) for r in n_rows_list)
+        if need <= self.allocator.pages_available:
+            return True
+        if not (self.slot_live.any() or self.prefilling):
+            raise RuntimeError(
+                f"kv_pages pool too small: admission needs a budget of "
+                f"{need} page(s), only {self.allocator.pages_available} of "
+                f"{self.allocator.num_pages - 1} are unreserved and no "
+                "resident request will release any (raise kv_pages)")
+        return False
+
+    def _clamp_to_pool(self, reqs: List[Request], n: int) -> int:
+        """Largest FCFS prefix of ``reqs[:n]`` whose worst-case page
+        budgets the unreserved pool can hold."""
+        budget = self.allocator.pages_available
+        fit = 0
+        for r in reqs[:n]:
+            need = self.allocator.pages_for(self._worst_rows(r))
+            if need > budget:
+                break
+            budget -= need
+            fit += 1
+        if fit == 0:
+            self._fits_pages([self._worst_rows(reqs[0])])  # may raise
+        return fit
+
+    def _splice_paged(self, slots: List[int], cacheN, lens: np.ndarray):
+        """Scatter a CONTIGUOUS prefill cache (ring layout, batch B') into
+        the page pools at ``slots``. Every ring row holding a real absolute
+        position ``0 <= p < len`` lands at its slot's physical page row;
+        padded rows (``kv_pos >= len``) and unfilled rows are dropped. A
+        local layer's ring may have retained fewer than ``len`` positions —
+        exactly the ones the sliding-window mask excludes, so the shared
+        ``kv_pos`` can still mark the full prefix filled."""
+        n = len(slots)
+        page, P = self.page_size, self.pages_per_slot
+        lens = np.asarray(lens, np.int64)
+        for j, s in enumerate(slots):
+            self._ensure_pages(s, int(lens[j]))
+        tables = np.stack([self.allocator.table_row(s, P)
+                           for s in slots]).astype(np.int64)  # (n, P)
+
+        # shared kv_pos: positions 0..len-1 of every admitted slot
+        idx = np.concatenate([
+            tables[j, np.arange(lens[j]) // page] * page
+            + np.arange(lens[j]) % page for j in range(n)])
+        vals = np.concatenate([np.arange(lens[j], dtype=np.int32)
+                               for j in range(n)])
+        kvp = self.cache["kv_pos"]
+        self.cache["kv_pos"] = kvp.reshape(-1).at[jnp.asarray(idx)].set(
+            jnp.asarray(vals)).reshape(kvp.shape)
+
+        def dest(ring_kvp):
+            """Flat pool rows for one layer's ring kv_pos (n, W) plus the
+            selector of ring entries that hold real positions."""
+            valid = (ring_kvp >= 0) & (ring_kvp < lens[:, None])
+            p = np.clip(ring_kvp, 0, None).astype(np.int64)
+            phys = np.take_along_axis(
+                tables, np.minimum(p // page, P - 1), axis=1)
+            flat = phys * page + p % page
+            sel = np.nonzero(valid.reshape(-1))[0]
+            return jnp.asarray(flat.reshape(-1)[sel]), sel
+
+        def scatter(pool, ring, flat, sel, stacked: bool):
+            shp = pool.shape
+            if stacked:  # pool (nb, N, page, K, hd); ring (nb, B', W, K, hd)
+                nb = shp[0]
+                src = ring[:, :n].reshape((nb, -1) + ring.shape[3:])[:, sel]
+                return pool.reshape((nb, shp[1] * shp[2]) + shp[3:]).at[
+                    :, flat].set(src).reshape(shp)
+            src = ring[:n].reshape((-1,) + ring.shape[2:])[sel]
+            return pool.reshape((shp[0] * shp[1],) + shp[2:]).at[
+                flat].set(src).reshape(shp)
+
+        prefix = []
+        for pool_l, ring_l in zip(self.cache["prefix"], cacheN["prefix"]):
+            flat, sel = dest(np.asarray(ring_l["kv_pos"])[:n])
+            prefix.append({k: scatter(pool_l[k], ring_l[k], flat, sel, False)
+                           for k in ("k", "v")})
+        blocks = []
+        for pool_l, ring_l in zip(self.cache["blocks"], cacheN["blocks"]):
+            # ring kv_pos is identical across the stacked blocks (it only
+            # depends on positions and the ring width): index via block 0
+            flat, sel = dest(np.asarray(ring_l["kv_pos"][0])[:n])
+            blocks.append({k: scatter(pool_l[k], ring_l[k], flat, sel, True)
+                           for k in ("k", "v")})
+        self.cache["prefix"] = tuple(prefix)
+        self.cache["blocks"] = tuple(blocks)
+        self.cache["pos"] = self.cache["pos"].at[
+            jnp.asarray(np.asarray(slots, np.int32))].set(
+            jnp.asarray(lens.astype(np.int32)))
+        self._sync_page_table()
+
     def _record_prefill(self, shape):
         self.prefill_calls += 1
         self.prefill_shapes.add(tuple(shape))
@@ -312,7 +539,7 @@ class ServingEngine:
         now = time.perf_counter()
         for req, slot, tok in zip(reqs, slots, first_tokens):
             req.t_admit = t_admit
-            req.prefill_time = prefill_dt
+            req.prefill_time += prefill_dt
             req.generated.append(int(tok))
             req.t_first_token = now
             self.last_token[slot, 0] = int(tok)
@@ -320,16 +547,58 @@ class ServingEngine:
             self.slot_live[slot] = True
             self._maybe_retire(slot, int(tok), retired)
 
+    def _is_chunked(self, req: Request) -> bool:
+        return bool(self.prefill_chunk) and \
+            len(req.prompt) > self.prefill_chunk
+
     def _admit(self, retired: List[Request]):
         while self.queue:
-            free = [s for s in range(self.slots) if not self.slot_live[s]]
+            free = [s for s in range(self.slots)
+                    if not self.slot_live[s] and s not in self.prefilling]
             if not free:
                 return
+            if self._is_chunked(self.queue[0]):
+                # long prompt: occupy a slot now, prefill it chunk-by-chunk
+                # interleaved with decode (see _advance_prefills) — no
+                # power-of-two mega-bucket is compiled for it. The full
+                # worst-case page budget is reserved up front so later
+                # chunks and decode growth can never exhaust the pool.
+                if not self._fits_pages([self._worst_rows(self.queue[0])]):
+                    return  # wait: retirements release budgeted pages
+                req = self.queue.pop(0)
+                self.allocator.reserve(free[0], self._worst_rows(req))
+                req.t_admit = time.perf_counter()
+                # a reused slot's cache pos is stale from its previous
+                # tenant; chunk writes derive their rows from it, so the
+                # slot must restart at 0 before the first chunk
+                self.cache["pos"] = self.cache["pos"].at[free[0]].set(0)
+                self.prefilling[free[0]] = {
+                    "req": req,
+                    "chunks": plan_chunks(len(req.prompt),
+                                          self.prefill_chunk),
+                    "next": 0,
+                }
+                continue
             if self.bucket_prompts:
-                n, L = plan_admission(
-                    [len(r.prompt) for r in self.queue], len(free),
-                    self.prefill_batch, self.min_bucket, self.max_len)
+                lens = []
+                for r in self.queue:
+                    if self._is_chunked(r):
+                        break  # FCFS: never reorder past a chunked prompt
+                    lens.append(len(r.prompt))
+                n, L = plan_admission(lens, len(free),
+                                      self.prefill_batch, self.min_bucket,
+                                      self.max_len)
+                if self.paged:
+                    n = self._clamp_to_pool(self.queue, n)
+                    if n == 0:
+                        return
+                    from repro.serving.bucketing import bucket_length
+                    L = bucket_length(max(lens[:n]), self.min_bucket,
+                                      self.max_len)
                 take = [self.queue.pop(0) for _ in range(n)]
+                if self.paged:
+                    for req, slot in zip(take, free):
+                        self.allocator.reserve(slot, self._worst_rows(req))
                 Bp = self.prefill_batch
                 tokens, last_pos = pad_prompts(
                     [r.prompt for r in take], Bp, L)
@@ -342,7 +611,10 @@ class ServingEngine:
                 self._record_prefill((Bp, L))
                 lens = np.asarray([len(r.prompt) for r in take], np.int32)
                 slots = free[:n]
-                self._splice(slots, cacheN, lens)
+                if self.paged:
+                    self._splice_paged(slots, cacheN, lens)
+                else:
+                    self._splice(slots, cacheN, lens)
                 sampling = [r.sampling for r in take] + [None] * (Bp - n)
                 counters = [0] * Bp
                 toks = np.asarray(sample_tokens(
@@ -350,6 +622,12 @@ class ServingEngine:
                 self._assign(take, slots, toks[:n], t0 + dt, dt, retired)
             else:
                 # exact-length single-request prefill (recurrent mixers etc.)
+                if self.paged:
+                    if not self._fits_pages(
+                            [self._worst_rows(self.queue[0])]):
+                        return
+                    self.allocator.reserve(
+                        free[0], self._worst_rows(self.queue[0]))
                 req = self.queue.pop(0)
                 t0 = time.perf_counter()
                 logits, cache1 = self._call(
@@ -359,11 +637,65 @@ class ServingEngine:
                 logits.block_until_ready()
                 dt = time.perf_counter() - t0
                 self._record_prefill((1, len(req.prompt)))
-                self._splice(free[:1], cache1,
-                             np.asarray([len(req.prompt)], np.int32))
+                lens1 = np.asarray([len(req.prompt)], np.int32)
+                if self.paged:
+                    self._splice_paged(free[:1], cache1, lens1)
+                else:
+                    self._splice(free[:1], cache1, lens1)
                 tok = np.asarray(sample_tokens(
                     logits[:, 0], *sampling_arrays([req.sampling], [0])))
                 self._assign([req], free[:1], tok[:1], t0 + dt, dt, retired)
+
+    def _advance_prefills(self, retired: List[Request]):
+        """Feed the next chunk to every prefilling slot — ONE batched
+        ``extend`` dispatch at a single compiled shape (slots, chunk); tail
+        chunks are right-padded and neutralised by the paged write's valid
+        mask. Slots whose prompt completes sample their first token and
+        join the decode batch."""
+        if not self.prefilling:
+            return
+        C = self.prefill_chunk
+        tokens = np.zeros((self.slots, C), np.int32)
+        valid = np.zeros((self.slots,), np.int32)
+        for s, st in self.prefilling.items():
+            start, end = st["chunks"][st["next"]]
+            tokens[s, :end - start] = st["req"].prompt[start:end]
+            valid[s] = end - start
+            self._ensure_pages(s, end)
+        self._sync_page_table()
+        t0 = time.perf_counter()
+        logits, self.cache = self._call(
+            self._extend, self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(valid))
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.prefill_chunk_calls += 1
+        finishing = []
+        for s, st in list(self.prefilling.items()):
+            st["next"] += 1
+            # chunk wall time accrues on the requests riding THIS call,
+            # once per chunk (prefill_time is += everywhere, never =)
+            st["req"].prefill_time += dt
+            if st["next"] >= len(st["chunks"]):
+                finishing.append(s)
+        if not finishing:
+            return
+        sampling = [None] * self.slots
+        counters = [0] * self.slots
+        for s in finishing:
+            sampling[s] = self.prefilling[s]["req"].sampling
+        toks = np.asarray(sample_tokens(
+            logits[:, 0], *sampling_arrays(sampling, counters)))
+        now = time.perf_counter()
+        for s in finishing:
+            req = self.prefilling.pop(s)["req"]
+            tok = int(toks[s])
+            req.generated.append(tok)
+            req.t_first_token = now
+            self.last_token[s, 0] = tok
+            self.active[s] = req
+            self.slot_live[s] = True
+            self._maybe_retire(s, tok, retired)
 
     # ------------------------------------------------------------ retirement
     def _maybe_retire(self, slot: int, tok: int, retired: List[Request]):
@@ -374,6 +706,8 @@ class ServingEngine:
             req.t_done = time.perf_counter()
             del self.active[slot]
             self.slot_live[slot] = False
+            if self.paged:
+                self._release_pages(slot)
             self.finished.append(req)
             retired.append(req)
 
@@ -390,12 +724,29 @@ class ServingEngine:
         try:
             retired: List[Request] = []
             self._admit(retired)
+            if self.paged:
+                self._advance_prefills(retired)
             if not self.slot_live.any():
                 return retired
+            if self.paged:
+                # grow any slot whose next decode write crosses into an
+                # unallocated page, then push the table to the device
+                for s, req in self.active.items():
+                    self._ensure_pages(
+                        s, len(req.prompt) + len(req.generated))
+                self._sync_page_table()
             t_dec = time.perf_counter()
-            logits, self.cache = self._call(
-                self._decode, self.params, jnp.asarray(self.last_token),
-                self.cache)
+            if self.paged:
+                # a single-token extend IS the paged decode step; dead and
+                # still-prefilling slots are frozen via valid=0
+                logits, self.cache = self._call(
+                    self._extend, self.params, jnp.asarray(self.last_token),
+                    self.cache,
+                    jnp.asarray(self.slot_live.astype(np.int32)))
+            else:
+                logits, self.cache = self._call(
+                    self._decode, self.params, jnp.asarray(self.last_token),
+                    self.cache)
             logits.block_until_ready()
             self._decode_time += time.perf_counter() - t_dec
             sampling = [self.active[s].sampling if self.slot_live[s] else None
@@ -412,7 +763,9 @@ class ServingEngine:
                 self._maybe_retire(slot, tok, retired)
             return retired
         finally:
-            self._run_time += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._run_time += dt
+            self._max_step_s = max(self._max_step_s, dt)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Drive the engine until the queue and all slots drain (or
@@ -421,7 +774,8 @@ class ServingEngine:
         :meth:`step` (not double-counted here)."""
         finished: List[Request] = []
         steps = 0
-        while (self.queue or self.slot_live.any()) and steps < max_steps:
+        while (self.queue or self.slot_live.any() or self.prefilling) \
+                and steps < max_steps:
             finished.extend(self.step())
             steps += 1
         return finished
@@ -441,10 +795,14 @@ class ServingEngine:
         post-reset stats begin clean."""
         self.finished = []
         self.prefill_calls = 0
+        self.prefill_chunk_calls = 0
         self.prefill_shapes = set()
         self.decode_steps = 0
         self._run_time = 0.0
         self._decode_time = 0.0
+        self._max_step_s = 0.0
+        self._kv_pages_peak = (self.allocator.pages_in_use if self.paged
+                               else 0)
         self._prefill_cache_base = self._jit_prefill_cache_size() or 0
 
     def prefill_compilations(self) -> int:
@@ -464,10 +822,34 @@ class ServingEngine:
 
         return expert_param_bytes_per_device(self.params)
 
+    def kv_memory(self) -> dict:
+        """KV memory accounting: what this engine actually holds vs what the
+        contiguous layout provisions for the same ``(slots, max_len)``."""
+        contig = contiguous_kv_bytes(self.cfg, self.slots, self.max_len)
+        if not self.paged:
+            return {"layout": "contiguous",
+                    "kv_bytes_provisioned": contig,
+                    "kv_bytes_contiguous": contig}
+        page_b = paged_kv_page_bytes(self.cfg, self.page_size)
+        return {
+            "layout": "paged",
+            "page_size": self.page_size,
+            "page_bytes": page_b,
+            "pages_total": self.allocator.num_pages - 1,
+            "pages_in_use": self.allocator.pages_in_use,
+            "pages_peak": self._kv_pages_peak,
+            "kv_bytes_provisioned": self.allocator.num_pages * page_b,
+            "kv_bytes_peak": self._kv_pages_peak * page_b,
+            "kv_bytes_contiguous": contig,
+        }
+
     def stats(self) -> ServingStats:
         """Aggregate telemetry over every request retired so far."""
         reqs = self.finished
         tokens = sum(len(r.generated) for r in reqs)
+        pages_total = (self.allocator.num_pages - 1) if self.paged else 0
+        page_bytes = (paged_kv_page_bytes(self.cfg, self.page_size)
+                      if self.paged else 0)
         return ServingStats(
             requests=len(reqs),
             total_new_tokens=tokens,
@@ -484,4 +866,15 @@ class ServingEngine:
             decode_time_s=self._decode_time,
             decode_step_ms=(self._decode_time * 1e3 / self.decode_steps
                             if self.decode_steps else 0.0),
+            prefill_chunk_calls=self.prefill_chunk_calls,
+            max_step_s=self._max_step_s,
+            kv_pages_total=pages_total,
+            kv_pages_in_use=(self.allocator.pages_in_use if self.paged
+                             else 0),
+            kv_pages_peak=self._kv_pages_peak,
+            kv_page_util=(self._kv_pages_peak / pages_total
+                          if pages_total else 0.0),
+            kv_bytes_peak=self._kv_pages_peak * page_bytes,
+            kv_bytes_contiguous=contiguous_kv_bytes(
+                self.cfg, self.slots, self.max_len),
         )

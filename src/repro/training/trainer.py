@@ -17,9 +17,9 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +29,7 @@ from repro.parallel.compat import shard_map_compat
 
 from repro.checkpoint import CheckpointManager
 from repro.parallel import ParallelConfig, batch_pspecs, param_pspecs
-from repro.parallel.compression import (
-    compressed_psum_grads, init_error_state)
+from repro.parallel.compression import compressed_psum_grads
 from repro.training.optimizer import (
     OptimizerConfig, OptState, apply_updates, init_opt_state)
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import HCSMoEConfig, apply_hcsmoe, collect_moe_stats, run_hcsmoe
+from repro.core import HCSMoEConfig, apply_hcsmoe, collect_moe_stats
 from repro.core import baselines as bl
 from repro.core.calibration import flatten_stats
 from repro.core.quality import cluster_quality_report, eval_loss, output_fidelity

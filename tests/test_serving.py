@@ -87,6 +87,17 @@ class TestBucketing:
                               min_bucket=8, max_len=64)
         assert (n, L) == (2, 16)  # only first two admitted; max len 11 -> 16
 
+    def test_plan_chunks_spans(self):
+        from repro.serving import plan_chunks
+
+        assert plan_chunks(20, 8) == [(0, 8), (8, 16), (16, 20)]
+        assert plan_chunks(8, 8) == [(0, 8)]
+        assert plan_chunks(1, 8) == [(0, 1)]
+        with pytest.raises(ValueError):
+            plan_chunks(0, 8)
+        with pytest.raises(ValueError):
+            plan_chunks(8, 0)
+
     def test_supports_bucketing_gate(self):
         moe_cfg = get_config("mixtral-8x7b").reduced()
         assert supports_bucketing(moe_cfg, 64)
@@ -448,6 +459,69 @@ def test_pallas_engine_rounds_cache_window(served):
     e3 = ServingEngine(model, params, batch_slots=1, max_len=40,
                        attn_impl="pallas")
     assert e3.max_len == 40
+
+
+def test_stats_report_kv_page_occupancy(served):
+    """ServingStats must expose real page-pool occupancy under the paged
+    layout (pages in use / peak / total, bytes vs contiguous provisioning)
+    and zeros under the contiguous layout — the serving bench reports
+    memory utilisation straight from these fields."""
+    cfg, model, params = served
+    rng = np.random.RandomState(12)
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 10)
+                    .astype(np.int32), max_new_tokens=3) for i in range(3)]
+    engine = ServingEngine(model, params, batch_slots=2, max_len=32,
+                           kv_layout="paged", kv_page_size=8)
+    mid_use = []
+    for r in reqs:
+        engine.submit(r)
+    while engine.queue or engine.slot_live.any():
+        engine.step()
+        mid_use.append(engine.stats().kv_pages_in_use)
+    st = engine.stats()
+    assert st.kv_pages_total == 2 * (32 // 8)
+    assert max(mid_use) == st.kv_pages_peak > 0
+    assert st.kv_pages_in_use == 0          # all released at retirement
+    assert 0 < st.kv_page_util <= 1.0
+    assert 0 < st.kv_bytes_peak < st.kv_bytes_contiguous
+
+    contig = ServingEngine(model, params, batch_slots=2, max_len=32)
+    st0 = contig.stats()
+    assert st0.kv_pages_total == 0 and st0.kv_page_util == 0.0
+    assert st0.kv_bytes_contiguous > 0
+
+
+def test_reset_stats_clears_chunk_and_stall_counters(served):
+    """reset_stats() must clear the chunked-prefill call counter and the
+    max-step stall gauge, and restart the page-peak high-water mark from
+    the CURRENT occupancy (not zero — resident requests still hold pages),
+    so post-warm-up windows report only their own chunks and stalls."""
+    cfg, model, params = served
+    rng = np.random.RandomState(13)
+    engine = ServingEngine(model, params, batch_slots=2, max_len=64,
+                           kv_layout="paged", kv_page_size=8,
+                           prefill_chunk=8)
+    engine.submit(Request(uid=0, prompt=rng.randint(
+        0, cfg.vocab_size, 30).astype(np.int32), max_new_tokens=2))
+    engine.run()
+    st = engine.stats()
+    assert st.prefill_chunk_calls >= 4      # 30 tokens / 8-token chunks
+    assert st.max_step_s > 0
+
+    engine.reset_stats()
+    st = engine.stats()
+    assert st.prefill_chunk_calls == 0 and st.max_step_s == 0.0
+    assert st.kv_pages_peak == 0            # nothing resident right now
+
+    # a request's prefill_time equals the SUM over its chunks, counted
+    # once per chunk (never overwritten by the last chunk's duration)
+    engine.submit(Request(uid=1, prompt=rng.randint(
+        0, cfg.vocab_size, 30).astype(np.int32), max_new_tokens=2))
+    engine.run()
+    st = engine.stats()
+    assert st.prefill_chunk_calls >= 4
+    req = engine.finished[-1]
+    assert req.prefill_time > 0 and st.mean_prefill_s > 0
 
 
 # ---------------------------------------------------------------------------

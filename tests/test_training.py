@@ -1,6 +1,5 @@
 """Training substrate: optimizer, schedule, grad accumulation, checkpointing,
 failure/resume exactness, elastic restore, data determinism, compression."""
-import os
 import shutil
 import tempfile
 
