@@ -1,12 +1,17 @@
 """Table 23 analog: cluster quality (silhouette/Dunn, euclidean & cosine) and
-last-layer output fidelity (L2 / cosine) for HC vs K-means × metric."""
+last-layer output fidelity (L2 / cosine) for HC vs K-means × metric.
+
+Each row is one :class:`repro.core.plan.MergePlan`: clustering runs ONCE in
+``compute_plan`` (the quality metrics read the plan's own labels/features),
+and the merged model is ``apply_plan`` output — the old double work of
+``apply_hcsmoe`` + a second ``compute_groupings`` pass is gone.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HCSMoEConfig, apply_hcsmoe
-from repro.core.pipeline import compute_groupings
+from repro.core import PlanSpec, apply_plan, compute_plan
 from repro.core.quality import cluster_quality_report, output_fidelity
 from repro.data import TokenStream
 
@@ -24,13 +29,14 @@ def run(ctx):
         r = max(1, int(round(cfg.moe.num_experts * frac)))
         for clustering in ["hc", "kmeans_rnd"]:
             for metric in ["expert_output", "weight", "router_logits"]:
-                hc = HCSMoEConfig(target_experts=r, clustering=clustering,
-                                  metric=metric)
-                merged, us = timed(
-                    lambda: apply_hcsmoe(cfg, params, stats, hc)[0])
-                groupings = compute_groupings(cfg, params, stats, hc)
-                qual = [cluster_quality_report(g["features"], g["labels"])
-                        for g in groupings]
+                spec = PlanSpec(target_experts=r, clustering=clustering,
+                                metric=metric)
+                plan, us_plan = timed(
+                    lambda: compute_plan(cfg, params, stats, spec))
+                merged, us_apply = timed(lambda: apply_plan(params, plan))
+                qual = [cluster_quality_report(lp.extras["features"],
+                                               lp.labels)
+                        for lp in plan.layers]
                 qual_avg = {k: float(np.mean([q[k] for q in qual]))
                             for k in qual[0]}
                 fid = output_fidelity(model, params, merged, fid_batches,
@@ -38,7 +44,7 @@ def run(ctx):
                 row = {"reduction": label, "clustering": clustering,
                        "metric": metric, **fid, **qual_avg}
                 rows.append(row)
-                emit_csv(f"quality23/{label}/{clustering}/{metric}", us,
-                         fid["l2_error"])
+                emit_csv(f"quality23/{label}/{clustering}/{metric}",
+                         us_plan + us_apply, fid["l2_error"])
     record("table23_cluster_quality", rows)
     return rows

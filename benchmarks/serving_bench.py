@@ -221,11 +221,20 @@ def run(ctx, impls=ATTN_IMPLS, json_path=JSON_PATH):
 
     model, cfg = ctx.model, ctx.cfg
     params = ctx.params
-    from repro.core import HCSMoEConfig, apply_hcsmoe
+    import tempfile
 
-    merged, _ = apply_hcsmoe(
-        cfg, params, ctx.stats(),
-        HCSMoEConfig(target_experts=max(2, cfg.moe.num_experts // 2)))
+    from repro.checkpoint import load_plan, save_plan
+    from repro.core import PlanSpec, apply_plan, compute_plan
+
+    # merged rows serve a SAVED compression plan: calibration + clustering
+    # run exactly once in compute_plan, the artifact round-trips through
+    # disk, and every merged row below is apply_plan output — zero
+    # calibration recomputation on the serving side
+    spec = PlanSpec(target_experts=max(2, cfg.moe.num_experts // 2))
+    with tempfile.TemporaryDirectory() as td:
+        plan_path = save_plan(os.path.join(td, "plan"),
+                              compute_plan(cfg, params, ctx.stats(), spec))
+        merged = apply_plan(params, load_plan(plan_path))
 
     n_requests = 4 if ctx.fast else 8
     max_new = 4 if ctx.fast else 8

@@ -1,4 +1,4 @@
-"""Atomic, keep-k, mesh-agnostic checkpointing.
+"""Atomic, keep-k, mesh-agnostic checkpointing — and MergePlan persistence.
 
 Arrays are saved as *full* (unsharded) host numpy arrays keyed by their
 pytree path, plus a small JSON manifest — so a checkpoint written under one
@@ -6,6 +6,13 @@ mesh restores under ANY mesh shape (elastic scaling: the restore path simply
 ``jax.device_put``s with the new sharding). Writes go to a temp dir that is
 atomically renamed; a crash mid-write never corrupts the latest checkpoint.
 Includes the data-pipeline step so training resumes bit-exact.
+
+:func:`save_plan` / :func:`load_plan` persist a
+:class:`repro.core.plan.MergePlan` with the same discipline: a human-
+readable ``plan.json`` manifest (provenance: spec, method, expert/layer
+counts, feature hashes) next to a ``plan.npz`` holding the per-layer arrays
+(labels, combine matrices, hidden maps, keep masks, frequencies) with their
+exact dtypes — a reloaded plan applies bit-identically to the in-memory one.
 """
 from __future__ import annotations
 
@@ -122,3 +129,91 @@ class CheckpointManager:
                 leaves.append(val)
             out[group] = jax.tree_util.tree_unflatten(treedef, leaves)
         return out, step
+
+
+# ---------------------------------------------------------------------------
+# MergePlan persistence (JSON manifest + npz arrays, atomic directory)
+# ---------------------------------------------------------------------------
+
+
+def save_plan(directory: str, plan) -> str:
+    """Persist a :class:`repro.core.plan.MergePlan` to ``directory``
+    (created; atomic temp-dir rename like checkpoints). Returns the path."""
+    from repro.core.plan import LAYER_ARRAY_FIELDS, PLAN_FORMAT_VERSION
+
+    parent = os.path.dirname(os.path.abspath(directory)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".tmp_plan_")
+    try:
+        arrays = {}
+        manifest = {
+            "format": "repro.merge_plan",
+            "version": PLAN_FORMAT_VERSION,
+            "kind": plan.kind,
+            "method": plan.method,
+            "spec": plan.spec,
+            "num_experts": plan.num_experts,
+            "num_layers": plan.num_layers,
+            "slots": plan.slots,
+            "default_executor": plan.default_executor,
+            "layers": [],
+        }
+        for i, lp in enumerate(plan.layers):
+            entry = {"pattern_pos": lp.pattern_pos, "block": lp.block,
+                     "target": lp.target, "feature_hash": lp.feature_hash,
+                     "arrays": {}}
+            for name in LAYER_ARRAY_FIELDS:
+                val = getattr(lp, name)
+                if val is None:
+                    continue
+                key = f"{name}_{i}"
+                arrays[key] = np.asarray(val)
+                entry["arrays"][name] = key
+            manifest["layers"].append(entry)
+        np.savez(os.path.join(tmp, "plan.npz"), **arrays)
+        with open(os.path.join(tmp, "plan.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        if os.path.exists(directory):
+            # never destroy the existing plan before the replacement is in
+            # place: move it aside, rename the new dir in, then delete — a
+            # crash at any point leaves at least one intact copy on disk
+            backup = tempfile.mkdtemp(dir=parent, prefix=".tmp_plan_old_")
+            os.rename(directory, os.path.join(backup, "plan"))
+            os.rename(tmp, directory)
+            shutil.rmtree(backup, ignore_errors=True)
+        else:
+            os.rename(tmp, directory)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return directory
+
+
+def load_plan(directory: str):
+    """Reload a plan saved by :func:`save_plan`. Arrays come back with
+    their exact saved dtypes, so applying a reloaded plan is bit-identical
+    to applying the in-memory one."""
+    from repro.core.plan import PLAN_FORMAT_VERSION, LayerPlan, MergePlan
+
+    with open(os.path.join(directory, "plan.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != "repro.merge_plan":
+        raise ValueError(f"{directory}: not a merge-plan directory")
+    if manifest.get("version", 0) > PLAN_FORMAT_VERSION:
+        raise ValueError(
+            f"{directory}: plan format v{manifest.get('version')} is newer "
+            f"than this build (v{PLAN_FORMAT_VERSION})")
+    data = np.load(os.path.join(directory, "plan.npz"))
+    layers = []
+    for entry in manifest["layers"]:
+        kw = {name: data[key] for name, key in entry["arrays"].items()}
+        layers.append(LayerPlan(pattern_pos=entry["pattern_pos"],
+                                block=entry["block"], target=entry["target"],
+                                feature_hash=entry.get("feature_hash"),
+                                **kw))
+    return MergePlan(kind=manifest["kind"], method=manifest["method"],
+                     spec=manifest["spec"],
+                     num_experts=manifest["num_experts"],
+                     num_layers=manifest["num_layers"],
+                     slots=manifest["slots"], layers=layers,
+                     default_executor=manifest["default_executor"])

@@ -3,6 +3,16 @@
 Calibration (Eq. 4 expert-output stats) -> hierarchical clustering (Alg. 1)
 -> weight-space merging (freq/avg/fix-dom/zipit) -> group-map router
 redirect, plus every baseline the paper compares against.
+
+The compression API is plan-based (``docs/compression_api.md``):
+``compute_plan`` produces a serializable :class:`MergePlan`, ``apply_plan``
+writes it into params; ``apply_hcsmoe``/``run_hcsmoe`` remain as shims.
 """
+from repro.core.api import layer_weights, moe_positions  # noqa: F401
 from repro.core.calibration import collect_moe_stats, flatten_stats  # noqa: F401
 from repro.core.pipeline import HCSMoEConfig, apply_hcsmoe, run_hcsmoe  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    MergePlan, PlanMismatchError, PlanSpec, apply_plan, compute_plan,
+    plan_summary)
+from repro.core.registry import (  # noqa: F401
+    register_clustering, register_merge, register_metric, register_planner)

@@ -1,0 +1,37 @@
+"""Public accessors for MoE param/pattern layout.
+
+These used to live as private helpers (``pipeline._layer_weights``,
+``pipeline._moe_positions``) that baselines, quality benchmarks, and tests
+reached into. They are the supported surface for any code that needs to
+address individual expert stacks inside a params pytree.
+
+Params layout reminder: every MoE pattern position ``pos`` holds STACKED
+blocks — ``params["decoder"]["blocks"][f"layer{pos}"]["moe"]["wg"]`` has
+shape ``(n_blocks, E, d, f)`` — so a single (pattern_pos, block) pair
+addresses one concrete MoE layer.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def moe_positions(cfg) -> List[int]:
+    """Pattern positions whose FFN is an MoE (in pattern order)."""
+    return [i for i, s in enumerate(cfg.pattern) if s.ffn == "moe"]
+
+
+def moe_params(params, pos: int) -> dict:
+    """The stacked MoE param dict at pattern position ``pos``."""
+    return params["decoder"]["blocks"][f"layer{pos}"]["moe"]
+
+
+def layer_weights(params, pos: int, block: int) -> Tuple[np.ndarray, ...]:
+    """One MoE layer's expert weights as float32 numpy:
+    ``(wg, wu, wd)`` with shapes ``(E, d, f)``, ``(E, d, f)``, ``(E, f, d)``.
+    """
+    moe = moe_params(params, pos)
+    return (np.asarray(moe["wg"][block], np.float32),
+            np.asarray(moe["wu"][block], np.float32),
+            np.asarray(moe["wd"][block], np.float32))

@@ -8,23 +8,34 @@
             frequency merging (Li et al., 2024), task-agnostic setting
   one_shot_grouping — Table 6's single-pass grouping under any metric
 
-Pruning writes ``router_mask`` (-1e9) so routing renormalises over kept
-experts; weights of pruned experts are zeroed (ragged path then assigns them
-zero tokens and zero FLOPs). Merging baselines reuse the merge machinery.
+Every baseline is a PLAN PRODUCER registered in
+:data:`repro.core.registry.PLANNERS`: it emits a
+:class:`~repro.core.plan.MergePlan` (prune plans carry per-layer ``keep``
+masks that become ``router_mask``; merge baselines carry combine matrices)
+and :func:`~repro.core.plan.apply_plan` is the single write path into
+params. Pruning writes ``router_mask`` (-1e9) so routing renormalises over
+kept experts; weights of pruned experts are zeroed (ragged path then assigns
+them zero tokens and zero FLOPs). The legacy ``f_prune(...) ->
+(params, info)`` style entry points remain as thin shims.
 """
 from __future__ import annotations
 
-from typing import List
+import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as met
+from repro.core.api import layer_weights, moe_params
 from repro.core.calibration import flatten_stats
-from repro.core.pipeline import _layer_weights, _moe_positions
+from repro.core.merging import build_combine_matrix
+from repro.core.plan import (
+    NEG, LayerPlan, MergePlan, PlanSpec, apply_plan, feature_fingerprint)
+from repro.core.registry import register_planner
 
-NEG = -1.0e9
+__all__ = [
+    "NEG", "f_prune", "s_prune", "o_prune", "m_smoe", "one_shot_grouping",
+    "f_prune_plan", "s_prune_plan", "o_prune_plan", "m_smoe_plan",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -46,23 +57,28 @@ def _global_scores_keep(layers, scores: np.ndarray, keep_total: int):
     return keep
 
 
-def _apply_prune(cfg, params, keep_masks: List[np.ndarray], layers):
-    new_params = jax.tree.map(lambda x: x, params)
-    positions = _moe_positions(cfg)
-    by_pos = {p: [] for p in positions}
-    for layer, keep in zip(layers, keep_masks):
-        by_pos[layer["pattern_pos"]].append((layer["block"], keep))
-    for pos in positions:
-        entries = sorted(by_pos[pos])
-        mask = np.stack([k for _, k in entries])  # (n_blocks, E)
-        moe = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
-        rmask = jnp.where(jnp.asarray(mask), 0.0, NEG).astype(jnp.float32)
-        moe["router_mask"] = rmask
-        m = jnp.asarray(mask)[:, :, None, None]
-        moe["wg"] = jnp.where(m, moe["wg"], 0)
-        moe["wu"] = jnp.where(m, moe["wu"], 0)
-        moe["wd"] = jnp.where(m, moe["wd"], 0)
-    return new_params
+def _prune_plan(method: str, cfg, layers, keeps, spec: PlanSpec) -> MergePlan:
+    E = cfg.moe.num_experts
+    plan_layers = [
+        LayerPlan(pattern_pos=l["pattern_pos"], block=l["block"],
+                  target=int(np.asarray(k).sum()),
+                  keep=np.asarray(k, bool),
+                  freq=np.asarray(l["stats"].freq, np.float64))
+        for l, k in zip(layers, keeps)]
+    return MergePlan(kind="prune", method=method,
+                     spec=dataclasses.asdict(spec), num_experts=E,
+                     num_layers=len(plan_layers), slots=E,
+                     layers=plan_layers)
+
+
+def _spec(spec_or_r, method: str, **kw) -> PlanSpec:
+    if isinstance(spec_or_r, PlanSpec):
+        return spec_or_r
+    return PlanSpec(target_experts=int(spec_or_r), method=method, **kw)
+
+
+def _legacy_info(plan: MergePlan) -> dict:
+    return {"keep": np.stack([lp.keep for lp in plan.layers]), "plan": plan}
 
 
 # ---------------------------------------------------------------------------
@@ -70,15 +86,26 @@ def _apply_prune(cfg, params, keep_masks: List[np.ndarray], layers):
 # ---------------------------------------------------------------------------
 
 
-def f_prune(cfg, params, stats, r: int):
+@register_planner("f_prune")
+def f_prune_plan(cfg, params, stats, spec) -> MergePlan:
+    spec = _spec(spec, "f_prune")
     layers = flatten_stats(cfg, stats)
-    scores = np.stack([np.asarray(l["stats"].freq, np.float64) for l in layers])
-    keep = _global_scores_keep(layers, scores, r * len(layers))
-    return _apply_prune(cfg, params, list(keep), layers), {"keep": keep}
+    scores = np.stack([np.asarray(l["stats"].freq, np.float64)
+                       for l in layers])
+    keep = _global_scores_keep(layers, scores,
+                               spec.target_experts * len(layers))
+    return _prune_plan("f_prune", cfg, layers, list(keep), spec)
 
 
-def s_prune(cfg, params, stats, r: int):
+def f_prune(cfg, params, stats, r: int):
+    plan = f_prune_plan(cfg, params, stats, r)
+    return apply_plan(params, plan), _legacy_info(plan)
+
+
+@register_planner("s_prune")
+def s_prune_plan(cfg, params, stats, spec) -> MergePlan:
     """Router-score pruning: accumulate softmax router probs per expert."""
+    spec = _spec(spec, "s_prune")
     layers = flatten_stats(cfg, stats)
     scores = []
     for l in layers:
@@ -87,8 +114,14 @@ def s_prune(cfg, params, stats, r: int):
         probs /= probs.sum(1, keepdims=True)
         scores.append(probs.sum(0))
     scores = np.stack(scores)
-    keep = _global_scores_keep(layers, scores, r * len(layers))
-    return _apply_prune(cfg, params, list(keep), layers), {"keep": keep}
+    keep = _global_scores_keep(layers, scores,
+                               spec.target_experts * len(layers))
+    return _prune_plan("s_prune", cfg, layers, list(keep), spec)
+
+
+def s_prune(cfg, params, stats, r: int):
+    plan = s_prune_plan(cfg, params, stats, r)
+    return apply_plan(params, plan), _legacy_info(plan)
 
 
 # ---------------------------------------------------------------------------
@@ -124,22 +157,25 @@ def _layer_output(wg, wu, wd, router, x, keep_mask, cfg):
     return out
 
 
-def o_prune(cfg, params, stats, r: int, *, samples: int = 64, seed: int = 0):
+@register_planner("o_prune")
+def o_prune_plan(cfg, params, stats, spec) -> MergePlan:
     """Per-layer sampled subset search (the paper samples 10^5 on Qwen; we
-    scale the sample count to the experiment)."""
+    scale ``spec.samples`` to the experiment)."""
+    spec = _spec(spec, "o_prune")
     layers = flatten_stats(cfg, stats)
-    rng = np.random.RandomState(seed)
+    rng = np.random.RandomState(spec.seed)
     E = cfg.moe.num_experts
+    r = spec.target_experts
     keeps = []
     for l in layers:
-        wg, wu, wd = _layer_weights(params, l["pattern_pos"], l["block"])
-        moe_p = params["decoder"]["blocks"][f"layer{l['pattern_pos']}"]["moe"]
+        wg, wu, wd = layer_weights(params, l["pattern_pos"], l["block"])
+        moe_p = moe_params(params, l["pattern_pos"])
         router = np.asarray(moe_p["router"][l["block"]], np.float64)
         x = np.asarray(l["stats"].x_sample, np.float64)
         full_mask = np.ones(E, bool)
         ref = _layer_output(wg, wu, wd, router, x, full_mask, cfg)
         best, best_err = None, np.inf
-        for _ in range(samples):
+        for _ in range(spec.samples):
             cand = np.zeros(E, bool)
             cand[rng.choice(E, r, replace=False)] = True
             err = float(np.linalg.norm(
@@ -147,7 +183,14 @@ def o_prune(cfg, params, stats, r: int, *, samples: int = 64, seed: int = 0):
             if err < best_err:
                 best, best_err = cand, err
         keeps.append(best)
-    return _apply_prune(cfg, params, keeps, layers), {"keep": np.stack(keeps)}
+    return _prune_plan("o_prune", cfg, layers, keeps, spec)
+
+
+def o_prune(cfg, params, stats, r: int, *, samples: int = 64, seed: int = 0):
+    plan = o_prune_plan(cfg, params, stats,
+                        PlanSpec(target_experts=r, method="o_prune",
+                                 samples=samples, seed=seed))
+    return apply_plan(params, plan), _legacy_info(plan)
 
 
 # ---------------------------------------------------------------------------
@@ -171,33 +214,54 @@ def one_shot_grouping(feats: np.ndarray, freq: np.ndarray, r: int) -> np.ndarray
     return labels
 
 
-def m_smoe(cfg, params, stats, r: int, *, metric: str = "router_logits",
-           merge: str = "frequency"):
-    """M-SMoE in the task-agnostic, no-retraining setting (paper §4.1)."""
-    from repro.core.pipeline import build_combine_matrix, merge_stacked_jax
+@register_planner("m_smoe")
+def m_smoe_plan(cfg, params, stats, spec) -> MergePlan:
+    """M-SMoE in the task-agnostic, no-retraining setting (paper §4.1):
+    one-shot grouping under ``spec.metric`` + ``spec.merge`` combine.
 
+    The paper's M-SMoE groups on router logits — pass
+    ``PlanSpec(metric="router_logits")`` (the legacy :func:`m_smoe` shim
+    and the compress CLI default to it for this method)."""
+    spec = _spec(spec, "m_smoe", metric="router_logits")
     layers = flatten_stats(cfg, stats)
-    new_params = jax.tree.map(lambda x: x, params)
-    positions = _moe_positions(cfg)
-    by_pos = {p: [] for p in positions}
-    info = []
+    E = cfg.moe.num_experts
+    r = spec.target_experts
+    plan_layers = []
     for l in layers:
-        weights = _layer_weights(params, l["pattern_pos"], l["block"])
-        feats = met.build_features(metric, stats=l["stats"], weights=weights)
+        weights = layer_weights(params, l["pattern_pos"], l["block"])
+        feats = met.build_features(spec.metric, stats=l["stats"],
+                                  weights=weights)
         freq = np.asarray(l["stats"].freq, np.float64)
         labels = one_shot_grouping(feats, freq, r)
-        by_pos[l["pattern_pos"]].append((l["block"], labels, freq))
-        info.append({"labels": labels, "block": l["block"],
-                     "pattern_pos": l["pattern_pos"]})
-    for pos in positions:
-        entries = sorted(by_pos[pos])
-        moe = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
-        combine = np.stack([
-            build_combine_matrix(labels, freq, merge, r)
-            for _, labels, freq in entries])
-        mg, mu, md = merge_stacked_jax(moe["wg"], moe["wu"], moe["wd"],
-                                       jnp.asarray(combine))
-        moe["wg"], moe["wu"], moe["wd"] = mg, mu, md
-        moe["group_map"] = jnp.asarray(
-            np.stack([labels for _, labels, _ in entries]), jnp.int32)
-    return new_params, {"layers": info}
+        plan_layers.append(LayerPlan(
+            pattern_pos=l["pattern_pos"], block=l["block"], target=r,
+            labels=labels.astype(np.int32), freq=freq,
+            combine=build_combine_matrix(labels, freq, spec.merge, r),
+            feature_hash=feature_fingerprint(feats),
+            extras={"features": feats}))
+    return MergePlan(kind="merge", method="m_smoe",
+                     spec=dataclasses.asdict(spec), num_experts=E,
+                     num_layers=len(plan_layers), slots=r,
+                     layers=plan_layers, default_executor="jax")
+
+
+def _m_smoe_check_spec(spec: PlanSpec) -> None:
+    """m_smoe merges through combine matrices only; reject feature-matching
+    merges at PlanSpec construction (fail-fast), not after calibration."""
+    if spec.merge not in ("average", "frequency"):
+        raise ValueError(
+            f"method 'm_smoe' merges via combine matrices; merge must be "
+            f"'average' or 'frequency', got {spec.merge!r}")
+
+
+m_smoe_plan.check_spec = _m_smoe_check_spec
+
+
+def m_smoe(cfg, params, stats, r: int, *, metric: str = "router_logits",
+           merge: str = "frequency"):
+    plan = m_smoe_plan(cfg, params, stats,
+                       PlanSpec(target_experts=r, method="m_smoe",
+                                metric=metric, merge=merge))
+    info = [{"labels": np.asarray(lp.labels, np.int64), "block": lp.block,
+             "pattern_pos": lp.pattern_pos} for lp in plan.layers]
+    return apply_plan(params, plan), {"layers": info, "plan": plan}

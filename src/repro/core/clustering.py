@@ -4,10 +4,18 @@ All algorithms are deterministic given their inputs (HC unconditionally; the
 K-means/FCM variants given an explicit seed), run offline on (E, D) feature
 matrices, and return integer labels in canonical order (clusters numbered by
 first-member appearance) so downstream merging is reproducible bit-for-bit.
+
+Each algorithm is registered in :data:`repro.core.registry.CLUSTERINGS`
+under the uniform signature ``fn(feats, r, *, linkage, seed) -> (labels,
+membership | None)`` — soft algorithms (FCM) return their membership matrix,
+hard ones return ``None``. ``@register_clustering("name")`` makes a new
+algorithm a valid ``clustering=`` value everywhere at once.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.registry import CLUSTERINGS, register_clustering
 
 LINKAGES = ("single", "complete", "average")
 
@@ -159,14 +167,32 @@ def fcm_cluster(feats: np.ndarray, r: int, m: float = 2.0, seed: int = 0,
     return np.argmax(U, axis=1).astype(np.int64), U
 
 
+# ---------------------------------------------------------------------------
+# Registry entries — the uniform (labels, membership | None) signature
+# ---------------------------------------------------------------------------
+
+
+@register_clustering("hc")
+def _hc(feats, r, *, linkage="average", seed=0):
+    return hierarchical_cluster(feats, r, linkage), None
+
+
+@register_clustering("kmeans_fix")
+def _kmeans_fix(feats, r, *, linkage="average", seed=0):
+    return kmeans_cluster(feats, r, "fix", seed), None
+
+
+@register_clustering("kmeans_rnd")
+def _kmeans_rnd(feats, r, *, linkage="average", seed=0):
+    return kmeans_cluster(feats, r, "rnd", seed), None
+
+
+@register_clustering("fcm")
+def _fcm(feats, r, *, linkage="average", seed=0):
+    return fcm_cluster(feats, r, seed=seed)
+
+
 def cluster(feats: np.ndarray, r: int, method: str = "hc",
             linkage: str = "average", seed: int = 0) -> np.ndarray:
-    if method == "hc":
-        return hierarchical_cluster(feats, r, linkage)
-    if method == "kmeans_fix":
-        return kmeans_cluster(feats, r, "fix", seed)
-    if method == "kmeans_rnd":
-        return kmeans_cluster(feats, r, "rnd", seed)
-    if method == "fcm":
-        return fcm_cluster(feats, r, seed=seed)[0]
-    raise ValueError(method)
+    """Labels-only convenience wrapper over the clustering registry."""
+    return CLUSTERINGS.get(method)(feats, r, linkage=linkage, seed=seed)[0]

@@ -12,29 +12,152 @@ slots. Methods:
   zipit     — full ZipIt-style greedy pairwise feature matching within the
               cluster (reference implementation; orders of magnitude slower,
               Table 9)
+
+Every method is registered in :data:`repro.core.registry.MERGES` as a PLAN
+producer: from (labels, freq, weights, calibration samples) it emits a
+serializable per-layer merge description — either
+
+  * ``combine`` — an ``(r, E)`` convex-combination matrix (frequency /
+    average / FCM soft membership), applied as a single einsum over the
+    stacked expert weights (:func:`merge_stacked_jax`, EP/TP-shardable), or
+  * ``hidden_map`` — an ``(E, f)`` int map routing every expert's hidden
+    feature dim onto a feature dim of its merged slot (fix_dom / zipit,
+    whose feature matching is not an expert-level linear combination),
+    applied by the count-normalised column/row scatter
+    :func:`apply_hidden_map_np`.
+
+Both descriptions are pure data: applying one needs ONLY the original
+weights, which is what makes :class:`repro.core.plan.MergePlan` an offline,
+on-disk artifact. ``@register_merge("name")`` plugs in a new method.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.registry import MERGES, register_merge
+
+FIX_DOM_FEATURES = ("act", "weight", "act+weight")
 
 
 def cluster_alphas(labels: np.ndarray, freq: np.ndarray, method: str):
     """Per-expert merge coefficient alpha_j (normalised within cluster)."""
+    if method not in ("average", "frequency"):
+        raise ValueError(
+            f"cluster_alphas supports 'average'/'frequency', got {method!r}")
     E = labels.shape[0]
     alphas = np.zeros(E, np.float64)
     for c in np.unique(labels):
         members = np.where(labels == c)[0]
         if method == "average":
             alphas[members] = 1.0 / len(members)
-        elif method == "frequency":
+        else:
             fsum = float(freq[members].sum())
             if fsum <= 0:
                 alphas[members] = 1.0 / len(members)
             else:
                 alphas[members] = freq[members] / fsum
-        else:
-            raise ValueError(method)
     return alphas
+
+
+def build_combine_matrix(labels: np.ndarray, freq: np.ndarray, method: str,
+                         num_slots: int) -> np.ndarray:
+    """(num_slots, E) convex combination matrix from labels + frequencies."""
+    alphas = cluster_alphas(labels, freq, method)
+    E = labels.shape[0]
+    M = np.zeros((num_slots, E), np.float32)
+    M[labels, np.arange(E)] = alphas
+    return M
+
+
+# ---------------------------------------------------------------------------
+# Executors — how a merge description turns weights into merged weights
+# ---------------------------------------------------------------------------
+
+
+def merge_stacked_jax(wg, wu, wd, combine):
+    """Sharded merge: combine (L, r, E) convex weights; w* (L, E, d, f).
+
+    A single einsum per tensor, so under pjit each TP/FSDP/EP shard merges
+    its slice locally with zero resharding (DESIGN.md §3)."""
+    c = combine.astype(jnp.float32)
+    mg = jnp.einsum("lre,ledf->lrdf", c, wg.astype(jnp.float32))
+    mu = jnp.einsum("lre,ledf->lrdf", c, wu.astype(jnp.float32))
+    md = jnp.einsum("lre,lefd->lrfd", c, wd.astype(jnp.float32))
+    return mg.astype(wg.dtype), mu.astype(wu.dtype), md.astype(wd.dtype)
+
+
+def apply_combine_np(wg, wu, wd, combine):
+    """Numpy reference of the combine executor (float64 accumulation).
+
+    Row ``c`` of ``combine`` weights every original expert; rows past the
+    layer's live slot count are all-zero and produce zero (dead) slots."""
+    combine = np.asarray(combine, np.float64)
+    out_g = np.stack([(c[:, None, None] * wg).sum(0) for c in combine])
+    out_u = np.stack([(c[:, None, None] * wu).sum(0) for c in combine])
+    out_d = np.stack([(c[:, None, None] * wd).sum(0) for c in combine])
+    return out_g, out_u, out_d
+
+
+def apply_hidden_map_np(wg, wu, wd, labels, hidden_map, num_slots: int):
+    """Count-normalised feature scatter: expert ``e``'s hidden dim ``j``
+    lands on dim ``hidden_map[e, j]`` of slot ``labels[e]``; every target
+    dim is divided by the number of contributions it received. This is the
+    exact algebra of both fix-dom (dominant maps identity, so each target
+    column averages dominant + matched columns) and zipit (each feature
+    group averages its member columns). Deterministic: ``np.add.at``
+    accumulates in (expert asc, feature asc) order."""
+    E, d, f = wg.shape
+    labels = np.asarray(labels, np.int64)
+    hm = np.asarray(hidden_map, np.int64)
+    idx = (labels[:, None] * f + hm).reshape(-1)          # (E*f,)
+    counts = np.bincount(idx, minlength=num_slots * f).astype(np.float64)
+    denom = np.maximum(counts, 1.0)[:, None]
+
+    def cols(w):  # scatter feature COLUMNS of (E, d, f)
+        acc = np.zeros((num_slots * f, d))
+        np.add.at(acc, idx, w.transpose(0, 2, 1).reshape(E * f, d))
+        return (acc / denom).reshape(num_slots, f, d).transpose(0, 2, 1)
+
+    def rows(w):  # scatter feature ROWS of (E, f, d)
+        acc = np.zeros((num_slots * f, d))
+        np.add.at(acc, idx, w.reshape(E * f, d))
+        return (acc / denom).reshape(num_slots, f, d)
+
+    return cols(wg), cols(wu), rows(wd)
+
+
+# ---------------------------------------------------------------------------
+# Registered merge-plan producers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MergeInputs:
+    """Everything a merge method may consult when planning one layer."""
+    labels: np.ndarray            # (E,) cluster assignment
+    freq: np.ndarray              # (E,) activation frequencies
+    wg: np.ndarray                # (E, d, f) float64
+    wu: np.ndarray                # (E, d, f) float64
+    wd: np.ndarray                # (E, f, d) float64
+    num_slots: int                # rows of the emitted combine matrix
+    act_sample: Optional[np.ndarray] = None   # (E, T, f) calib activations
+    feature: str = "act"          # fix-dom feature source
+
+
+@register_merge("frequency")
+def _plan_frequency(mi: MergeInputs) -> dict:
+    return {"combine": build_combine_matrix(mi.labels, mi.freq, "frequency",
+                                            mi.num_slots)}
+
+
+@register_merge("average")
+def _plan_average(mi: MergeInputs) -> dict:
+    return {"combine": build_combine_matrix(mi.labels, mi.freq, "average",
+                                            mi.num_slots)}
 
 
 def _correlation_map(feat_dom: np.ndarray, feat_e: np.ndarray) -> np.ndarray:
@@ -59,95 +182,62 @@ def _fix_dom_features(feature: str, act_sample, wg, wu, wd, e: int):
         return np.concatenate(
             [_fix_dom_features("act", act_sample, wg, wu, wd, e),
              _fix_dom_features("weight", act_sample, wg, wu, wd, e)], axis=0)
-    raise ValueError(feature)
+    raise ValueError(
+        f"unknown fix_dom feature {feature!r}; valid: {FIX_DOM_FEATURES}")
 
 
-def merge_layer(wg, wu, wd, labels: np.ndarray, freq: np.ndarray,
-                method: str = "frequency", act_sample=None,
-                feature: str = "act", membership: np.ndarray | None = None):
-    """Returns (wg', wu', wd', group_map) with r live expert slots.
-
-    membership (E, r): soft FCM merging weights (Appendix B.5 Eq. 15);
-    overrides labels-based alphas when provided.
-    """
-    wg = np.asarray(wg, np.float64)
-    wu = np.asarray(wu, np.float64)
-    wd = np.asarray(wd, np.float64)
-    E, d, f = wg.shape
-    labels = np.asarray(labels)
-    r = membership.shape[1] if membership is not None else int(labels.max()) + 1
-
-    out_g = np.zeros((r, d, f))
-    out_u = np.zeros((r, d, f))
-    out_d = np.zeros((r, f, d))
-
-    if membership is not None:  # soft (FCM) merging
-        for c in range(r):
-            w = membership[:, c][:, None, None]
-            out_g[c] = (w * wg).sum(0)
-            out_u[c] = (w * wu).sum(0)
-            out_d[c] = (w * wd).sum(0)
-        return out_g, out_u, out_d, labels.astype(np.int32)
-
-    if method in ("average", "frequency"):
-        alphas = cluster_alphas(labels, freq, method)
-        for e in range(E):
-            c = labels[e]
-            out_g[c] += alphas[e] * wg[e]
-            out_u[c] += alphas[e] * wu[e]
-            out_d[c] += alphas[e] * wd[e]
-    elif method == "fix_dom":
-        alphas = cluster_alphas(labels, freq, "average")
-        for c in range(r):
-            members = np.where(labels == c)[0]
-            dom = members[int(np.argmax(freq[members]))]
-            feat_dom = _fix_dom_features(feature, act_sample, wg, wu, wd, dom)
-            acc_g = wg[dom].copy()
-            acc_u = wu[dom].copy()
-            acc_d = wd[dom].copy()
-            counts = np.ones(f)
-            for e in members:
-                if e == dom:
-                    continue
-                fmap = _correlation_map(feat_dom,
-                                        _fix_dom_features(feature, act_sample,
-                                                          wg, wu, wd, e))
-                # accumulate expert e's hidden dim j onto dominant dim fmap[j]
-                for j in range(f):
-                    m = fmap[j]
-                    acc_g[:, m] += wg[e][:, j]
-                    acc_u[:, m] += wu[e][:, j]
-                    acc_d[m, :] += wd[e][j, :]
-                    counts[m] += 1
-            out_g[c] = acc_g / counts[None, :]
-            out_u[c] = acc_u / counts[None, :]
-            out_d[c] = acc_d / counts[:, None]
-    elif method == "zipit":
-        # Reference ZipIt within cluster: greedily merge the most correlated
-        # feature pairs of the concatenated experts down to f dims.
-        for c in range(int(labels.max()) + 1):
-            members = np.where(labels == c)[0]
-            if len(members) == 1:
-                e = members[0]
-                out_g[c], out_u[c], out_d[c] = wg[e], wu[e], wd[e]
+@register_merge("fix_dom")
+def _plan_fix_dom(mi: MergeInputs) -> dict:
+    """Dominant expert keeps its feature order (identity map); every other
+    member's dims are routed onto their most-correlated dominant dims."""
+    E, d, f = mi.wg.shape
+    hidden_map = np.tile(np.arange(f, dtype=np.int32), (E, 1))
+    for c in np.unique(mi.labels):
+        members = np.where(mi.labels == c)[0]
+        dom = members[int(np.argmax(mi.freq[members]))]
+        feat_dom = _fix_dom_features(mi.feature, mi.act_sample,
+                                     mi.wg, mi.wu, mi.wd, dom)
+        for e in members:
+            if e == dom:
                 continue
-            feats = np.concatenate(
-                [_fix_dom_features(feature, act_sample, wg, wu, wd, e)
-                 for e in members], axis=1)  # (T, f*|C|)
-            G = np.concatenate([wg[e] for e in members], axis=1)
-            U = np.concatenate([wu[e] for e in members], axis=1)
-            Dn = np.concatenate([wd[e] for e in members], axis=0)
-            out_g[c], out_u[c], out_d[c] = _zipit_reduce(feats, G, U, Dn, f)
-    else:
-        raise ValueError(method)
-
-    dtype = np.asarray(wg).dtype
-    return (out_g.astype(dtype), out_u.astype(dtype), out_d.astype(dtype),
-            labels.astype(np.int32))
+            hidden_map[e] = _correlation_map(
+                feat_dom, _fix_dom_features(mi.feature, mi.act_sample,
+                                            mi.wg, mi.wu, mi.wd, e))
+    return {"hidden_map": hidden_map}
 
 
-def _zipit_reduce(feats, G, U, Dn, target_f: int):
-    """Greedy pairwise feature merging until target_f dims remain."""
+_plan_fix_dom.needs_act_sample = True
+
+
+@register_merge("zipit")
+def _plan_zipit(mi: MergeInputs) -> dict:
+    """Greedy pairwise feature matching: concatenate the cluster's feature
+    columns, merge the most-correlated pair until f dims remain, and map
+    every original column to its surviving group index."""
+    E, d, f = mi.wg.shape
+    hidden_map = np.tile(np.arange(f, dtype=np.int32), (E, 1))
+    for c in np.unique(mi.labels):
+        members = np.where(mi.labels == c)[0]
+        if len(members) == 1:
+            continue  # identity map: the expert survives unchanged
+        feats = np.concatenate(
+            [_fix_dom_features(mi.feature, mi.act_sample,
+                               mi.wg, mi.wu, mi.wd, e)
+             for e in members], axis=1)  # (T, f*|C|)
+        for out_i, group in enumerate(_zipit_groups(feats, f)):
+            for col in group:
+                m, j = divmod(col, f)
+                hidden_map[members[m], j] = out_i
+    return {"hidden_map": hidden_map}
+
+
+_plan_zipit.needs_act_sample = True
+
+
+def _zipit_groups(feats, target_f: int):
+    """Greedy pairwise feature merging until ``target_f`` groups remain.
+    Returns the surviving groups (lists of concatenated column indices) in
+    alive order — group ``i`` becomes output feature dim ``i``."""
     a = feats - feats.mean(0, keepdims=True)
     a = a / np.maximum(np.linalg.norm(a, axis=0, keepdims=True), 1e-9)
     corr = a.T @ a
@@ -167,7 +257,42 @@ def _zipit_reduce(feats, G, U, Dn, target_f: int):
         corr[i, i] = -np.inf
         corr[j, :] = corr[:, j] = -np.inf
         alive.remove(j)
-    out_g = np.stack([G[:, groups[i]].mean(1) for i in alive], axis=1)
-    out_u = np.stack([U[:, groups[i]].mean(1) for i in alive], axis=1)
-    out_d = np.stack([Dn[groups[i], :].mean(0) for i in alive], axis=0)
-    return out_g, out_u, out_d
+    return [groups[i] for i in alive]
+
+
+# ---------------------------------------------------------------------------
+# Single-layer reference entry point (numpy, all methods)
+# ---------------------------------------------------------------------------
+
+
+def merge_layer(wg, wu, wd, labels: np.ndarray, freq: np.ndarray,
+                method: str = "frequency", act_sample=None,
+                feature: str = "act", membership: np.ndarray | None = None):
+    """Returns (wg', wu', wd', group_map) with r live expert slots.
+
+    membership (E, r): soft FCM merging weights (Appendix B.5 Eq. 15);
+    overrides labels-based merging when provided. Plans one layer through
+    the merge registry and applies it with the shared numpy executors.
+    """
+    wg = np.asarray(wg, np.float64)
+    wu = np.asarray(wu, np.float64)
+    wd = np.asarray(wd, np.float64)
+    labels = np.asarray(labels)
+
+    if membership is not None:  # soft (FCM) merging: U^T IS the combine
+        combine = np.asarray(membership, np.float64).T  # (r, E)
+        out_g, out_u, out_d = apply_combine_np(wg, wu, wd, combine)
+        return out_g, out_u, out_d, labels.astype(np.int32)
+
+    r = int(labels.max()) + 1
+    payload = MERGES.get(method)(MergeInputs(
+        labels=labels, freq=np.asarray(freq, np.float64),
+        wg=wg, wu=wu, wd=wd, num_slots=r,
+        act_sample=act_sample, feature=feature))
+    if "combine" in payload:
+        out_g, out_u, out_d = apply_combine_np(wg, wu, wd,
+                                               payload["combine"])
+    else:
+        out_g, out_u, out_d = apply_hidden_map_np(
+            wg, wu, wd, labels, payload["hidden_map"], r)
+    return out_g, out_u, out_d, labels.astype(np.int32)

@@ -6,35 +6,38 @@ matrix each metric clusters on:
   expert_output — o_j = mean over calib tokens of E_j(x)     (Eq. 4; O(d))
   router_logits — expert j's router logit trace on sampled tokens (M-SMoE)
   weight        — flattened [W_gate | W_up | W_down^T]        (O(3 d d_ff))
+
+Every metric is registered in :data:`repro.core.registry.METRICS` under the
+uniform signature ``fn(stats, weights) -> (E, D)``; add new similarity
+metrics with ``@register_metric("name")`` and they become valid
+``HCSMoEConfig.metric`` / ``PlanSpec.metric`` values automatically.
 """
 from __future__ import annotations
 
 import numpy as np
 
-METRICS = ("expert_output", "router_logits", "weight")
+from repro.core.registry import METRICS, register_metric
 
 
-def expert_output_features(stats) -> np.ndarray:
+@register_metric("expert_output")
+def expert_output_features(stats, weights=None) -> np.ndarray:
     out_sum = np.asarray(stats.out_sum, np.float64)  # (E, d)
     count = float(np.asarray(stats.token_count))
     return out_sum / max(count, 1.0)
 
 
-def router_logit_features(stats) -> np.ndarray:
+@register_metric("router_logits")
+def router_logit_features(stats, weights=None) -> np.ndarray:
     return np.asarray(stats.logits_sample, np.float64).T  # (E, T_sub)
 
 
-def weight_features(wg, wu, wd) -> np.ndarray:
+@register_metric("weight")
+def weight_features(stats, weights) -> np.ndarray:
+    wg, wu, wd = weights
     E = wg.shape[0]
     parts = [np.asarray(w, np.float64).reshape(E, -1) for w in (wg, wu, wd)]
     return np.concatenate(parts, axis=1)
 
 
 def build_features(metric: str, stats=None, weights=None) -> np.ndarray:
-    if metric == "expert_output":
-        return expert_output_features(stats)
-    if metric == "router_logits":
-        return router_logit_features(stats)
-    if metric == "weight":
-        return weight_features(*weights)
-    raise ValueError(metric)
+    return METRICS.get(metric)(stats, weights)

@@ -1,155 +1,101 @@
-"""HC-SMoE end-to-end pipeline: calibration stats -> clustering -> merging ->
-patched model params (paper Alg. 1).
+"""HC-SMoE end-to-end pipeline (paper Alg. 1) — deprecated shim surface.
 
-Two merge executors:
-  * ``merge_layer`` (numpy) — offline reference, supports all four methods.
-  * ``merge_stacked_jax`` — convex-combination merges (frequency/average)
-    expressed as a single sharded einsum over the stacked (L, E, d, f)
-    weights, so under pjit each TP/FSDP shard merges its slice locally with
-    zero resharding. This is the TPU-native answer to the paper's
-    single-host merge step (DESIGN.md §3) and is exercised by the dry-run.
+The pipeline was redesigned around the serializable
+:class:`repro.core.plan.MergePlan` artifact: :func:`~repro.core.plan.
+compute_plan` (calibration stats -> clustering -> merge description) and
+:func:`~repro.core.plan.apply_plan` (description -> patched params), see
+``docs/compression_api.md``. This module keeps the original entry points
+alive as thin wrappers with identical outputs:
+
+  * :func:`apply_hcsmoe` == ``apply_plan(params, compute_plan(...))`` plus
+    the legacy ``info`` dict.
+  * :func:`compute_groupings` — the plan's per-layer view in the old
+    list-of-dicts shape.
+  * ``build_combine_matrix`` / ``merge_stacked_jax`` re-exported from
+    :mod:`repro.core.merging`.
+
+New code should import from ``repro.core.plan`` directly.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import clustering as clu
-from repro.core import merging as mrg
-from repro.core import metrics as met
-from repro.core.calibration import flatten_stats
+from repro.core import plan as plan_mod
+from repro.core.api import layer_weights as _public_layer_weights
+from repro.core.api import moe_positions as _public_moe_positions
+from repro.core.merging import (  # noqa: F401  (back-compat re-exports)
+    build_combine_matrix, merge_stacked_jax)
+from repro.core.plan import validate_spec_fields
 
 
 @dataclass(frozen=True)
 class HCSMoEConfig:
     target_experts: int
     linkage: str = "average"          # single | complete | average
-    metric: str = "expert_output"     # expert_output | router_logits | weight
-    merge: str = "frequency"          # frequency | average | fix_dom | zipit
-    clustering: str = "hc"            # hc | kmeans_fix | kmeans_rnd | fcm
+    metric: str = "expert_output"     # registry: repro.core.registry.METRICS
+    merge: str = "frequency"          # registry: MERGES
+    clustering: str = "hc"            # registry: CLUSTERINGS
     fix_dom_feature: str = "act"      # act | weight | act+weight
     non_uniform: bool = False         # Appendix B.1
     resize: bool = True               # shrink stacked arrays to r slots
     seed: int = 0
 
-
-def _moe_positions(cfg) -> List[int]:
-    return [i for i, s in enumerate(cfg.pattern) if s.ffn == "moe"]
-
-
-def _layer_weights(params, pos: int, block: int):
-    moe = params["decoder"]["blocks"][f"layer{pos}"]["moe"]
-    return (np.asarray(moe["wg"][block], np.float32),
-            np.asarray(moe["wu"][block], np.float32),
-            np.asarray(moe["wd"][block], np.float32))
+    def __post_init__(self):
+        # fail fast at construction: unknown metric/clustering/merge/
+        # linkage/feature names never reach the pipeline
+        validate_spec_fields(metric=self.metric, clustering=self.clustering,
+                             merge=self.merge, linkage=self.linkage,
+                             fix_dom_feature=self.fix_dom_feature)
 
 
-def _per_layer_targets(cfg, layers, r: int, non_uniform: bool) -> List[int]:
-    """Uniform r per layer, or Appendix-B.1 frequency-guided allocation."""
-    L = len(layers)
-    if not non_uniform:
-        return [r] * L
-    E = cfg.moe.num_experts
-    freqs = np.stack([np.asarray(l["stats"].freq) for l in layers])  # (L, E)
-    flat = freqs.reshape(-1)
-    order = np.argsort(-flat, kind="stable")
-    keep = order[: r * L]
-    counts = np.bincount(keep // E, minlength=L)
-    return [int(max(1, min(E, c))) for c in counts]
+# Deprecated private aliases: use repro.core.api instead.
+_moe_positions = _public_moe_positions
+_layer_weights = _public_layer_weights
 
 
-def compute_groupings(cfg, params, stats, hc: HCSMoEConfig) -> List[dict]:
-    """Cluster every MoE layer. Returns per-layer dicts with labels etc."""
-    layers = flatten_stats(cfg, stats)
-    targets = _per_layer_targets(cfg, layers, hc.target_experts, hc.non_uniform)
+def _groupings_from_plan(plan: plan_mod.MergePlan, cfg=None,
+                         stats=None) -> List[dict]:
+    by_key = {}
+    if stats is not None:
+        from repro.core.calibration import flatten_stats
+
+        by_key = {(l["pattern_pos"], l["block"]): l["stats"]
+                  for l in flatten_stats(cfg, stats)}
     out = []
-    for layer, r_l in zip(layers, targets):
-        st = layer["stats"]
-        weights = _layer_weights(params, layer["pattern_pos"], layer["block"])
-        feats = met.build_features(hc.metric, stats=st, weights=weights)
-        membership = None
-        if hc.clustering == "fcm":
-            labels, membership = clu.fcm_cluster(feats, r_l, seed=hc.seed)
-        else:
-            labels = clu.cluster(feats, r_l, method=hc.clustering,
-                                 linkage=hc.linkage, seed=hc.seed)
-        out.append({**layer, "labels": labels, "features": feats,
-                    "freq": np.asarray(st.freq, np.float64),
-                    "membership": membership, "r": r_l})
+    for lp in plan.layers:
+        out.append({"pattern_pos": lp.pattern_pos, "block": lp.block,
+                    "stats": by_key.get((lp.pattern_pos, lp.block)),
+                    "labels": lp.labels,
+                    "features": lp.extras.get("features"),
+                    "freq": lp.freq,
+                    "membership": lp.extras.get("membership"),
+                    "r": lp.target})
     return out
 
 
-def merge_stacked_jax(wg, wu, wd, combine):
-    """Sharded merge: combine (L, r, E) convex weights; w* (L, E, d, f)."""
-    c = combine.astype(jnp.float32)
-    mg = jnp.einsum("lre,ledf->lrdf", c, wg.astype(jnp.float32))
-    mu = jnp.einsum("lre,ledf->lrdf", c, wu.astype(jnp.float32))
-    md = jnp.einsum("lre,lefd->lrfd", c, wd.astype(jnp.float32))
-    return mg.astype(wg.dtype), mu.astype(wu.dtype), md.astype(wd.dtype)
-
-
-def build_combine_matrix(labels: np.ndarray, freq: np.ndarray, method: str,
-                         num_slots: int) -> np.ndarray:
-    """(num_slots, E) convex combination matrix from labels + frequencies."""
-    alphas = mrg.cluster_alphas(labels, freq, method)
-    E = labels.shape[0]
-    M = np.zeros((num_slots, E), np.float32)
-    M[labels, np.arange(E)] = alphas
-    return M
+def compute_groupings(cfg, params, stats, hc: HCSMoEConfig) -> List[dict]:
+    """Deprecated: cluster every MoE layer, returning per-layer dicts.
+    Use :func:`repro.core.plan.compute_plan`, which also carries the merge
+    description and serializes."""
+    return _groupings_from_plan(
+        plan_mod.compute_plan(cfg, params, stats, hc), cfg, stats)
 
 
 def apply_hcsmoe(cfg, params, stats, hc: HCSMoEConfig, *, use_jax_merge=None):
-    """Returns (new_params, info). Router weights are untouched; group_map
-    redirects routed ids to merged slots (paper Fig. 3)."""
-    groupings = compute_groupings(cfg, params, stats, hc)
-    E = cfg.moe.num_experts
-    resize = hc.resize and not hc.non_uniform
-    n_slots = hc.target_experts if resize else E
-    if use_jax_merge is None:
-        use_jax_merge = hc.merge in ("frequency", "average") and hc.clustering != "fcm"
+    """Deprecated one-shot path: ``apply_plan(params, compute_plan(...))``.
 
-    new_params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
-    positions = _moe_positions(cfg)
-    by_pos = {p: [g for g in groupings if g["pattern_pos"] == p] for p in positions}
-
-    info = {"layers": groupings, "config": hc}
-    for pos in positions:
-        layers = sorted(by_pos[pos], key=lambda g: g["block"])
-        moe = params["decoder"]["blocks"][f"layer{pos}"]["moe"]
-        if use_jax_merge:
-            combine = np.stack([
-                build_combine_matrix(g["labels"], g["freq"], hc.merge, n_slots)
-                for g in layers])  # (n_blocks, n_slots, E)
-            mg, mu, md = merge_stacked_jax(moe["wg"], moe["wu"], moe["wd"],
-                                           jnp.asarray(combine))
-        else:
-            mgs, mus, mds = [], [], []
-            for g in layers:
-                wg_b, wu_b, wd_b = _layer_weights(params, pos, g["block"])
-                g_, u_, d_, _ = mrg.merge_layer(
-                    wg_b, wu_b, wd_b, g["labels"], g["freq"], hc.merge,
-                    act_sample=np.asarray(g["stats"].act_sample),
-                    feature=hc.fix_dom_feature, membership=g["membership"])
-                r_l = g_.shape[0]
-                if r_l < n_slots:  # pad dead slots with zeros
-                    pad = ((0, n_slots - r_l), (0, 0), (0, 0))
-                    g_, u_, d_ = (np.pad(g_, pad), np.pad(u_, pad), np.pad(d_, pad))
-                mgs.append(g_)
-                mus.append(u_)
-                mds.append(d_)
-            dt = moe["wg"].dtype
-            mg = jnp.asarray(np.stack(mgs), dt)
-            mu = jnp.asarray(np.stack(mus), dt)
-            md = jnp.asarray(np.stack(mds), dt)
-        group_map = jnp.asarray(np.stack([g["labels"] for g in layers]),
-                                jnp.int32)
-        tgt = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
-        tgt["wg"], tgt["wu"], tgt["wd"] = mg, mu, md
-        tgt["group_map"] = group_map
+    Returns (new_params, info). Router weights are untouched; group_map
+    redirects routed ids to merged slots (paper Fig. 3). ``info`` carries
+    the computed plan under ``info["plan"]`` — save it with
+    :func:`repro.checkpoint.save_plan` to re-apply without recalibrating."""
+    plan = plan_mod.compute_plan(cfg, params, stats, hc)
+    executor = None
+    if use_jax_merge is not None:
+        executor = "jax" if use_jax_merge else "numpy"
+    new_params = plan_mod.apply_plan(params, plan, executor=executor)
+    info = {"layers": _groupings_from_plan(plan, cfg, stats), "config": hc,
+            "plan": plan}
     return new_params, info
 
 

@@ -1,0 +1,419 @@
+"""MergePlan: the serializable compression-plan artifact.
+
+HC-SMoE is retraining-free, so a compression run is fully described by pure
+data: which experts group together, how their weights combine, and which
+slots survive. This module splits the old monolithic ``apply_hcsmoe`` into
+two pure stages with that data as the interface:
+
+  * :func:`compute_plan` ``(cfg, params, stats, spec) -> MergePlan`` —
+    calibration-dependent, runs clustering + merge planning offline.
+  * :func:`apply_plan` ``(params, plan) -> new_params`` — calibration-free,
+    deterministic, re-runnable anywhere (serving load time, EP-sharded
+    meshes, benchmark sweeps, draft-model construction).
+
+A plan round-trips through JSON + npz (:func:`repro.checkpoint.save_plan` /
+``load_plan``) and applying a reloaded plan is bit-identical to applying the
+in-memory one. Provenance (method/metric/seed, expert count, layer count,
+feature hashes) rides along so a plan can be audited (``launch/compress.py
+inspect``) and a mismatched application fails fast
+(:class:`PlanMismatchError`).
+
+Two executors sit behind :func:`apply_plan`:
+
+  * ``"jax"`` — combine-matrix plans collapse to one sharded einsum per MoE
+    stack (:func:`repro.core.merging.merge_stacked_jax`), the EP/TP-safe
+    path serving uses.
+  * ``"numpy"`` — the float64 reference; required for ``hidden_map`` layers
+    (fix_dom / zipit feature routing) and FCM's float64 soft memberships.
+
+Prune baselines produce plans too (``kind="prune"``, per-layer keep masks
+-> ``router_mask``), so ``apply_plan`` is the single write path into params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.core import clustering as clu
+from repro.core import merging as mrg
+from repro.core import metrics as _metrics  # noqa: F401  (registers METRICS)
+from repro.core.calibration import flatten_stats
+from repro.core.registry import (
+    CLUSTERINGS, MERGES, METRICS, PLANNERS, register_planner)
+
+NEG = -1.0e9  # router-mask logit for pruned experts
+
+PLAN_FORMAT_VERSION = 1
+
+# LayerPlan array fields that serialize to the npz side of a saved plan
+LAYER_ARRAY_FIELDS = ("labels", "freq", "combine", "hidden_map", "keep")
+
+
+class PlanMismatchError(ValueError):
+    """A plan was applied to params it was not computed for."""
+
+
+def validate_spec_fields(*, metric: str, clustering: str, merge: str,
+                         linkage: str, fix_dom_feature: str) -> None:
+    """Fail-fast validation shared by PlanSpec and HCSMoEConfig: unknown
+    names raise at construction, not deep inside the pipeline."""
+    METRICS.validate(metric)
+    CLUSTERINGS.validate(clustering)
+    MERGES.validate(merge)
+    if linkage not in clu.LINKAGES:
+        raise ValueError(
+            f"unknown linkage {linkage!r}; valid: {', '.join(clu.LINKAGES)}")
+    if fix_dom_feature not in mrg.FIX_DOM_FEATURES:
+        raise ValueError(
+            f"unknown fix_dom_feature {fix_dom_feature!r}; valid: "
+            f"{', '.join(mrg.FIX_DOM_FEATURES)}")
+
+
+@dataclass(frozen=True)
+class PlanSpec:
+    """What to compute a plan FOR — method + hyperparameters + seed.
+
+    ``method`` selects a registered planner (``hc_smoe``, ``f_prune``,
+    ``s_prune``, ``o_prune``, ``m_smoe``); the remaining fields mirror
+    :class:`repro.core.pipeline.HCSMoEConfig` and are consumed by the
+    planners that need them."""
+    target_experts: int
+    method: str = "hc_smoe"
+    linkage: str = "average"          # single | complete | average
+    metric: str = "expert_output"     # registry: METRICS
+    merge: str = "frequency"          # registry: MERGES
+    clustering: str = "hc"            # registry: CLUSTERINGS
+    fix_dom_feature: str = "act"      # act | weight | act+weight
+    non_uniform: bool = False         # Appendix B.1
+    resize: bool = True               # shrink stacked arrays to r slots
+    seed: int = 0
+    samples: int = 64                 # o_prune subset-search budget
+
+    def __post_init__(self):
+        validate_spec_fields(metric=self.metric, clustering=self.clustering,
+                             merge=self.merge, linkage=self.linkage,
+                             fix_dom_feature=self.fix_dom_feature)
+        # baselines register their planners on import; pull them in so the
+        # method check sees the full registry
+        import repro.core.baselines  # noqa: F401
+        planner = PLANNERS.get(self.method)
+        # planners may attach method-specific spec constraints (e.g. m_smoe
+        # only merges via combine matrices) so bad combinations fail here,
+        # at construction, not after a full calibration pass
+        check = getattr(planner, "check_spec", None)
+        if check is not None:
+            check(self)
+
+    @staticmethod
+    def from_any(spec) -> "PlanSpec":
+        """Accept a PlanSpec or an HCSMoEConfig-shaped object."""
+        if isinstance(spec, PlanSpec):
+            return spec
+        fields = {f.name for f in dataclasses.fields(PlanSpec)}
+        kw = {k: v for k, v in dataclasses.asdict(spec).items()
+              if k in fields}
+        return PlanSpec(**kw)
+
+
+@dataclass
+class LayerPlan:
+    """One MoE layer's slice of a plan. Exactly one of the merge
+    descriptions is set for ``kind="merge"`` plans (``combine`` or
+    ``hidden_map``); ``keep`` is set for ``kind="prune"`` plans."""
+    pattern_pos: int
+    block: int
+    target: int                              # live slots after compression
+    labels: Optional[np.ndarray] = None      # (E,) int32 group map
+    freq: Optional[np.ndarray] = None        # (E,) float64 activation freq
+    combine: Optional[np.ndarray] = None     # (slots, E) convex weights
+    hidden_map: Optional[np.ndarray] = None  # (E, f) int32 feature routing
+    keep: Optional[np.ndarray] = None        # (E,) bool prune keep mask
+    feature_hash: Optional[str] = None       # provenance of the features
+    # in-memory only (never serialized): features / membership / stats for
+    # quality reports and the deprecated compute_groupings surface
+    extras: Dict = field(default_factory=dict, repr=False, compare=False)
+
+
+@dataclass
+class MergePlan:
+    kind: str                 # "merge" | "prune"
+    method: str               # planner name (provenance)
+    spec: Dict                # full PlanSpec asdict (provenance)
+    num_experts: int          # E the plan was computed for
+    num_layers: int           # total MoE layers covered
+    slots: int                # stacked expert-slot count after apply
+    layers: List[LayerPlan] = field(default_factory=list)
+    default_executor: str = "numpy"   # "jax" when every layer is combine
+
+    def by_position(self) -> Dict[int, List[LayerPlan]]:
+        """pattern_pos -> block-sorted layer plans."""
+        out: Dict[int, List[LayerPlan]] = {}
+        for lp in self.layers:
+            out.setdefault(lp.pattern_pos, []).append(lp)
+        return {p: sorted(ls, key=lambda lp: lp.block)
+                for p, ls in sorted(out.items())}
+
+
+def feature_fingerprint(feats: np.ndarray) -> str:
+    """Stable short hash of a feature matrix (provenance / audit)."""
+    f = np.ascontiguousarray(np.asarray(feats, np.float64))
+    h = hashlib.sha256()
+    h.update(str(f.shape).encode())
+    h.update(f.tobytes())
+    return h.hexdigest()[:16]
+
+
+def per_layer_targets(cfg, layers, r: int, non_uniform: bool) -> List[int]:
+    """Uniform r per layer, or Appendix-B.1 frequency-guided allocation."""
+    L = len(layers)
+    if not non_uniform:
+        return [r] * L
+    E = cfg.moe.num_experts
+    freqs = np.stack([np.asarray(l["stats"].freq) for l in layers])  # (L, E)
+    flat = freqs.reshape(-1)
+    order = np.argsort(-flat, kind="stable")
+    keep = order[: r * L]
+    counts = np.bincount(keep // E, minlength=L)
+    return [int(max(1, min(E, c))) for c in counts]
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: compute_plan
+# ---------------------------------------------------------------------------
+
+
+def compute_plan(cfg, params, stats, spec) -> MergePlan:
+    """Cluster + plan every MoE layer. Pure function of its inputs; the
+    returned plan is self-contained — applying it never touches stats."""
+    spec = PlanSpec.from_any(spec)
+    import repro.core.baselines  # noqa: F401  (registers prune planners)
+    return PLANNERS.get(spec.method)(cfg, params, stats, spec)
+
+
+@register_planner("hc_smoe")
+def _plan_hc_smoe(cfg, params, stats, spec: PlanSpec) -> MergePlan:
+    """The paper's pipeline (Alg. 1): per-layer features -> clustering ->
+    merge description."""
+    layers = flatten_stats(cfg, stats)
+    targets = per_layer_targets(cfg, layers, spec.target_experts,
+                                spec.non_uniform)
+    E = cfg.moe.num_experts
+    resize = spec.resize and not spec.non_uniform
+    n_slots = spec.target_experts if resize else E
+    use_jax = (spec.merge in ("frequency", "average")
+               and spec.clustering != "fcm")
+
+    plan_layers = []
+    for layer, r_l in zip(layers, targets):
+        st = layer["stats"]
+        weights = api.layer_weights(params, layer["pattern_pos"],
+                                    layer["block"])
+        feats = METRICS.get(spec.metric)(st, weights)
+        labels, membership = CLUSTERINGS.get(spec.clustering)(
+            feats, r_l, linkage=spec.linkage, seed=spec.seed)
+        labels = np.asarray(labels)
+        freq = np.asarray(st.freq, np.float64)
+        if membership is not None:
+            # soft clustering: U^T IS the combine matrix (Eq. 15), padded
+            # with zero rows up to the stacked slot count
+            combine = np.zeros((n_slots, E), np.float64)
+            combine[: membership.shape[1]] = np.asarray(
+                membership, np.float64).T
+            payload = {"combine": combine}
+        else:
+            wg64, wu64, wd64 = (np.asarray(w, np.float64) for w in weights)
+            merge_fn = MERGES.get(spec.merge)
+            # only feature-matching merges read the calibration activation
+            # sample; skip the (E, T, f) device->host copy otherwise
+            act = (np.asarray(st.act_sample)
+                   if getattr(merge_fn, "needs_act_sample", False) else None)
+            payload = merge_fn(mrg.MergeInputs(
+                labels=labels, freq=freq, wg=wg64, wu=wu64, wd=wd64,
+                num_slots=n_slots, act_sample=act,
+                feature=spec.fix_dom_feature))
+        plan_layers.append(LayerPlan(
+            pattern_pos=layer["pattern_pos"], block=layer["block"],
+            target=r_l, labels=labels.astype(np.int32), freq=freq,
+            combine=payload.get("combine"),
+            hidden_map=payload.get("hidden_map"),
+            feature_hash=feature_fingerprint(feats),
+            # NOTE: extras deliberately excludes the stats object — a kept
+            # plan must not pin the calibration capture (act samples) in
+            # memory; the deprecated compute_groupings shim re-derives it
+            extras={"features": feats, "membership": membership}))
+    return MergePlan(kind="merge", method=spec.method,
+                     spec=dataclasses.asdict(spec), num_experts=E,
+                     num_layers=len(plan_layers), slots=n_slots,
+                     layers=plan_layers,
+                     default_executor="jax" if use_jax else "numpy")
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: apply_plan
+# ---------------------------------------------------------------------------
+
+
+def _params_moe_by_pos(params) -> Dict[int, dict]:
+    blocks = params["decoder"]["blocks"]
+    return {int(name[len("layer"):]): grp["moe"]
+            for name, grp in blocks.items() if "moe" in grp}
+
+
+def check_plan_matches(params, plan: MergePlan) -> None:
+    """Fail fast when plan provenance and params disagree (wrong expert
+    count, wrong layer structure, wrong ffn width)."""
+    if plan.num_layers != len(plan.layers):
+        raise PlanMismatchError(
+            f"corrupt plan: num_layers={plan.num_layers} but "
+            f"{len(plan.layers)} layer entries")
+    moe_by_pos = _params_moe_by_pos(params)
+    by_pos = plan.by_position()
+    if set(by_pos) != set(moe_by_pos):
+        raise PlanMismatchError(
+            f"plan covers MoE pattern positions {sorted(by_pos)} but params "
+            f"have {sorted(moe_by_pos)}")
+    for pos, lps in by_pos.items():
+        wg = moe_by_pos[pos]["wg"]
+        n_blocks, E, _, f = wg.shape
+        if E != plan.num_experts:
+            raise PlanMismatchError(
+                f"plan was computed for {plan.num_experts} experts but "
+                f"params at layer{pos} have {E}")
+        if n_blocks != len(lps) or [lp.block for lp in lps] != list(
+                range(n_blocks)):
+            raise PlanMismatchError(
+                f"plan covers blocks {[lp.block for lp in lps]} at "
+                f"layer{pos} but params stack {n_blocks} blocks")
+        for lp in lps:
+            where = f"layer{pos}/block{lp.block}"
+            if lp.hidden_map is not None and lp.hidden_map.shape != (E, f):
+                raise PlanMismatchError(
+                    f"{where}: hidden_map shape {lp.hidden_map.shape} vs "
+                    f"expert ffn ({E}, {f})")
+            if lp.combine is not None and lp.combine.shape != (plan.slots, E):
+                raise PlanMismatchError(
+                    f"{where}: combine shape {lp.combine.shape} vs "
+                    f"(slots, E) = ({plan.slots}, {E})")
+            if lp.labels is not None and lp.labels.shape != (E,):
+                raise PlanMismatchError(
+                    f"{where}: labels shape {lp.labels.shape} vs ({E},)")
+            if lp.keep is not None and lp.keep.shape != (E,):
+                raise PlanMismatchError(
+                    f"{where}: keep mask shape {lp.keep.shape} vs ({E},)")
+
+
+def _resolve_executor(plan: MergePlan, executor: Optional[str]) -> str:
+    executor = executor or plan.default_executor
+    if executor not in ("jax", "numpy"):
+        raise ValueError(
+            f"executor must be 'jax' or 'numpy', got {executor!r}")
+    if executor == "jax" and any(lp.combine is None for lp in plan.layers):
+        raise ValueError(
+            "executor='jax' needs a combine matrix on every layer; "
+            f"merge {plan.spec.get('merge')!r} plans hidden_map layers — "
+            "use executor='numpy'")
+    return executor
+
+
+def apply_plan(params, plan: MergePlan, *, executor: Optional[str] = None):
+    """Write a plan into a params pytree; returns new params (inputs are
+    never mutated). Router weights are untouched: merge plans redirect
+    routed ids through ``group_map`` (paper Fig. 3), prune plans mask
+    router logits via ``router_mask`` so routing renormalises over kept
+    experts."""
+    check_plan_matches(params, plan)
+    if plan.kind == "prune":
+        return _apply_prune(params, plan)
+    if plan.kind != "merge":
+        raise ValueError(f"unknown plan kind {plan.kind!r}")
+    executor = _resolve_executor(plan, executor)
+
+    new_params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    for pos, lps in plan.by_position().items():
+        moe = params["decoder"]["blocks"][f"layer{pos}"]["moe"]
+        if executor == "jax":
+            combine = np.stack([lp.combine for lp in lps])
+            mg, mu, md = mrg.merge_stacked_jax(
+                moe["wg"], moe["wu"], moe["wd"], jnp.asarray(combine))
+        else:
+            mgs, mus, mds = [], [], []
+            for lp in lps:
+                wg, wu, wd = (np.asarray(w, np.float64)
+                              for w in api.layer_weights(params, pos,
+                                                         lp.block))
+                if lp.combine is not None:
+                    g_, u_, d_ = mrg.apply_combine_np(wg, wu, wd, lp.combine)
+                else:
+                    g_, u_, d_ = mrg.apply_hidden_map_np(
+                        wg, wu, wd, lp.labels, lp.hidden_map, plan.slots)
+                mgs.append(g_)
+                mus.append(u_)
+                mds.append(d_)
+            dt = moe["wg"].dtype
+            mg = jnp.asarray(np.stack(mgs), dt)
+            mu = jnp.asarray(np.stack(mus), dt)
+            md = jnp.asarray(np.stack(mds), dt)
+        tgt = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
+        tgt["wg"], tgt["wu"], tgt["wd"] = mg, mu, md
+        tgt["group_map"] = jnp.asarray(
+            np.stack([lp.labels for lp in lps]), jnp.int32)
+    return new_params
+
+
+def _apply_prune(params, plan: MergePlan):
+    new_params = jax.tree.map(lambda x: x, params)
+    for pos, lps in plan.by_position().items():
+        mask = np.stack([lp.keep for lp in lps])  # (n_blocks, E)
+        moe = new_params["decoder"]["blocks"][f"layer{pos}"]["moe"]
+        rmask = jnp.where(jnp.asarray(mask), 0.0, NEG).astype(jnp.float32)
+        moe["router_mask"] = rmask
+        m = jnp.asarray(mask)[:, :, None, None]
+        moe["wg"] = jnp.where(m, moe["wg"], 0)
+        moe["wu"] = jnp.where(m, moe["wu"], 0)
+        moe["wd"] = jnp.where(m, moe["wd"], 0)
+    return new_params
+
+
+# ---------------------------------------------------------------------------
+# Inspection
+# ---------------------------------------------------------------------------
+
+
+def plan_summary(plan: MergePlan) -> str:
+    """Human-readable provenance + shape report (``compress.py inspect``)."""
+    spec = plan.spec
+    lines = [
+        f"MergePlan kind={plan.kind} method={plan.method} "
+        f"(format v{PLAN_FORMAT_VERSION})",
+        f"  experts: {plan.num_experts} -> {plan.slots} stacked slots, "
+        f"{plan.num_layers} MoE layers",
+        f"  spec: metric={spec.get('metric')} clustering="
+        f"{spec.get('clustering')} linkage={spec.get('linkage')} "
+        f"merge={spec.get('merge')} seed={spec.get('seed')} "
+        f"non_uniform={spec.get('non_uniform')}",
+        f"  default executor: {plan.default_executor}",
+    ]
+    for lp in plan.layers:
+        desc = []
+        if lp.keep is not None:
+            desc.append(f"keep={int(lp.keep.sum())}/{lp.keep.shape[0]}")
+        if lp.labels is not None:
+            sizes = np.bincount(lp.labels, minlength=lp.target)
+            desc.append("cluster_sizes=" +
+                        ",".join(str(int(s)) for s in sizes[: lp.target]))
+        if lp.combine is not None:
+            desc.append(f"combine{lp.combine.shape}")
+        if lp.hidden_map is not None:
+            desc.append(f"hidden_map{lp.hidden_map.shape}")
+        if lp.feature_hash:
+            desc.append(f"feat#{lp.feature_hash}")
+        lines.append(f"  layer pos={lp.pattern_pos} block={lp.block} "
+                     f"target={lp.target}: " + " ".join(desc))
+    return "\n".join(lines)

@@ -1,0 +1,77 @@
+"""Pluggable registries for the compression pipeline's extension points.
+
+Three registries replace the stringly-typed ``if/else`` dispatch that used
+to live in ``pipeline.py`` / ``clustering.py`` / ``merging.py`` /
+``metrics.py``:
+
+  * ``METRICS``     — similarity feature builders: ``fn(stats, weights) ->
+    (E, D) np.ndarray`` (paper §3.2.1).
+  * ``CLUSTERINGS`` — expert grouping algorithms: ``fn(feats, r, *,
+    linkage, seed) -> (labels, membership | None)`` (paper §3.2.2 / B.5).
+  * ``MERGES``      — weight-space merge planners: ``fn(inputs:
+    MergeInputs) -> {"combine": ...} | {"hidden_map": ...}`` (§3.2.3 / B.2).
+
+Registering a new entry makes it reachable everywhere at once — config
+validation (:class:`repro.core.pipeline.HCSMoEConfig`,
+:class:`repro.core.plan.PlanSpec`), plan computation
+(:func:`repro.core.plan.compute_plan`), and the ``launch/compress.py`` CLI —
+with no edits to the dispatch sites::
+
+    from repro.core.registry import register_metric
+
+    @register_metric("router_weight")
+    def router_weight_features(stats, weights):
+        ...
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+
+class Registry:
+    """Name -> callable registry with a fail-fast, name-listing lookup."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, Callable] = {}
+
+    def register(self, name: str) -> Callable[[Callable], Callable]:
+        def deco(fn: Callable) -> Callable:
+            if name in self._entries:
+                raise ValueError(
+                    f"duplicate {self.kind} registration: {name!r}")
+            self._entries[name] = fn
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> Callable:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{', '.join(self.names())}") from None
+
+    def validate(self, name: str) -> str:
+        """Raise ValueError (listing valid names) unless ``name`` is
+        registered; returns the name so callers can chain."""
+        self.get(name)
+        return name
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+
+METRICS = Registry("metric")
+CLUSTERINGS = Registry("clustering")
+MERGES = Registry("merge")
+PLANNERS = Registry("planner")  # compression methods: hc_smoe, prunes, m_smoe
+
+register_metric = METRICS.register
+register_clustering = CLUSTERINGS.register
+register_merge = MERGES.register
+register_planner = PLANNERS.register

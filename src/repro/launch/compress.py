@@ -1,0 +1,166 @@
+"""Compression-plan CLI: compute / inspect / apply a MergePlan offline.
+
+The plan is the deployable artifact of retraining-free compression
+(``docs/compression_api.md``): calibration + clustering run ONCE here, the
+resulting JSON+npz directory is what serving, benchmarks, and CI consume.
+
+  # stage 1 (calibration-dependent): compute and save a plan
+  PYTHONPATH=src python -m repro.launch.compress compute \
+      --arch mixtral-8x7b --reduced --target 4 --out /tmp/plan
+
+  # audit provenance (method, metric, per-layer targets, feature hashes)
+  PYTHONPATH=src python -m repro.launch.compress inspect /tmp/plan
+
+  # stage 2 (calibration-free): apply to params and save a checkpoint
+  PYTHONPATH=src python -m repro.launch.compress apply \
+      --arch mixtral-8x7b --reduced /tmp/plan --out-checkpoint /tmp/merged
+
+  # serve it (applies the plan at engine load time)
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+      --reduced --merge-plan /tmp/plan
+
+``--checkpoint DIR`` (compute/apply) starts from a saved params checkpoint
+instead of the seeded init; defaults match ``serve.py --merge-to`` so the
+CI compress->serve smoke is token-identical to in-memory merging.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _build(args):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.init_seed))
+    if args.checkpoint:
+        from repro.checkpoint import CheckpointManager
+
+        restored, step = CheckpointManager(args.checkpoint).restore(
+            {"params": params})
+        params = restored["params"]
+        print(f"restored params from {args.checkpoint} @ step {step}")
+    return cfg, model, params
+
+
+def cmd_compute(args) -> None:
+    from repro.checkpoint import save_plan
+    from repro.core import PlanSpec, compute_plan, plan_summary
+    from repro.core.calibration import collect_moe_stats
+    from repro.data import calibration_batches
+
+    cfg, model, params = _build(args)
+    if cfg.moe is None:
+        raise SystemExit(f"{cfg.name} has no MoE layers to compress")
+    # per-method metric default: M-SMoE groups on router logits (paper §4.1)
+    metric = args.metric or ("router_logits" if args.method == "m_smoe"
+                             else "expert_output")
+    spec = PlanSpec(
+        target_experts=args.target, method=args.method,
+        metric=metric, clustering=args.clustering,
+        linkage=args.linkage, merge=args.merge,
+        fix_dom_feature=args.fix_dom_feature,
+        non_uniform=args.non_uniform, resize=not args.no_resize,
+        seed=args.seed, samples=args.samples)
+    calib = calibration_batches(cfg, n_seqs=args.calib_seqs,
+                                seq_len=args.calib_len,
+                                batch=args.calib_batch)
+    t0 = time.time()
+    stats = collect_moe_stats(model, params, calib)
+    t1 = time.time()
+    plan = compute_plan(cfg, params, stats, spec)
+    t2 = time.time()
+    path = save_plan(args.out, plan)
+    print(plan_summary(plan))
+    print(f"calibration {t1 - t0:.1f}s, planning {t2 - t1:.1f}s")
+    print(f"saved plan to {path}")
+
+
+def cmd_inspect(args) -> None:
+    from repro.checkpoint import load_plan
+    from repro.core import plan_summary
+
+    print(plan_summary(load_plan(args.plan)))
+
+
+def cmd_apply(args) -> None:
+    from repro.checkpoint import CheckpointManager, load_plan
+    from repro.core import apply_plan
+
+    cfg, model, params = _build(args)
+    plan = load_plan(args.plan)
+    t0 = time.time()
+    merged = apply_plan(params, plan, executor=args.executor or None)
+    print(f"applied {plan.method} plan ({plan.num_experts} -> {plan.slots} "
+          f"slots, {plan.num_layers} layers) in {time.time() - t0:.1f}s")
+    mgr = CheckpointManager(args.out_checkpoint, keep=1)
+    out = mgr.save(0, {"params": merged,
+                       "meta": {"merge_plan": plan.spec,
+                                "plan_method": plan.method,
+                                "arch": cfg.name}})
+    print(f"saved merged checkpoint to {out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def model_flags(p):
+        p.add_argument("--arch", default="mixtral-8x7b")
+        p.add_argument("--reduced", action="store_true")
+        p.add_argument("--init-seed", type=int, default=0)
+        p.add_argument("--checkpoint", default="",
+                       help="restore params from this checkpoint dir "
+                            "instead of the seeded init")
+
+    pc = sub.add_parser("compute", help="calibrate and save a plan")
+    model_flags(pc)
+    pc.add_argument("--target", type=int, required=True,
+                    help="target experts per layer")
+    pc.add_argument("--method", default="hc_smoe",
+                    help="planner: hc_smoe | f_prune | s_prune | o_prune | "
+                         "m_smoe (extensible via @register_planner)")
+    pc.add_argument("--metric", default="",
+                    help="similarity metric (default: expert_output; "
+                         "m_smoe defaults to router_logits per the paper)")
+    pc.add_argument("--clustering", default="hc")
+    pc.add_argument("--linkage", default="average")
+    pc.add_argument("--merge", default="frequency")
+    pc.add_argument("--fix-dom-feature", default="act")
+    pc.add_argument("--non-uniform", action="store_true")
+    pc.add_argument("--no-resize", action="store_true")
+    pc.add_argument("--seed", type=int, default=0)
+    pc.add_argument("--samples", type=int, default=64,
+                    help="o_prune subset-search budget")
+    pc.add_argument("--calib-seqs", type=int, default=8)
+    pc.add_argument("--calib-len", type=int, default=128)
+    pc.add_argument("--calib-batch", type=int, default=4)
+    pc.add_argument("--out", required=True, help="plan output directory")
+    pc.set_defaults(fn=cmd_compute)
+
+    pi = sub.add_parser("inspect", help="print a saved plan's provenance")
+    pi.add_argument("plan", help="plan directory")
+    pi.set_defaults(fn=cmd_inspect)
+
+    pa = sub.add_parser("apply", help="apply a saved plan to params and "
+                                      "save the merged checkpoint")
+    model_flags(pa)
+    pa.add_argument("plan", help="plan directory")
+    pa.add_argument("--executor", default="", choices=("", "jax", "numpy"),
+                    help="override the plan's default executor")
+    pa.add_argument("--out-checkpoint", required=True)
+    pa.set_defaults(fn=cmd_apply)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,12 @@ telemetry.
       --merge-to 4 --requests 6 --temperature 0.7 --top-p 0.9 \
       --attn-impl pallas
 
+Serving a saved compression plan (computed offline by
+``python -m repro.launch.compress compute``; the engine applies it to the
+params at load time — no calibration in the serving process):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --merge-plan /tmp/plan
+
 Expert-parallel serving (shards every MoE expert stack over the 'model'
 axis; on a CPU dev box force a multi-device view first):
 
@@ -22,7 +28,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving import (
+    Request, SamplingParams, ServingConfig, ServingEngine)
 
 
 def main():
@@ -31,6 +38,9 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--merge-to", type=int, default=0,
                     help="HC-SMoE: merge experts to this count before serving")
+    ap.add_argument("--merge-plan", default="",
+                    help="saved MergePlan directory (launch/compress.py); "
+                         "applied to the params at engine load time")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -74,6 +84,17 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    if args.merge_to and args.merge_plan:
+        raise SystemExit("--merge-to recalibrates in-process; --merge-plan "
+                         "serves a precomputed plan — pick one")
+    merge_plan = None
+    if args.merge_plan:
+        from repro.checkpoint import load_plan
+
+        merge_plan = load_plan(args.merge_plan)
+        print(f"serving {merge_plan.method} plan from {args.merge_plan} "
+              f"({merge_plan.num_experts} -> {merge_plan.slots} slots, "
+              f"{merge_plan.num_layers} layers)")
     if args.merge_to and cfg.moe is not None:
         from repro.core import HCSMoEConfig, run_hcsmoe
         from repro.data import calibration_batches
@@ -95,8 +116,8 @@ def main():
                                   ep=True, moe_mode=args.moe_mode)
         print(f"expert-parallel serving on {mesh}")
 
-    engine = ServingEngine(
-        model, params, batch_slots=args.slots,
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=args.slots,
         max_len=args.prompt_len + args.max_new + 8,
         moe_mode=args.moe_mode, attn_impl=args.attn_impl,
         bucket_prompts=False if args.no_bucketing else None,
@@ -104,7 +125,7 @@ def main():
         kv_page_size=args.kv_page_size or None,
         kv_pages=args.kv_pages or None,
         prefill_chunk=args.prefill_chunk or None,
-        parallel=parallel, mesh=mesh)
+        parallel=parallel, mesh=mesh, merge_plan=merge_plan))
     if args.ep:
         eb = engine.expert_bytes_per_device()
         print(f"expert params: {eb['total'] / 1e6:.2f} MB total, "

@@ -3,5 +3,5 @@ from repro.models.kvcache import (  # noqa: F401
 from repro.serving.bucketing import (  # noqa: F401
     bucket_length, num_buckets, plan_chunks, supports_bucketing)
 from repro.serving.engine import (  # noqa: F401
-    Request, ServingEngine, ServingStats)
+    Request, ServingConfig, ServingEngine, ServingStats)
 from repro.serving.sampling import GREEDY, SamplingParams  # noqa: F401

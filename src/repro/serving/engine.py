@@ -2,11 +2,19 @@
 
 The merged-expert serving path is first-class: pass HC-SMoE-merged params
 and the engine runs them unchanged (group_map routing) — the paper's
-deployment story. Decode is a single fused jit step over the whole slot
+deployment story. Alternatively hand the engine an offline-computed
+compression plan (``ServingConfig(merge_plan=...)``, see
+:mod:`repro.core.plan` and ``launch/serve.py --merge-plan``) and it applies
+the plan to the params at load time — no calibration machinery in the
+serving process. Decode is a single fused jit step over the whole slot
 batch; finished requests free their slot and the scheduler refills from the
 FCFS queue.
 
-Engine anatomy (and the knobs that control it):
+Engine knobs live on :class:`ServingConfig`
+(``ServingEngine(model, params, config=ServingConfig(...))``; flat kwargs
+remain as a back-compat construction path, and
+:meth:`ServingConfig.validate` is the single home of the paged/EP/pallas
+compatibility rules). Engine anatomy (and the knobs that control it):
 
 * **Bucketed batched prefill** (``bucket_prompts``, ``min_bucket``,
   ``prefill_batch``): admission right-pads up to ``prefill_batch`` queued
@@ -162,23 +170,75 @@ class ServingStats:
     kv_bytes_contiguous: int = 0   # what the contiguous layout provisions
 
 
-class ServingEngine:
-    def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512, moe_mode: str = "ragged",
-                 eos_id: Optional[int] = None,
-                 bucket_prompts: Optional[bool] = None,
-                 min_bucket: int = 8,
-                 prefill_batch: Optional[int] = None,
-                 attn_impl: Optional[str] = None,
-                 kv_layout: str = "contiguous",
-                 kv_page_size: Optional[int] = None,
-                 kv_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None,
-                 parallel=None, mesh=None):
-        if kv_layout not in ("contiguous", "paged"):
+@dataclass
+class ServingConfig:
+    """Engine configuration (see the class docstring above for what each
+    knob controls). ``ServingEngine(model, params, config=ServingConfig(...))``
+    is the canonical constructor; the flat-kwarg form remains as a
+    back-compat path that builds one of these. :meth:`validate` is the ONE
+    site holding the paged/EP/pallas incompatibility rules."""
+    batch_slots: int = 4
+    max_len: int = 512
+    moe_mode: str = "ragged"
+    eos_id: Optional[int] = None
+    bucket_prompts: Optional[bool] = None
+    min_bucket: int = 8
+    prefill_batch: Optional[int] = None
+    attn_impl: Optional[str] = None        # None: keep model.cfg.attn_impl
+    kv_layout: str = "contiguous"          # contiguous | paged
+    kv_page_size: Optional[int] = None
+    kv_pages: Optional[int] = None
+    prefill_chunk: Optional[int] = None    # paged layout only
+    parallel: Optional[object] = None      # ParallelConfig for EP serving
+    mesh: Optional[object] = None
+    # compression plan (repro.core.plan.MergePlan) applied to the served
+    # params at engine load time — the offline-computed artifact path
+    merge_plan: Optional[object] = None
+
+    def validate(self, model_cfg=None) -> None:
+        """Canonical cross-feature compatibility rules. Pure-config rules
+        always run; rules needing the (post-``attn_impl``-rebuild) model
+        config run when ``model_cfg`` is given."""
+        if self.kv_layout not in ("contiguous", "paged"):
             raise ValueError(
                 f"kv_layout must be 'contiguous' or 'paged', got "
-                f"{kv_layout!r}")
+                f"{self.kv_layout!r}")
+        paged = self.kv_layout == "paged"
+        if not paged and self.prefill_chunk:
+            raise ValueError(
+                "prefill_chunk > 0 requires kv_layout='paged' (chunked "
+                "prefill writes the cache page-by-page)")
+        if self.parallel is not None and paged:
+            raise NotImplementedError(
+                "kv_layout='paged' under expert-parallel serving needs "
+                "sharded page pools; use kv_layout='contiguous' with "
+                "parallel= (tracked in ROADMAP)")
+        if model_cfg is None:
+            return
+        attn = self.attn_impl or model_cfg.attn_impl
+        if self.parallel is not None and attn == "pallas":
+            raise NotImplementedError(
+                "attn_impl='pallas' under expert-parallel serving needs a "
+                "partitioning rule for the pallas_call; use attn_impl='jnp' "
+                "with parallel= (tracked in ROADMAP)")
+        if paged and not supports_paging(model_cfg):
+            raise ValueError(
+                f"{model_cfg.name}: kv_layout='paged' requires "
+                "attention-family mixers only (MLA / recurrent state "
+                "and enc-dec caches keep the contiguous layout)")
+
+
+class ServingEngine:
+    def __init__(self, model, params, *,
+                 config: Optional[ServingConfig] = None, **kwargs):
+        if config is None:
+            config = ServingConfig(**kwargs)  # back-compat kwarg path
+        elif kwargs:
+            raise ValueError(
+                f"pass config= or individual engine kwargs, not both "
+                f"(got config and {sorted(kwargs)})")
+        self.config = config
+        attn_impl = config.attn_impl
         if attn_impl is not None and attn_impl != model.cfg.attn_impl:
             # build_model closes over cfg, so a backend switch needs a
             # rebuild (cheap: closures only, no params)
@@ -188,11 +248,22 @@ class ServingEngine:
 
             model = build_model(
                 dataclasses.replace(model.cfg, attn_impl=attn_impl))
-        if parallel is not None and model.cfg.attn_impl == "pallas":
-            raise NotImplementedError(
-                "attn_impl='pallas' under expert-parallel serving needs a "
-                "partitioning rule for the pallas_call; use attn_impl='jnp' "
-                "with parallel= (tracked in ROADMAP)")
+        config.validate(model.cfg)
+        if config.merge_plan is not None:
+            # serve a compression plan computed offline: apply it to the
+            # params before any EP padding/sharding sees them
+            from repro.core.plan import apply_plan
+
+            params = apply_plan(params, config.merge_plan)
+        max_len = config.max_len
+        moe_mode = config.moe_mode
+        bucket_prompts = config.bucket_prompts
+        kv_layout = config.kv_layout
+        prefill_chunk = config.prefill_chunk
+        batch_slots = config.batch_slots
+        kv_page_size = config.kv_page_size
+        kv_pages = config.kv_pages
+        parallel, mesh = config.parallel, config.mesh
         self.model = model
         self.cfg = model.cfg
         self.attn_impl = self.cfg.attn_impl
@@ -207,32 +278,19 @@ class ServingEngine:
         self.paged = kv_layout == "paged"
         # cfg.prefill_chunk only takes effect under the paged layout; an
         # EXPLICIT prefill_chunk argument with contiguous is an error
+        # (rejected in ServingConfig.validate)
         self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
                               else model.cfg.prefill_chunk) if self.paged \
             else 0
         if self.paged:
-            if parallel is not None:
-                raise NotImplementedError(
-                    "kv_layout='paged' under expert-parallel serving needs "
-                    "sharded page pools; use kv_layout='contiguous' with "
-                    "parallel= (tracked in ROADMAP)")
-            if not supports_paging(model.cfg):
-                raise ValueError(
-                    f"{model.cfg.name}: kv_layout='paged' requires "
-                    "attention-family mixers only (MLA / recurrent state "
-                    "and enc-dec caches keep the contiguous layout)")
             self.page_size = min(kv_page_size or model.cfg.kv_page_size,
                                  max_len)
             max_len += (-max_len) % self.page_size
-        elif prefill_chunk:
-            raise ValueError(
-                "prefill_chunk > 0 requires kv_layout='paged' (chunked "
-                "prefill writes the cache page-by-page)")
         self.max_len = max_len
         self.moe_mode = moe_mode
-        self.eos_id = eos_id
-        self.min_bucket = min_bucket
-        self.prefill_batch = prefill_batch or batch_slots
+        self.eos_id = config.eos_id
+        self.min_bucket = config.min_bucket
+        self.prefill_batch = config.prefill_batch or batch_slots
         if bucket_prompts is None:
             bucket_prompts = supports_bucketing(self.cfg, max_len)
         elif bucket_prompts and not supports_bucketing(self.cfg, max_len):

@@ -1,0 +1,117 @@
+"""compress CLI + serve --merge-plan end-to-end: the compress->serve smoke.
+
+Covers the full artifact lifecycle through the real CLIs (compute ->
+inspect -> apply -> serve) and pins the deployment contract: an engine
+serving a SAVED plan generates token-for-token the same greedy output as an
+engine running in-memory ``run_hcsmoe`` merging with the same calibration.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(argv, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-m", *argv], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, (argv, out.stderr[-3000:])
+    return out.stdout
+
+
+def test_compute_inspect_apply_serve_cli(tmp_path):
+    plan_dir = str(tmp_path / "plan")
+    out = _run(["repro.launch.compress", "compute", "--arch", "mixtral-8x7b",
+                "--reduced", "--target", "4", "--calib-seqs", "4",
+                "--calib-len", "32", "--out", plan_dir])
+    assert "saved plan to" in out
+    assert os.path.exists(os.path.join(plan_dir, "plan.json"))
+    assert os.path.exists(os.path.join(plan_dir, "plan.npz"))
+
+    out = _run(["repro.launch.compress", "inspect", plan_dir])
+    assert "method=hc_smoe" in out
+    assert "8 -> 4" in out
+    assert "feat#" in out
+
+    ckpt = str(tmp_path / "merged_ckpt")
+    out = _run(["repro.launch.compress", "apply", "--arch", "mixtral-8x7b",
+                "--reduced", plan_dir, "--out-checkpoint", ckpt])
+    assert "saved merged checkpoint" in out
+
+    out = _run(["repro.launch.serve", "--reduced", "--merge-plan", plan_dir,
+                "--requests", "3", "--max-new", "6"])
+    assert "serving hc_smoe plan" in out
+    assert "served 3 requests" in out
+
+
+def test_merge_to_and_merge_plan_are_mutually_exclusive(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--reduced",
+         "--merge-to", "4", "--merge-plan", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode != 0
+    assert "pick one" in (out.stderr + out.stdout)
+
+
+@pytest.fixture(scope="module")
+def plan_vs_inmemory():
+    """Both serving setups built from identical seeds + calibration: one
+    merges in-memory via run_hcsmoe, one applies a disk-round-tripped plan
+    at engine load (ServingConfig.merge_plan)."""
+    from repro.checkpoint import load_plan, save_plan
+    from repro.configs import get_config
+    from repro.core import (
+        HCSMoEConfig, collect_moe_stats, compute_plan, run_hcsmoe)
+    from repro.data import calibration_batches
+    from repro.models import build_model
+
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calibration_batches(cfg, n_seqs=4, seq_len=32, batch=4)
+    merged_inmem, _ = run_hcsmoe(model, params, calib,
+                                 HCSMoEConfig(target_experts=4))
+    stats = collect_moe_stats(model, params, calib)
+    plan = compute_plan(cfg, params, stats, HCSMoEConfig(target_experts=4))
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        save_plan(os.path.join(td, "plan"), plan)
+        reloaded = load_plan(os.path.join(td, "plan"))
+    return cfg, model, params, merged_inmem, reloaded
+
+
+def test_served_plan_matches_in_memory_merge_token_for_token(
+        plan_vs_inmemory):
+    from repro.serving import Request, ServingConfig, ServingEngine
+
+    cfg, model, params, merged_inmem, plan = plan_vs_inmemory
+
+    def serve(engine):
+        rng = np.random.RandomState(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.randint(0, cfg.vocab_size, 12)
+                        .astype(np.int32),
+                        max_new_tokens=8) for i in range(4)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        return [r.generated for r in reqs]
+
+    eng_inmem = ServingEngine(model, merged_inmem,
+                              config=ServingConfig(batch_slots=2,
+                                                   max_len=64))
+    eng_plan = ServingEngine(model, params,
+                             config=ServingConfig(batch_slots=2, max_len=64,
+                                                  merge_plan=plan))
+    assert serve(eng_inmem) == serve(eng_plan)

@@ -1,0 +1,255 @@
+"""MergePlan artifact contract: save/load round-trips apply bit-identically,
+provenance mismatches fail fast, registry validation fails at construction,
+and the deprecated apply_hcsmoe shim equals apply_plan∘compute_plan."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_plan, save_plan
+from repro.configs import get_config
+from repro.core import (
+    HCSMoEConfig, PlanMismatchError, PlanSpec, apply_hcsmoe, apply_plan,
+    collect_moe_stats, compute_plan, plan_summary)
+from repro.core import baselines as bl
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    batches = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                             (2, 32), 0, cfg.vocab_size)}
+               for i in range(2)]
+    stats = collect_moe_stats(model, params, batches)
+    return cfg, model, params, stats
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# the full artifact grid: all four merge methods, every clustering (incl.
+# fcm soft membership), every metric, non-uniform per-layer targets, and the
+# prune/merge baselines
+ROUNDTRIP_SPECS = [
+    PlanSpec(target_experts=4),
+    PlanSpec(target_experts=4, merge="average", clustering="kmeans_fix"),
+    PlanSpec(target_experts=4, merge="frequency", clustering="kmeans_rnd",
+             metric="weight"),
+    PlanSpec(target_experts=4, merge="fix_dom"),
+    PlanSpec(target_experts=4, merge="fix_dom", fix_dom_feature="weight"),
+    PlanSpec(target_experts=4, merge="zipit"),
+    PlanSpec(target_experts=4, clustering="fcm", resize=False),
+    PlanSpec(target_experts=4, non_uniform=True, resize=False),
+    PlanSpec(target_experts=4, metric="router_logits", linkage="complete"),
+    PlanSpec(target_experts=3, method="f_prune"),
+    PlanSpec(target_experts=3, method="s_prune"),
+    PlanSpec(target_experts=2, method="o_prune", samples=8),
+    PlanSpec(target_experts=4, method="m_smoe", metric="router_logits"),
+]
+
+
+def _spec_id(s):
+    tag = f"{s.method}-{s.merge}-{s.clustering}-{s.metric}"
+    return tag + ("-nonuni" if s.non_uniform else "")
+
+
+@pytest.mark.parametrize("spec", ROUNDTRIP_SPECS, ids=_spec_id)
+def test_roundtrip_is_bit_identical(setup, tmp_path, spec):
+    """compute -> save -> load -> apply == compute -> apply, bit for bit."""
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats, spec)
+    in_memory = apply_plan(params, plan)
+    save_plan(str(tmp_path / "plan"), plan)
+    reloaded = load_plan(str(tmp_path / "plan"))
+    assert reloaded.kind == plan.kind
+    assert reloaded.method == plan.method
+    assert reloaded.spec == plan.spec
+    assert [lp.feature_hash for lp in reloaded.layers] == \
+        [lp.feature_hash for lp in plan.layers]
+    _assert_trees_equal(in_memory, apply_plan(params, reloaded))
+
+
+def test_reloaded_plan_serves_a_working_model(setup, tmp_path):
+    cfg, model, params, stats = setup
+    save_plan(str(tmp_path / "p"),
+              compute_plan(cfg, params, stats, PlanSpec(target_experts=4)))
+    merged = apply_plan(params, load_plan(str(tmp_path / "p")))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    logits, _ = model.forward(merged, tokens=toks, moe_mode="ragged")
+    assert bool(np.isfinite(np.asarray(logits)).all())
+
+
+@pytest.mark.parametrize("hc", [
+    HCSMoEConfig(target_experts=4),
+    HCSMoEConfig(target_experts=4, merge="average"),
+    HCSMoEConfig(target_experts=4, merge="fix_dom"),
+    HCSMoEConfig(target_experts=4, clustering="kmeans_rnd", metric="weight"),
+    HCSMoEConfig(target_experts=4, clustering="fcm", resize=False),
+    HCSMoEConfig(target_experts=4, non_uniform=True, resize=False),
+], ids=lambda h: f"{h.merge}-{h.clustering}-{h.metric}")
+def test_deprecated_shim_parity(setup, hc):
+    """apply_hcsmoe == apply_plan ∘ compute_plan (pinned bit-for-bit)."""
+    cfg, model, params, stats = setup
+    via_shim, info = apply_hcsmoe(cfg, params, stats, hc)
+    via_plan = apply_plan(params, compute_plan(cfg, params, stats, hc))
+    _assert_trees_equal(via_shim, via_plan)
+    # the shim surfaces the plan it computed
+    assert info["plan"].num_experts == cfg.moe.num_experts
+
+
+def test_prune_plan_semantics(setup):
+    """Prune plans carry keep masks; applying them masks the router and
+    zeroes pruned experts (same contract as the legacy baselines)."""
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats,
+                        PlanSpec(target_experts=3, method="f_prune"))
+    assert plan.kind == "prune"
+    pruned = apply_plan(params, plan)
+    legacy, info = bl.f_prune(cfg, params, stats, 3)
+    _assert_trees_equal(pruned, legacy)
+    moe = pruned["decoder"]["blocks"]["layer0"]["moe"]
+    keep = np.asarray(plan.layers[0].keep)
+    rmask = np.asarray(moe["router_mask"][0])
+    assert (rmask[keep] == 0).all() and (rmask[~keep] <= -1e8).all()
+    assert not np.asarray(moe["wg"][0])[~keep].any()
+
+
+def test_mismatch_wrong_expert_count(setup):
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats, PlanSpec(target_experts=4))
+    cfg6 = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=6))
+    params6 = build_model(cfg6).init(jax.random.PRNGKey(0))
+    with pytest.raises(PlanMismatchError, match="experts"):
+        apply_plan(params6, plan)
+
+
+def test_mismatch_wrong_layer_count(setup):
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats, PlanSpec(target_experts=4))
+    deeper = dataclasses.replace(cfg, num_layers=2 * cfg.num_layers)
+    params2 = build_model(deeper).init(jax.random.PRNGKey(0))
+    with pytest.raises(PlanMismatchError, match="block|position"):
+        apply_plan(params2, plan)
+    corrupt = dataclasses.replace(plan, num_layers=plan.num_layers + 1)
+    with pytest.raises(PlanMismatchError, match="corrupt"):
+        apply_plan(params, corrupt)
+
+
+def test_validation_fails_at_construction():
+    """Unknown names raise at dataclass construction (fail-fast satellite),
+    listing the registered alternatives."""
+    with pytest.raises(ValueError, match="expert_output"):
+        HCSMoEConfig(target_experts=4, metric="nope")
+    with pytest.raises(ValueError, match="hc"):
+        HCSMoEConfig(target_experts=4, clustering="nope")
+    with pytest.raises(ValueError, match="frequency"):
+        HCSMoEConfig(target_experts=4, merge="nope")
+    with pytest.raises(ValueError, match="average"):
+        HCSMoEConfig(target_experts=4, linkage="nope")
+    with pytest.raises(ValueError, match="act"):
+        HCSMoEConfig(target_experts=4, fix_dom_feature="nope")
+    with pytest.raises(ValueError, match="hc_smoe"):
+        PlanSpec(target_experts=4, method="nope")
+    # planner-specific constraints fail at construction too, not after a
+    # full calibration pass (m_smoe only merges via combine matrices)
+    with pytest.raises(ValueError, match="combine"):
+        PlanSpec(target_experts=4, method="m_smoe", merge="fix_dom")
+
+
+def test_executors_agree(setup):
+    """The numpy reference and the sharded-jax einsum executor agree on
+    combine plans (float32-tight, not bit-exact by design)."""
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats, PlanSpec(target_experts=4))
+    via_jax = apply_plan(params, plan, executor="jax")
+    via_np = apply_plan(params, plan, executor="numpy")
+    for a, b in zip(jax.tree_util.tree_leaves(via_jax),
+                    jax.tree_util.tree_leaves(via_np)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_jax_executor_rejects_hidden_map_plans(setup):
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats,
+                        PlanSpec(target_experts=4, merge="fix_dom"))
+    assert plan.default_executor == "numpy"
+    with pytest.raises(ValueError, match="hidden_map"):
+        apply_plan(params, plan, executor="jax")
+
+
+def test_apply_plan_does_not_mutate_inputs(setup):
+    cfg, model, params, stats = setup
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), params)
+    plan = compute_plan(cfg, params, stats, PlanSpec(target_experts=4))
+    apply_plan(params, plan)
+    _assert_trees_equal(params, before)
+
+
+def test_fcm_plan_combine_is_soft_membership(setup):
+    """FCM plans bake U^T into the combine matrix (Eq. 15)."""
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats,
+                        PlanSpec(target_experts=4, clustering="fcm",
+                                 resize=False))
+    lp = plan.layers[0]
+    U = lp.extras["membership"]
+    assert U.shape == (cfg.moe.num_experts, 4)
+    np.testing.assert_array_equal(lp.combine[:4], U.T)
+    assert not lp.combine[4:].any()  # padded rows are dead slots
+
+
+def test_non_uniform_targets_recorded(setup):
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats,
+                        PlanSpec(target_experts=4, non_uniform=True,
+                                 resize=False))
+    assert plan.slots == cfg.moe.num_experts
+    for lp in plan.layers:
+        assert 1 <= lp.target <= cfg.moe.num_experts
+        assert int(lp.labels.max()) + 1 == lp.target
+
+
+def test_plan_summary_reports_provenance(setup):
+    cfg, model, params, stats = setup
+    plan = compute_plan(cfg, params, stats,
+                        PlanSpec(target_experts=4, seed=3))
+    text = plan_summary(plan)
+    for needle in ("hc_smoe", "metric=expert_output", "seed=3",
+                   "feat#", "cluster_sizes="):
+        assert needle in text
+
+
+def test_custom_registry_entry_end_to_end(setup):
+    """@register_metric extension point: a new metric becomes a valid spec
+    value and drives compute_plan without touching any dispatch site."""
+    cfg, model, params, stats = setup
+    from repro.core.registry import METRICS, register_metric
+
+    name = "test_only_mean_weight"
+    if name not in METRICS:  # module-scoped fixture may rerun the test file
+        @register_metric(name)
+        def _mean_weight(st, weights):
+            wg, wu, wd = weights
+            return np.asarray(wg, np.float64).mean(axis=1)
+
+    plan = compute_plan(cfg, params, stats,
+                        PlanSpec(target_experts=4, metric=name))
+    merged = apply_plan(params, plan)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
+                              cfg.vocab_size)
+    logits, _ = model.forward(merged, tokens=toks, moe_mode="dense")
+    assert bool(np.isfinite(np.asarray(logits)).all())

@@ -548,3 +548,98 @@ def test_merged_model_serving_parity(served, merged_served):
     engine.run()
     for r, ref in zip(reqs, refs):
         assert r.done and r.generated == ref, (r.uid, r.generated, ref)
+
+
+# ---------------------------------------------------------------------------
+# ServingConfig: the canonical engine configuration surface
+# ---------------------------------------------------------------------------
+
+
+class TestServingConfig:
+    def test_config_and_kwarg_paths_are_equivalent(self, served):
+        """ServingEngine(model, p, config=ServingConfig(...)) generates the
+        same greedy tokens as the legacy flat-kwarg constructor."""
+        cfg, model, params = served
+        from repro.serving import ServingConfig
+
+        def serve(engine):
+            rng = np.random.RandomState(5)
+            reqs = [Request(uid=i,
+                            prompt=rng.randint(0, cfg.vocab_size, 6)
+                            .astype(np.int32),
+                            max_new_tokens=4) for i in range(3)]
+            for r in reqs:
+                engine.submit(r)
+            engine.run()
+            return [r.generated for r in reqs]
+
+        via_kwargs = ServingEngine(model, params, batch_slots=2, max_len=32)
+        via_config = ServingEngine(
+            model, params, config=ServingConfig(batch_slots=2, max_len=32))
+        assert serve(via_kwargs) == serve(via_config)
+
+    def test_config_plus_kwargs_rejected(self, served):
+        cfg, model, params = served
+        from repro.serving import ServingConfig
+
+        with pytest.raises(ValueError, match="not both"):
+            ServingEngine(model, params, config=ServingConfig(),
+                          batch_slots=2)
+
+    def test_unknown_kwarg_rejected(self, served):
+        cfg, model, params = served
+        with pytest.raises(TypeError):
+            ServingEngine(model, params, batch_slotz=2)
+
+    def test_validate_is_the_canonical_incompatibility_site(self, served):
+        """The paged/EP/pallas rules live on ServingConfig.validate and
+        reject bad combinations without building an engine."""
+        cfg, model, params = served
+        from repro.parallel import ParallelConfig
+        from repro.serving import ServingConfig
+
+        pc = ParallelConfig(fsdp_axis=None, weight_gather=False, ep=True)
+        with pytest.raises(ValueError, match="kv_layout"):
+            ServingConfig(kv_layout="ring").validate()
+        with pytest.raises(ValueError, match="paged"):
+            ServingConfig(prefill_chunk=8).validate()
+        with pytest.raises(NotImplementedError, match="page pools"):
+            ServingConfig(kv_layout="paged", parallel=pc).validate()
+        with pytest.raises(NotImplementedError, match="partitioning"):
+            ServingConfig(attn_impl="pallas", parallel=pc).validate(cfg)
+        # and the engine constructor routes through the same site
+        with pytest.raises(NotImplementedError, match="page pools"):
+            ServingEngine(model, params, kv_layout="paged", parallel=pc)
+
+    def test_merge_plan_applied_at_load(self, served, merged_served):
+        """ServingConfig(merge_plan=...) == serving pre-merged params."""
+        cfg, model, params = served
+        from repro.core import HCSMoEConfig, collect_moe_stats, compute_plan
+        from repro.serving import ServingConfig
+
+        key = jax.random.PRNGKey(3)
+        calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                               (2, 32), 0, cfg.vocab_size)}
+                 for i in range(2)]
+        stats = collect_moe_stats(model, params, calib)
+        plan = compute_plan(cfg, params, stats,
+                            HCSMoEConfig(target_experts=4))
+
+        def serve(engine):
+            rng = np.random.RandomState(9)
+            reqs = [Request(uid=i,
+                            prompt=rng.randint(0, cfg.vocab_size, 5)
+                            .astype(np.int32),
+                            max_new_tokens=4) for i in range(2)]
+            for r in reqs:
+                engine.submit(r)
+            engine.run()
+            return [r.generated for r in reqs]
+
+        pre_merged = ServingEngine(model, merged_served, batch_slots=2,
+                                   max_len=32)
+        plan_loaded = ServingEngine(
+            model, params,
+            config=ServingConfig(batch_slots=2, max_len=32,
+                                 merge_plan=plan))
+        assert serve(pre_merged) == serve(plan_loaded)
