@@ -15,7 +15,8 @@ def run(ctx):
         r = max(1, int(round(cfg.moe.num_experts * frac)))
         for metric in ["router_logits", "weight", "expert_output"]:
             merged, us = timed(
-                lambda: bl.m_smoe(cfg, params, stats, r, metric=metric)[0])
+                lambda m=metric: bl.m_smoe(cfg, params, stats, r,
+                                           metric=m)[0])
             row = {"grouping": "one-shot", "metric": metric, "reduction": label,
                    **ctx.eval_model(merged)}
             rows.append(row)

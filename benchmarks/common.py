@@ -144,5 +144,5 @@ def emit_csv(name: str, us_per_call: float, derived):
 
 def timed(fn, *args, **kw):
     t0 = time.time()
-    out = fn(*args, **kw)
+    out = jax.block_until_ready(fn(*args, **kw))
     return out, (time.time() - t0) * 1e6

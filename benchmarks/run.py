@@ -46,7 +46,9 @@ def main() -> None:
     for name, module in TABLES:
         if only and name not in only:
             continue
-        t0 = time.time()
+        # host wall-clock per table (subprocess-style aggregate), not a
+        # kernel measurement — per-op timing happens inside each module
+        t0 = time.time()  # noqa: RPR005
         print(f"# --- {name} ---", flush=True)
         try:
             import importlib

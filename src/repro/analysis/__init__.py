@@ -1,0 +1,33 @@
+"""Static analysis for the repro codebase: kernel contract verification,
+JAX-hazard linting, and runtime shape/dtype contracts.
+
+Three layers (docs/static_analysis.md):
+
+  * ``kernel_verify`` — host-side exhaustive verification of every
+    ``pallas_call`` launch site in ``repro.kernels``: index maps are
+    evaluated over the full grid and proved in-bounds / clamp-coherent /
+    covering, out_specs proved to tile the output exactly once.
+  * ``lint`` + ``rules`` — an AST linter for repo-specific JAX hazards ruff
+    cannot express (tracer-dependent Python control flow, module-level jnp
+    constants, collective axis-name typos, un-synchronised timed regions,
+    stringly registry dispatch, prints in library code).
+  * ``contracts`` — the ``@checked`` shape/dtype-spec decorator on the hot
+    public interfaces, enabled under tests/CI and zero-cost when off.
+
+CLI: ``python -m repro.analysis kernels`` / ``python -m repro.analysis lint
+PATH...``. The lint layer is stdlib-only so the CI lint job runs it without
+installing jax; importing :mod:`repro.analysis` itself stays light — the
+jax-dependent verifier loads only on attribute access.
+"""
+from __future__ import annotations
+
+__all__ = ["contracts", "kernel_verify", "lint", "rules"]
+
+
+def __getattr__(name):
+    # lazy: `import repro.analysis.lint` must not pull jax in (CI lint job)
+    if name in __all__:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(name)

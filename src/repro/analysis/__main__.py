@@ -1,0 +1,65 @@
+"""CLI for the static-analysis layer.
+
+``python -m repro.analysis kernels``
+    Run the Pallas kernel contract battery (repro.analysis.kernel_verify):
+    every pallas_call site is launched in interpret mode under a capture
+    hook and its BlockSpec index maps are exhaustively evaluated over the
+    full grid. Needs jax. Exit 1 on any finding.
+
+``python -m repro.analysis lint <paths...>``
+    Run the AST JAX-hazard linter (repro.analysis.lint) over files or
+    directories. Stdlib-only — works without jax installed, so the CI lint
+    job can run it next to ruff. Exit 1 on any finding.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _cmd_kernels() -> int:
+    from repro.analysis.kernel_verify import verify_all
+
+    results = verify_all()
+    n_findings = 0
+    for name, findings in results.items():
+        status = "ok" if not findings else f"{len(findings)} finding(s)"
+        print(f"[kernel-verify] {name}: {status}")
+        for f in findings:
+            print(f"  {f}")
+        n_findings += len(findings)
+    print(f"[kernel-verify] {len(results)} cases, {n_findings} finding(s)")
+    return 1 if n_findings else 0
+
+
+def _cmd_lint(paths) -> int:
+    from repro.analysis.lint import lint_paths
+
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f)
+    print(f"[lint] {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Pallas kernel contract verifier + JAX-hazard linter "
+                    "(rule catalogue: docs/static_analysis.md)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("kernels",
+                   help="verify every pallas_call site's BlockSpec "
+                        "contracts over the full grid (needs jax)")
+    lint = sub.add_parser("lint",
+                          help="AST JAX-hazard linter (stdlib-only)")
+    lint.add_argument("paths", nargs="+",
+                      help="files or directories to lint")
+    args = ap.parse_args(argv)
+    if args.cmd == "kernels":
+        return _cmd_kernels()
+    return _cmd_lint(args.paths)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,151 @@
+"""Runtime shape/dtype contracts for hot interfaces.
+
+``@checked(q="B H hd", pos="B:int", ret="B H hd")`` asserts the shapes of
+the named arguments (and the return value via the reserved key ``ret``)
+when the environment variable ``REPRO_CONTRACTS`` is truthy — tests/CI set
+it — and compiles to the *identity decorator* otherwise: with contracts
+off, ``checked`` returns the function object unchanged, so production call
+paths pay nothing, not even a wrapper frame.
+
+Spec mini-language (stdlib-only; works on numpy arrays AND jax tracers,
+because only static metadata — ``.shape`` / ``.dtype`` — is read, so the
+checks run at trace time under jit):
+
+- ``"B W K hd"``  — rank-4 array; each named dim unifies across all specs
+  of one call (the ``B`` of ``q`` must equal the ``B`` of ``pos``).
+- ``"B 128"``     — integer literals pin a dim exactly.
+- ``"B _"``       — ``_`` matches any size without binding a name.
+- ``"B W:int"``   — a trailing ``:int`` / ``:float`` / ``:bool`` marker
+  checks the dtype kind.
+- a callable      — ``spec(value, dims)`` with the unification env so far;
+  return ``False`` (or raise) to reject, anything else passes.
+
+Violations raise :class:`ContractError` naming the function, argument, and
+the dim that failed to unify.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+from typing import Any, Callable, Dict, Union
+
+__all__ = ["ContractError", "checked", "contracts_enabled"]
+
+
+class ContractError(TypeError):
+    """A @checked shape/dtype contract was violated."""
+
+
+_ENABLED = os.environ.get("REPRO_CONTRACTS", "").lower() not in (
+    "", "0", "false", "off")
+
+
+def contracts_enabled() -> bool:
+    """Whether @checked was armed at import time (REPRO_CONTRACTS)."""
+    return _ENABLED
+
+
+def _dtype_kind(value: Any) -> str:
+    name = str(getattr(value, "dtype", ""))
+    if name.startswith(("int", "uint")):
+        return "int"
+    if name.startswith(("float", "bfloat")):
+        return "float"
+    if name == "bool":
+        return "bool"
+    return name
+
+
+def _check_spec(fname: str, arg: str, value: Any, spec: str,
+                dims: Dict[str, int]) -> None:
+    spec = spec.strip()
+    kind = None
+    if ":" in spec:
+        spec, kind = (s.strip() for s in spec.rsplit(":", 1))
+    shape = getattr(value, "shape", None)
+    if shape is None:
+        raise ContractError(
+            f"{fname}: {arg} expected an array with shape ({spec}), got "
+            f"{type(value).__name__}")
+    tokens = spec.split()
+    if len(shape) != len(tokens):
+        raise ContractError(
+            f"{fname}: {arg} expected rank {len(tokens)} ({spec}), got "
+            f"shape {tuple(shape)}")
+    for tok, size in zip(tokens, shape):
+        size = int(size)
+        if tok == "_":
+            continue
+        if tok.isdigit():
+            if size != int(tok):
+                raise ContractError(
+                    f"{fname}: {arg} dim {tok} != {size} "
+                    f"(shape {tuple(shape)})")
+            continue
+        bound = dims.setdefault(tok, size)
+        if bound != size:
+            raise ContractError(
+                f"{fname}: {arg} dim {tok}={size} conflicts with "
+                f"{tok}={bound} bound by an earlier argument "
+                f"(shape {tuple(shape)})")
+    if kind is not None and _dtype_kind(value) != kind:
+        raise ContractError(
+            f"{fname}: {arg} expected {kind} dtype, got "
+            f"{getattr(value, 'dtype', None)}")
+
+
+def _check(fname: str, arg: str, value: Any,
+           spec: Union[str, Callable[..., Any]],
+           dims: Dict[str, int]) -> None:
+    if callable(spec):
+        try:
+            ok = spec(value, dims)
+        except ContractError:
+            raise
+        except Exception as e:
+            raise ContractError(f"{fname}: {arg} predicate raised "
+                                f"{e!r}") from e
+        if ok is False:
+            raise ContractError(
+                f"{fname}: {arg} failed contract predicate "
+                f"{getattr(spec, '__name__', spec)!r}")
+        return
+    _check_spec(fname, arg, value, spec, dims)
+
+
+def checked(**specs: Union[str, Callable[..., Any]]):
+    """Shape/dtype contract decorator; ``ret=`` specs the return value.
+
+    Identity (returns ``fn`` itself) unless REPRO_CONTRACTS was set at
+    import time.
+    """
+    if not _ENABLED:
+        return lambda fn: fn
+
+    ret_spec = specs.pop("ret", None)
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        unknown = set(specs) - set(sig.parameters)
+        if unknown:
+            raise ContractError(
+                f"{fn.__qualname__}: @checked names unknown parameters "
+                f"{sorted(unknown)}")
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            bound = sig.bind(*args, **kwargs)
+            dims: Dict[str, int] = {}
+            for name, spec in specs.items():
+                if name in bound.arguments:
+                    _check(fn.__qualname__, name, bound.arguments[name],
+                           spec, dims)
+            out = fn(*args, **kwargs)
+            if ret_spec is not None:
+                _check(fn.__qualname__, "return", out, ret_spec, dims)
+            return out
+
+        return wrapper
+
+    return deco

@@ -1,0 +1,649 @@
+"""Host-side contract verification for every Pallas kernel launch site.
+
+The verifier intercepts ``pl.pallas_call`` (:func:`capture_launches`) so each
+kernel wrapper in ``repro.kernels`` is driven with real, tiny operands and its
+REAL grid / BlockSpecs / scalar-prefetch operands are captured — nothing is
+re-declared by hand, so the checked spec cannot drift from the shipped one.
+Every BlockSpec index map is then evaluated exhaustively over the full grid
+on the host, and the following invariants are proved per launch
+(:func:`verify_capture`):
+
+  * **in-bounds** — every DMA'd block of every operand lies inside the
+    (padded) array; scalar-prefetch indexing out of SMEM bounds raises.
+  * **divisibility** — block shapes divide their operand dims exactly (the
+    repo convention: wrappers pick gcd tile sizes, never relying on Pallas
+    edge padding).
+  * **clamp coherence** — for operands with DMA-eliding clamped index maps,
+    a tile the kernel's live gate RUNS must fetch its own (nominal) block:
+    ``live(cell)  ⟹  index_map(cell) == nominal(cell)``. A live-gated cell
+    whose DMA was clamped re-reads an already-resident block and
+    double-counts it — exactly the PR 4 sliding-window lower-skip
+    off-by-one. The gate predicates are the module-level ``live_tile*``
+    functions the kernel bodies themselves run (kernels/flash_decode.py,
+    kernels/flash_attention.py), and the clamps live in the index maps, so
+    the two independent formulations are cross-checked, not assumed.
+  * **coverage** — every tile that semantically holds unmasked data (derived
+    from the actual kv_pos/page-table contents of the battery case, NOT from
+    the gate formula) is gated live: the skip logic can never drop real
+    rows.
+  * **output exactly once** — the distinct out-spec block indices tile the
+    output array exactly; each output block is written by exactly one
+    parallel grid point (revisited across all "arbitrary" accumulation
+    steps, per the repo's write-on-last-step convention).
+  * **scalar dtypes** — scalar-prefetch operands are integer-typed (SMEM).
+  * **VMEM budget** — per-step block + scratch bytes stay inside the
+    ~16 MB/core budget.
+
+:func:`build_cases` is the battery: representative shape/position configs for
+all five launch sites (flash_attention, flash_decode, flash_decode_paged,
+moe_gemm, fused_ffn), including ring wrap-around, sliding windows, empty
+slots, the (pos-window) % page == page-1 boundary from the PR 4 bug, gcd
+tiling, and zero-sized expert groups. ``python -m repro.analysis kernels``
+runs it; tests/test_analysis_kernels.py additionally proves the PR 4
+off-by-one is *detected* when reintroduced in a toy kernel.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation at one launch site."""
+
+    site: str
+    check: str        # in_bounds | divisibility | clamp | coverage | output
+                      # | scalars | semantics | vmem | capture
+    message: str
+    cell: Optional[Tuple[int, ...]] = None
+
+    def __str__(self):
+        at = f" at grid cell {self.cell}" if self.cell is not None else ""
+        return f"{self.site}: [{self.check}]{at} {self.message}"
+
+
+@dataclasses.dataclass
+class SpecView:
+    """One captured BlockSpec next to its operand's shape/dtype."""
+
+    block_shape: Tuple[int, ...]
+    index_map: Callable
+    shape: Tuple[int, ...]
+    dtype: np.dtype
+
+
+@dataclasses.dataclass
+class Capture:
+    """Everything recorded from one intercepted ``pl.pallas_call``."""
+
+    kernel_name: str
+    grid: Tuple[int, ...]
+    in_specs: List[SpecView]
+    out_specs: List[SpecView]
+    num_scalar_prefetch: int
+    scalars: Tuple[np.ndarray, ...]
+    dimension_semantics: Optional[Tuple[str, ...]]
+    scratch: List[Tuple[Tuple[int, ...], np.dtype]]
+    operands: Tuple[np.ndarray, ...] = ()
+
+    def cells(self):
+        return itertools.product(*(range(n) for n in self.grid))
+
+    def eval_map(self, spec: SpecView, cell) -> Tuple[int, ...]:
+        idx = spec.index_map(*cell, *self.scalars)
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return tuple(int(c) for c in idx)
+
+
+@contextlib.contextmanager
+def capture_launches(captures: List[Capture]):
+    """Patch ``pallas_call`` so wrapped kernels record their launch spec
+    instead of executing; the fake call returns zeros of ``out_shape``."""
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl_mod
+
+    real = pl_mod.pallas_call
+
+    def fake_pallas_call(kernel, *, grid_spec=None, grid=None, in_specs=None,
+                         out_specs=None, out_shape=None, scratch_shapes=(),
+                         compiler_params=None, interpret=False, **kw):
+        if grid_spec is not None:
+            grid_, in_specs_, out_specs_ = (grid_spec.grid, grid_spec.in_specs,
+                                            grid_spec.out_specs)
+            nsp = getattr(grid_spec, "num_scalar_prefetch", 0)
+            scratch = getattr(grid_spec, "scratch_shapes", ())
+        else:
+            grid_, in_specs_, out_specs_ = grid, in_specs, out_specs
+            nsp, scratch = 0, scratch_shapes
+        if not isinstance(out_specs_, (list, tuple)):
+            out_specs_ = [out_specs_]
+        out_shapes = (list(out_shape) if isinstance(out_shape, (list, tuple))
+                      else [out_shape])
+
+        def runner(*operands):
+            scalars = tuple(np.asarray(s) for s in operands[:nsp])
+            arrays = tuple(np.asarray(a) for a in operands[nsp:])
+            cap = Capture(
+                kernel_name=getattr(kernel, "func", kernel).__name__
+                if hasattr(kernel, "func") else kernel.__name__,
+                grid=tuple(int(g) for g in grid_),
+                in_specs=[SpecView(tuple(s.block_shape), s.index_map,
+                                   a.shape, a.dtype)
+                          for s, a in zip(in_specs_, arrays)],
+                out_specs=[SpecView(tuple(s.block_shape), s.index_map,
+                                    tuple(o.shape), np.dtype(o.dtype))
+                           for s, o in zip(out_specs_, out_shapes)],
+                num_scalar_prefetch=nsp,
+                scalars=scalars,
+                dimension_semantics=getattr(compiler_params,
+                                            "dimension_semantics", None),
+                scratch=[(tuple(getattr(s, "shape", ())),
+                          np.dtype(getattr(s, "dtype", np.float32)))
+                         for s in scratch],
+                operands=arrays,
+            )
+            captures.append(cap)
+            outs = [jnp.zeros(o.shape, o.dtype) for o in out_shapes]
+            return outs[0] if not isinstance(out_shape, (list, tuple)) else outs
+
+        return runner
+
+    pl_mod.pallas_call = fake_pallas_call
+    try:
+        yield captures
+    finally:
+        pl_mod.pallas_call = real
+
+
+@dataclasses.dataclass
+class KernelCase:
+    """One battery entry: a launch trigger plus its semantic contract.
+
+    ``live`` mirrors the kernel's @pl.when compute gate (imported from the
+    kernel module — the same function the kernel body traces). ``nominal``
+    gives, per in-spec position with a DMA-eliding clamped index map, the
+    UNCLAMPED block index a live tile must fetch. ``required_live`` derives,
+    from the captured operand contents alone, the grid cells that must be
+    gated live for correctness.
+    """
+
+    name: str
+    run: Callable[[], None]
+    live: Optional[Callable[[Capture, Tuple[int, ...]], bool]] = None
+    nominal: Dict[int, Callable] = dataclasses.field(default_factory=dict)
+    required_live: Optional[Callable[[Capture], Iterable[Tuple[int, ...]]]] \
+        = None
+
+
+def _check_specs(site, specs, kind, grid, cap, findings):
+    """Shared in-bounds + divisibility sweep; returns per-spec cell->idx."""
+    evaluated = []
+    for si, spec in enumerate(specs):
+        where = f"{kind}_spec[{si}]"
+        if len(spec.block_shape) != len(spec.shape):
+            findings.append(Finding(site, "divisibility",
+                                    f"{where}: block rank "
+                                    f"{len(spec.block_shape)} vs operand rank "
+                                    f"{len(spec.shape)}"))
+            evaluated.append({})
+            continue
+        for d, (b, s) in enumerate(zip(spec.block_shape, spec.shape)):
+            if b is None:
+                continue
+            if b < 1 or b > s:
+                findings.append(Finding(
+                    site, "divisibility",
+                    f"{where}: block dim {d} = {b} outside [1, {s}]"))
+            elif s % b != 0:
+                findings.append(Finding(
+                    site, "divisibility",
+                    f"{where}: block dim {d} = {b} does not divide "
+                    f"operand dim {s} (Pallas would pad; repo convention "
+                    "is exact gcd tiling)"))
+        cell_idx = {}
+        for cell in cap.cells():
+            try:
+                idx = cap.eval_map(spec, cell)
+            except IndexError as e:
+                findings.append(Finding(
+                    site, "scalars",
+                    f"{where}: index map raised on SMEM scalar lookup: {e}",
+                    cell))
+                continue
+            cell_idx[cell] = idx
+            if len(idx) != len(spec.block_shape):
+                findings.append(Finding(
+                    site, "in_bounds",
+                    f"{where}: index map returned rank {len(idx)} vs block "
+                    f"rank {len(spec.block_shape)}", cell))
+                continue
+            for d, (i, b, s) in enumerate(
+                    zip(idx, spec.block_shape, spec.shape)):
+                if b is None:
+                    b = 1
+                if i < 0 or (i + 1) * b > s:
+                    findings.append(Finding(
+                        site, "in_bounds",
+                        f"{where}: block index {idx} puts dim {d} rows "
+                        f"[{i * b}, {(i + 1) * b}) outside operand dim {s}",
+                        cell))
+        evaluated.append(cell_idx)
+    return evaluated
+
+
+def _parallel_arb_dims(cap: Capture):
+    sem = cap.dimension_semantics
+    if sem is None:
+        return tuple(range(len(cap.grid))), ()
+    par = tuple(i for i, s in enumerate(sem) if s == "parallel")
+    arb = tuple(i for i, s in enumerate(sem) if s != "parallel")
+    return par, arb
+
+
+def verify_capture(case: KernelCase, cap: Capture) -> List[Finding]:
+    findings: List[Finding] = []
+    site = f"{case.name}/{cap.kernel_name}"
+
+    # ---- dimension semantics sanity
+    sem = cap.dimension_semantics
+    if sem is not None:
+        if len(sem) != len(cap.grid):
+            findings.append(Finding(
+                site, "semantics",
+                f"dimension_semantics {sem} rank vs grid {cap.grid}"))
+        if any(a == "parallel" and i > 0 and sem[i - 1] != "parallel"
+               for i, a in enumerate(sem)):
+            findings.append(Finding(
+                site, "semantics",
+                f"'parallel' after 'arbitrary' in {sem}: TPU grids need "
+                "accumulation dims innermost"))
+
+    # ---- scalar prefetch operands live in SMEM: integer dtype
+    for i, s in enumerate(cap.scalars):
+        if not np.issubdtype(s.dtype, np.integer):
+            findings.append(Finding(
+                site, "scalars",
+                f"scalar-prefetch operand {i} has dtype {s.dtype}, "
+                "expected an integer SMEM type"))
+
+    # ---- in-bounds + divisibility on every spec over the full grid
+    in_eval = _check_specs(site, cap.in_specs, "in", cap.grid, cap, findings)
+    out_eval = _check_specs(site, cap.out_specs, "out", cap.grid, cap,
+                            findings)
+
+    # ---- live-gate model over the grid
+    live_cells = set()
+    if case.live is not None:
+        for cell in cap.cells():
+            if bool(case.live(cap, cell)):
+                live_cells.add(cell)
+    else:
+        live_cells = set(cap.cells())
+
+    # ---- clamp coherence: a live tile must fetch its own (nominal) block
+    for si, nominal in case.nominal.items():
+        cell_idx = in_eval[si]
+        for cell in cap.cells():
+            if cell not in cell_idx or cell not in live_cells:
+                continue
+            want = tuple(int(c) for c in nominal(cap, cell))
+            got = cell_idx[cell]
+            if got != want:
+                findings.append(Finding(
+                    site, "clamp",
+                    f"in_spec[{si}]: cell is gated LIVE but its DMA is "
+                    f"clamped to block {got} instead of nominal {want} — "
+                    "the kernel would re-read an already-resident block "
+                    "and double-count it (PR 4 bug class)", cell))
+
+    # ---- coverage: semantically required tiles must be gated live
+    if case.required_live is not None:
+        for cell in case.required_live(cap):
+            cell = tuple(int(c) for c in cell)
+            if cell not in live_cells:
+                findings.append(Finding(
+                    site, "coverage",
+                    "tile holds unmasked rows (per the captured kv/pos "
+                    "contents) but the live gate skips it", cell))
+
+    # ---- output blocks: tile the array exactly once
+    par_dims, arb_dims = _parallel_arb_dims(cap)
+    n_arb = int(np.prod([cap.grid[d] for d in arb_dims])) if arb_dims else 1
+    for si, spec in enumerate(cap.out_specs):
+        cell_idx = out_eval[si]
+        if len(cell_idx) != int(np.prod(cap.grid)):
+            continue  # map itself failed; already reported
+        groups: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+        for cell, idx in cell_idx.items():
+            groups.setdefault(idx, []).append(cell)
+        n_blocks = 1
+        ok_shape = True
+        for b, s in zip(spec.block_shape, spec.shape):
+            b = 1 if b is None else b
+            if s % b:
+                ok_shape = False
+            n_blocks *= s // max(b, 1)
+        if ok_shape and len(groups) != n_blocks:
+            findings.append(Finding(
+                site, "output",
+                f"out_spec[{si}]: grid writes {len(groups)} distinct blocks "
+                f"but the output has {n_blocks} — "
+                + ("some blocks are never written"
+                   if len(groups) < n_blocks else "blocks written twice")))
+        for idx, cells in groups.items():
+            pcoords = {tuple(c[d] for d in par_dims) for c in cells}
+            if len(pcoords) > 1:
+                findings.append(Finding(
+                    site, "output",
+                    f"out_spec[{si}]: block {idx} is written by "
+                    f"{len(pcoords)} distinct parallel grid points "
+                    f"{sorted(pcoords)[:4]} — racing writes"))
+            if len(cells) != n_arb:
+                findings.append(Finding(
+                    site, "output",
+                    f"out_spec[{si}]: block {idx} is visited {len(cells)} "
+                    f"times, expected the full accumulation depth {n_arb}"))
+
+    # ---- VMEM budget per grid step
+    bytes_ = 0
+    for spec in list(cap.in_specs) + list(cap.out_specs):
+        blk = [1 if b is None else b for b in spec.block_shape]
+        bytes_ += int(np.prod(blk)) * spec.dtype.itemsize
+    for shape, dtype in cap.scratch:
+        bytes_ += int(np.prod(shape)) * dtype.itemsize
+    if bytes_ > VMEM_BUDGET_BYTES:
+        findings.append(Finding(
+            site, "vmem",
+            f"per-step VMEM working set {bytes_ / 1e6:.1f} MB exceeds the "
+            f"{VMEM_BUDGET_BYTES / 1e6:.0f} MB/core budget"))
+
+    return findings
+
+
+def verify_case(case: KernelCase) -> List[Finding]:
+    captures: List[Capture] = []
+    with capture_launches(captures):
+        case.run()
+    if not captures:
+        return [Finding(case.name, "capture",
+                        "case triggered no pallas_call launch")]
+    findings: List[Finding] = []
+    for cap in captures:
+        findings.extend(verify_capture(case, cap))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# The battery: every launch site in repro.kernels
+# ---------------------------------------------------------------------------
+
+
+def _ring_kv_pos(w: int, pos: Sequence[int]) -> np.ndarray:
+    """The serving engine's ring fill: row r of slot b holds the newest
+    absolute position p <= pos[b] with p % w == r, or -1 if none exists."""
+    out = np.full((len(pos), w), -1, np.int32)
+    for b, p in enumerate(pos):
+        if p < 0:
+            continue
+        for r in range(w):
+            q = p - ((p - r) % w)
+            if q >= 0:
+                out[b, r] = q
+    return out
+
+
+def _decode_required(cap: Capture, *, window: int):
+    """Tiles holding any row that passes the decode mask, from the captured
+    kv_pos contents — independent of the kernel's skip formula."""
+    (pos,) = cap.scalars
+    kvp = cap.operands[3]                       # (B, W) ring kv_pos
+    b_n, k_n, _ = cap.grid
+    tk = cap.in_specs[1].block_shape[1]
+    req = []
+    for b in range(b_n):
+        ok = (kvp[b] >= 0) & (kvp[b] <= pos[b])
+        if window:
+            ok &= (pos[b] - kvp[b]) < window
+        for t in np.unique(np.nonzero(ok)[0] // tk):
+            req.extend((b, kh, int(t)) for kh in range(k_n))
+    return req
+
+
+def _paged_required(cap: Capture, *, window: int):
+    (pos, _pt) = cap.scalars
+    b_n, k_n, _ = cap.grid
+    page = cap.in_specs[1].block_shape[1]
+    req = []
+    for b in range(b_n):
+        if pos[b] < 0:
+            continue
+        lo = max(pos[b] - window + 1, 0) if window else 0
+        tiles = {p // page for p in range(lo, pos[b] + 1)}
+        req.extend((b, kh, int(t)) for kh in range(k_n) for t in tiles)
+    return req
+
+
+def _flash_decode_case(name, *, w, pos, window=0, k_heads=2, g=2, hd=8,
+                       logit_cap=0.0):
+    import jax.numpy as jnp
+
+    from repro.kernels import flash_decode as fd
+
+    b_n = len(pos)
+    h = k_heads * g
+    rng = np.random.RandomState(0)
+
+    def run():
+        q = jnp.asarray(rng.randn(b_n, h, hd), jnp.float32)
+        k = jnp.asarray(rng.randn(b_n, w, k_heads, hd), jnp.float32)
+        v = jnp.asarray(rng.randn(b_n, w, k_heads, hd), jnp.float32)
+        kv_pos = jnp.asarray(_ring_kv_pos(w, pos))
+        fd.flash_decode(q, k, v, kv_pos, jnp.asarray(pos, jnp.int32),
+                        window=window, logit_cap=logit_cap)
+
+    tk = w if w <= fd.TK else math.gcd(w, fd.TK)
+
+    def live(cap, cell):
+        b, _kh, ki = cell
+        return bool(fd.live_tile(ki, int(cap.scalars[0][b]), tk=tk, w=w))
+
+    def nominal_kv(cap, cell):
+        b, kh, ki = cell
+        return (b, ki, kh)
+
+    def nominal_kvp(cap, cell):
+        b, _kh, ki = cell
+        return (b, ki)
+
+    import functools
+
+    return KernelCase(
+        name=name, run=run, live=live,
+        nominal={1: nominal_kv, 2: nominal_kv, 3: nominal_kvp},
+        required_live=functools.partial(_decode_required, window=window),
+    )
+
+
+def _paged_pools(pos, page, table_len, k_heads, hd):
+    """Toy allocator state mirroring PageAllocator: slot b owns consecutive
+    physical pages covering logical rows [0, pos[b]]; page 0 is the null
+    page (kv_pos all -1)."""
+    n = 1 + sum(-(-(p + 1) // page) for p in pos if p >= 0) + 1  # +1 spare
+    kv_pos = np.full((n, page), -1, np.int32)
+    table = np.zeros((len(pos), table_len), np.int32)
+    nxt = 1
+    for b, p in enumerate(pos):
+        if p < 0:
+            continue
+        for j in range(-(-(p + 1) // page)):
+            table[b, j] = nxt
+            rows = np.arange(j * page, min((j + 1) * page, p + 1))
+            kv_pos[nxt, : len(rows)] = rows
+            nxt += 1
+    return n, kv_pos, table
+
+
+def _flash_decode_paged_case(name, *, page, table_len, pos, window=0,
+                             k_heads=2, g=2, hd=8):
+    import functools
+
+    import jax.numpy as jnp
+
+    from repro.kernels import flash_decode as fd
+
+    b_n = len(pos)
+    h = k_heads * g
+    n, kv_pos, table = _paged_pools(pos, page, table_len, k_heads, hd)
+    rng = np.random.RandomState(0)
+
+    def run():
+        q = jnp.asarray(rng.randn(b_n, h, hd), jnp.float32)
+        kp = jnp.asarray(rng.randn(n, page, k_heads, hd), jnp.float32)
+        vp = jnp.asarray(rng.randn(n, page, k_heads, hd), jnp.float32)
+        fd.flash_decode_paged(q, kp, vp, jnp.asarray(kv_pos),
+                              jnp.asarray(table),
+                              jnp.asarray(pos, jnp.int32), window=window)
+
+    def live(cap, cell):
+        b, _kh, ki = cell
+        return bool(fd.live_tile_paged(ki, int(cap.scalars[0][b]),
+                                       page=page, window=window))
+
+    def nominal_kv(cap, cell):
+        b, kh, ki = cell
+        return (int(cap.scalars[1][b, ki]), 0, kh)
+
+    def nominal_kvp(cap, cell):
+        b, _kh, ki = cell
+        return (int(cap.scalars[1][b, ki]), 0)
+
+    return KernelCase(
+        name=name, run=run, live=live,
+        nominal={1: nominal_kv, 2: nominal_kv, 3: nominal_kvp},
+        required_live=functools.partial(_paged_required, window=window),
+    )
+
+
+def _flash_attention_case(name, *, s, causal, b_n=2, k_heads=2, g=2, hd=8):
+    import jax.numpy as jnp
+
+    from repro.kernels import flash_attention as fa
+
+    h = k_heads * g
+    tq = math.gcd(s, fa.TQ)
+    tk = math.gcd(s, fa.TK)
+    rng = np.random.RandomState(0)
+
+    def run():
+        q = jnp.asarray(rng.randn(b_n, s, h, hd), jnp.float32)
+        k = jnp.asarray(rng.randn(b_n, s, k_heads, hd), jnp.float32)
+        v = jnp.asarray(rng.randn(b_n, s, k_heads, hd), jnp.float32)
+        fa.flash_attention(q, k, v, causal=causal)
+
+    def live(cap, cell):
+        _bh, qi, ki = cell
+        return bool(fa.live_tile(qi, ki, tq=tq, tk=tk, causal=causal))
+
+    def required(cap):
+        # attention semantics: output rows of tile qi need every key
+        # position <= their max query position qi*tq + tq - 1
+        bh_n, q_n, _ = cap.grid
+        req = []
+        for qi in range(q_n):
+            hi = qi * tq + tq - 1 if causal else s - 1
+            req.extend((bh, qi, ki) for bh in range(bh_n)
+                       for ki in range(hi // tk + 1))
+        return req
+
+    return KernelCase(name=name, run=run, live=live, required_live=required)
+
+
+def _moe_gemm_case(name, *, e, d, f, group_sizes):
+    import jax.numpy as jnp
+
+    from repro.kernels import moe_gemm as mg
+
+    rng = np.random.RandomState(0)
+    gs = jnp.asarray(group_sizes, jnp.int32)
+    num_tokens = int(sum(group_sizes))
+
+    def run():
+        _dest, tile_expert, n_pad = mg.padded_layout(gs, num_tokens)
+        x_pad = jnp.asarray(rng.randn(int(n_pad), d), jnp.float32)
+        w = jnp.asarray(rng.randn(e, d, f), jnp.float32)
+        mg.grouped_matmul_padded(x_pad, w, tile_expert)
+
+    return KernelCase(name=name, run=run)
+
+
+def _fused_ffn_case(name, *, m, d, f, act):
+    import jax.numpy as jnp
+
+    from repro.kernels import fused_ffn as ff
+
+    rng = np.random.RandomState(0)
+
+    def run():
+        x = jnp.asarray(rng.randn(m, d), jnp.float32)
+        wg = jnp.asarray(rng.randn(d, f), jnp.float32)
+        wu = jnp.asarray(rng.randn(d, f), jnp.float32)
+        wd = jnp.asarray(rng.randn(f, d), jnp.float32)
+        ff.fused_ffn(x, wg, wu, wd, act)
+
+    return KernelCase(name=name, run=run)
+
+
+def build_cases() -> List[KernelCase]:
+    """The five launch sites × representative shape/position configs."""
+    return [
+        # flash_decode: 2-tile ring, empty slot / fresh / wrapped
+        _flash_decode_case("flash_decode/w256", w=256, pos=[-1, 0, 300]),
+        # single odd tile (w <= TK path), boundary positions
+        _flash_decode_case("flash_decode/w40", w=40, pos=[5, 39, 40, -1]),
+        # gcd tiling, 3 tiles, mid-fill
+        _flash_decode_case("flash_decode/w384", w=384, pos=[129, 255, 383]),
+        # sliding window + softcap on the ring layout
+        _flash_decode_case("flash_decode/w256_win64", w=256, window=64,
+                           pos=[10, 100, 300], logit_cap=30.0),
+        # paged: growth across pages, empty slot, page-boundary positions
+        _flash_decode_paged_case("flash_decode_paged/p8", page=8, table_len=4,
+                                 pos=[-1, 0, 17, 31]),
+        # paged sliding window incl. the PR 4 trap: (pos-window) % page ==
+        # page-1 (pos=19, window=12, page=8 -> 19-12=7)
+        _flash_decode_paged_case("flash_decode_paged/p8_win12", page=8,
+                                 table_len=4, pos=[19, 20, 27, 31],
+                                 window=12),
+        # window smaller than a page / window spanning all pages
+        _flash_decode_paged_case("flash_decode_paged/p16_win5", page=16,
+                                 table_len=2, pos=[3, 18, 31], window=5),
+        # flash_attention: 128-tiles and odd gcd tiles, causal + full
+        _flash_attention_case("flash_attention/s256_causal", s=256,
+                              causal=True),
+        _flash_attention_case("flash_attention/s256_full", s=256,
+                              causal=False),
+        _flash_attention_case("flash_attention/s40_causal", s=40,
+                              causal=True),
+        # moe_gemm: ragged groups incl. a zero-sized expert
+        _moe_gemm_case("moe_gemm/e3", e=3, d=16, f=32,
+                       group_sizes=[5, 0, 130]),
+        _moe_gemm_case("moe_gemm/e4_even", e=4, d=16, f=256,
+                       group_sizes=[128, 128, 128, 128]),
+        # fused_ffn: both activations, gcd tiles
+        _fused_ffn_case("fused_ffn/silu", m=8, d=16, f=64, act="silu"),
+        _fused_ffn_case("fused_ffn/gelu", m=24, d=16, f=96, act="gelu"),
+    ]
+
+
+def verify_all(cases: Optional[List[KernelCase]] = None
+               ) -> Dict[str, List[Finding]]:
+    """Run the battery; returns {case name: findings} (empty list = pass)."""
+    return {c.name: verify_case(c) for c in (cases or build_cases())}

@@ -1,0 +1,152 @@
+"""AST-based JAX-hazard linter: the engine.
+
+Stdlib-only (the CI lint job runs it without jax installed). Rules live in
+:mod:`repro.analysis.rules`; each is a subclass of :class:`Rule` with an id
+(``RPR001``..), a path scope, and a ``check(tree, ctx)`` generator yielding
+:class:`LintFinding`. The rule catalogue, rationale, and suppression syntax
+are documented in docs/static_analysis.md.
+
+Suppression: a trailing ``# noqa: RPR001`` (comma-separated ids) on the
+flagged line, or a bare ``# noqa`` which suppresses every rule on that line
+— same syntax ruff uses, so one comment can silence both linters.
+
+Entry points: :func:`lint_paths` (CLI: ``python -m repro.analysis lint
+src/ benchmarks/``) and :func:`lint_source` (fixture tests).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path, PurePosixPath
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Per-file state handed to every rule."""
+
+    path: str             # posix-style, repo-relative where possible
+    source: str
+    lines: List[str] = dataclasses.field(default_factory=list)
+    parents: Dict[ast.AST, ast.AST] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.lines:
+            self.lines = self.source.splitlines()
+
+    def build_parents(self, tree: ast.AST):
+        if not self.parents:
+            for node in ast.walk(tree):
+                for child in ast.iter_child_nodes(node):
+                    self.parents[child] = node
+        return self.parents
+
+
+class Rule:
+    """Base class: subclasses set ``id``, ``name``, and implement check()."""
+
+    id: str = "RPR000"
+    name: str = "base"
+
+    def applies_to(self, path: str) -> bool:
+        return path.endswith(".py")
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST, message: str
+                ) -> LintFinding:
+        return LintFinding(ctx.path, getattr(node, "lineno", 0),
+                           getattr(node, "col_offset", 0), self.id, message)
+
+
+# ---------------------------------------------------------------------------
+# path scoping helpers shared by the rules
+# ---------------------------------------------------------------------------
+
+
+def norm_path(path) -> str:
+    return PurePosixPath(str(path).replace("\\", "/")).as_posix()
+
+
+def in_library(path: str) -> bool:
+    """src/repro minus the CLI entrypoints in launch/."""
+    p = norm_path(path)
+    return "repro/" in p and "repro/launch/" not in p and "/tests/" not in p
+
+
+def in_benchmarks(path: str) -> bool:
+    return "benchmarks/" in norm_path(path)
+
+
+_NOQA = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?", re.IGNORECASE)
+
+
+def _suppressed(finding: LintFinding, lines: Sequence[str]) -> bool:
+    if not (1 <= finding.line <= len(lines)):
+        return False
+    m = _NOQA.search(lines[finding.line - 1])
+    if not m:
+        return False
+    codes = m.group("codes")
+    if codes is None:
+        return True                      # bare `# noqa`
+    return finding.rule in {c.strip().upper() for c in codes.split(",")}
+
+
+def default_rules() -> List[Rule]:
+    from repro.analysis import rules as rules_pkg
+
+    return rules_pkg.all_rules()
+
+
+def lint_source(source: str, path: str = "src/repro/_memory_.py",
+                rules: Optional[Sequence[Rule]] = None) -> List[LintFinding]:
+    """Lint one source string as though it lived at ``path`` (the path
+    drives rule scoping — pass a benchmarks/ path to hit bench rules)."""
+    rules = list(rules) if rules is not None else default_rules()
+    path = norm_path(path)
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, e.offset or 0, "RPR000",
+                            f"syntax error: {e.msg}")]
+    ctx = FileContext(path=path, source=source)
+    out: List[LintFinding] = []
+    for rule in rules:
+        if rule.applies_to(path):
+            out.extend(rule.check(tree, ctx))
+    return sorted((f for f in out if not _suppressed(f, ctx.lines)),
+                  key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def lint_paths(paths: Iterable[str],
+               rules: Optional[Sequence[Rule]] = None) -> List[LintFinding]:
+    rules = list(rules) if rules is not None else default_rules()
+    out: List[LintFinding] = []
+    for file in iter_python_files(paths):
+        out.extend(lint_source(file.read_text(), norm_path(file), rules))
+    return out

@@ -1,0 +1,45 @@
+"""Rule catalogue for the JAX-hazard linter (see docs/static_analysis.md).
+
+RPR001 traced-branch            Python control flow on traced values
+RPR002 module-jnp-constant      jnp arrays built at import time
+RPR003 traced-host-cast         .item()/int()/float()/bool() on tracers
+RPR004 collective-axis          psum/collective axis names vs declared mesh
+RPR005 bench-unsynced-timing    timed regions without block_until_ready
+RPR006 registry-string-dispatch literal compares against registered names
+RPR007 no-print-in-library      print() in library code (use logging)
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.lint import Rule
+from repro.analysis.rules.bench_timing import BenchTimingRule
+from repro.analysis.rules.collectives import CollectiveAxisRule
+from repro.analysis.rules.jax_hazards import (
+    ModuleLevelJnpConstRule, TracedBranchRule, TracedHostCastRule)
+from repro.analysis.rules.no_print import NoPrintRule
+from repro.analysis.rules.registry_names import RegistryNameRule
+
+
+def all_rules() -> List[Rule]:
+    return [
+        TracedBranchRule(),
+        ModuleLevelJnpConstRule(),
+        TracedHostCastRule(),
+        CollectiveAxisRule(),
+        BenchTimingRule(),
+        RegistryNameRule(),
+        NoPrintRule(),
+    ]
+
+
+__all__ = [
+    "all_rules",
+    "TracedBranchRule",
+    "ModuleLevelJnpConstRule",
+    "TracedHostCastRule",
+    "CollectiveAxisRule",
+    "BenchTimingRule",
+    "RegistryNameRule",
+    "NoPrintRule",
+]

@@ -1,0 +1,186 @@
+"""Shared AST machinery for the hazard rules: traced-scope discovery and a
+conservative value-taint pass.
+
+A *traced scope* is a function whose body runs under a jax trace: decorated
+with (or wrapped by / passed to) ``jit``/``pjit``/``shard_map``/
+``shard_map_compat``, or a Pallas kernel handed to ``pallas_call``. Inside
+such scopes, Python-level control flow on traced values either raises a
+``ConcretizationTypeError`` or — worse — silently bakes one branch into the
+compiled program; the rules in :mod:`jax_hazards` flag those sites.
+
+Taint seeding differs by scope kind: in jit/shard_map scopes the function
+parameters themselves are tracers, while in Pallas kernels the parameters
+are Refs (static) and only their *reads* (``ref[...]``), ``pl.program_id``
+results, and ``jnp`` expressions are traced. Keyword-only parameters are
+treated as static in both: the repo idiom binds them via
+``functools.partial`` with Python constants (tile sizes, windows, flags),
+which is exactly the static-configuration channel.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+TRACE_WRAPPERS = {"jit", "pjit", "shard_map", "shard_map_compat"}
+PALLAS_WRAPPERS = {"pallas_call"}
+
+# attribute reads that are static at trace time even on a tracer
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                "itemsize"}
+# host functions whose result on a tracer-adjacent value is static/harmless
+SAFE_FUNCS = {"len", "isinstance", "hasattr", "getattr", "type", "id",
+              "callable"}
+
+_FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _identifiers(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def traced_scopes(tree: ast.AST) -> List[Tuple[ast.AST, str]]:
+    """All (function node, kind) pairs whose bodies run under a jax trace;
+    kind is "jit" or "pallas"."""
+    scopes: List[Tuple[ast.AST, str]] = []
+    seen: Set[ast.AST] = set()
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, _FuncDef):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    def add(fn: ast.AST, kind: str):
+        if fn not in seen:
+            seen.add(fn)
+            scopes.append((fn, kind))
+
+    for node in ast.walk(tree):
+        # decorator form: @jax.jit, @jit, @partial(jax.jit, ...),
+        # @partial(shard_map_compat, mesh=...)
+        if isinstance(node, _FuncDef):
+            for dec in node.decorator_list:
+                ids = _identifiers(dec)
+                if ids & TRACE_WRAPPERS:
+                    add(node, "jit")
+                elif ids & PALLAS_WRAPPERS:
+                    add(node, "pallas")
+        # call form: jax.jit(step), shard_map_compat(fn, ...),
+        # pl.pallas_call(kernel, ...), functools.partial(_kernel, ...)
+        # where the wrapped function is named locally
+        if isinstance(node, ast.Call):
+            ids = _identifiers(node.func)
+            kind = ("jit" if ids & TRACE_WRAPPERS
+                    else "pallas" if ids & PALLAS_WRAPPERS else None)
+            if kind is None:
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    for fn in defs_by_name.get(arg.id, ()):
+                        add(fn, kind)
+                elif isinstance(arg, ast.Lambda):
+                    add(arg, kind)
+                elif (isinstance(arg, ast.Call)
+                      and "partial" in _identifiers(arg.func)):
+                    # pallas_call(functools.partial(_kernel, ...), ...)
+                    for sub in arg.args:
+                        if isinstance(sub, ast.Name):
+                            for fn in defs_by_name.get(sub.id, ()):
+                                add(fn, kind)
+    return scopes
+
+
+def _is_traced_expr(node: ast.AST, tainted: Set[str]) -> bool:
+    """Does this expression (conservatively) produce a traced value?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                and n.id in tainted:
+            return True
+        if isinstance(n, ast.Call):
+            ids = _identifiers(n.func)
+            if ids & {"jnp", "lax", "program_id", "dot", "einsum"}:
+                return True
+            if "jax" in ids and not ids & SAFE_FUNCS:
+                return True
+    return False
+
+
+def taint(fn: ast.AST, kind: str) -> Set[str]:
+    """Names (conservatively) bound to traced values inside ``fn``."""
+    tainted: Set[str] = set()
+    args = fn.args
+    if kind == "jit":
+        # positional params are tracers; keyword-only params are the
+        # functools.partial static-config channel (tile sizes, flags)
+        tainted |= {a.arg for a in args.args + args.posonlyargs}
+        if args.vararg:
+            tainted.add(args.vararg.arg)
+    else:
+        # pallas: params are Refs — only their reads are traced; seed with
+        # nothing and let subscript loads / program_id propagate below
+        pass
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    ref_params = {a.arg for a in args.args + args.posonlyargs}
+    for _ in range(2):  # two passes: forward refs through simple reorders
+        for stmt in body:
+            for n in ast.walk(stmt):
+                traced = False
+                if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    val = n.value
+                    if val is None:
+                        continue
+                    traced = _is_traced_expr(val, tainted)
+                    if kind == "pallas" and not traced:
+                        # x = ref[...] reads a traced value out of a Ref
+                        traced = any(
+                            isinstance(s, ast.Subscript)
+                            and isinstance(s.value, ast.Name)
+                            and s.value.id in (ref_params | tainted)
+                            for s in ast.walk(val))
+                    if not traced:
+                        continue
+                    targets = (n.targets if isinstance(n, ast.Assign)
+                               else [n.target])
+                    for t in targets:
+                        for leaf in ast.walk(t):
+                            if isinstance(leaf, ast.Name):
+                                tainted.add(leaf.id)
+    return tainted
+
+
+def unsanitized_uses(test: ast.AST, tainted: Set[str]) -> Iterator[ast.Name]:
+    """Tainted Name loads in a branch test that are NOT wrapped in a
+    static-safe construct (.shape/.ndim/.dtype, len()/isinstance(),
+    ``is None`` checks)."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(test):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    for node in ast.walk(test):
+        if not (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id in tainted):
+            continue
+        cur, safe = node, False
+        while cur in parents:
+            parent = parents[cur]
+            if isinstance(parent, ast.Attribute) \
+                    and parent.attr in STATIC_ATTRS:
+                safe = True
+                break
+            if isinstance(parent, ast.Call) and cur is not parent.func:
+                ids = _identifiers(parent.func)
+                if ids & SAFE_FUNCS:
+                    safe = True
+                    break
+            if isinstance(parent, ast.Compare) and all(
+                    isinstance(op, (ast.Is, ast.IsNot))
+                    for op in parent.ops):
+                safe = True
+                break
+            cur = parent
+        if not safe:
+            yield node

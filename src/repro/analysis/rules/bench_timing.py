@@ -1,0 +1,68 @@
+"""RPR005: timed regions in benchmarks/ must synchronise before reading the
+clock. jax dispatch is async — ``t0 = time(); f(x); dt = time() - t0``
+measures dispatch latency, not compute: the result must pass through
+``jax.block_until_ready`` (or ``.block_until_ready()``) inside the region.
+Host-only timing (aggregating wall clock around subprocesses or whole
+benchmark modules) is legitimate — suppress with ``# noqa: RPR005`` and say
+why in a comment.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.lint import FileContext, LintFinding, Rule, in_benchmarks
+from repro.analysis.rules._shared import _FuncDef
+
+
+def _time_calls(node: ast.AST) -> List[ast.Call]:
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            name = (f.attr if isinstance(f, ast.Attribute)
+                    else f.id if isinstance(f, ast.Name) else None)
+            if name in ("time", "perf_counter", "monotonic"):
+                # time.time() / time.perf_counter() / bare perf_counter()
+                if isinstance(f, ast.Name) and name == "time":
+                    continue  # `time(...)` bare call: not the module clock
+                out.append(n)
+    return out
+
+
+def _has_sync(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr == "block_until_ready":
+            return True
+        if isinstance(n, ast.Name) and n.id == "block_until_ready":
+            return True
+    return False
+
+
+class BenchTimingRule(Rule):
+    """RPR005: a function in benchmarks/ that reads the clock twice (a timed
+    region) without any block_until_ready call times async dispatch, not
+    the kernel."""
+
+    id = "RPR005"
+    name = "bench-unsynced-timing"
+
+    def applies_to(self, path: str) -> bool:
+        return in_benchmarks(path)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        funcs = [n for n in ast.walk(tree) if isinstance(n, _FuncDef)]
+        for fn in funcs:
+            # exclude nested defs' clocks: they are reported on their own
+            nested = {id(sub) for f2 in ast.walk(fn) if isinstance(f2, _FuncDef)
+                      and f2 is not fn for sub in ast.walk(f2)}
+            calls = [c for c in _time_calls(fn) if id(c) not in nested]
+            if len(calls) >= 2 and not _has_sync(fn):
+                yield self.finding(
+                    ctx, calls[1],
+                    f"timed region in {fn.name}() never calls "
+                    "block_until_ready — with async dispatch this measures "
+                    "enqueue time, not compute; materialise the result "
+                    "before the closing timestamp (host-only wall-clock "
+                    "timing: suppress with `# noqa: RPR005` + a comment)")

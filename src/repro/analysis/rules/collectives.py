@@ -1,0 +1,113 @@
+"""RPR004: collective axis names must exist on a declared mesh.
+
+``jax.lax.psum(x, "modle")`` fails only at run time, inside a shard_map on
+real hardware — CPU unit tests that don't enter the collective never see
+it. The allowlist of axis names is scraped (AST, no imports) from the two
+modules that declare meshes: ``repro/parallel/sharding.py``
+(``ParallelConfig`` defaults) and ``repro/launch/mesh.py`` (the mesh axes
+tuples), so adding an axis there automatically teaches the linter.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+from pathlib import Path
+from typing import FrozenSet, Iterator, Optional
+
+from repro.analysis.lint import FileContext, LintFinding, Rule, norm_path
+from repro.analysis.rules._shared import _identifiers
+
+# axis-name argument position per collective
+_COLLECTIVES = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "all_gather": 1,
+    "all_to_all": 1, "ppermute": 1, "pshuffle": 1, "psum_scatter": 1,
+    "axis_index": 0, "axis_size": 0,
+}
+
+_FALLBACK_AXES = frozenset({"data", "model", "pod"})
+
+
+def _axes_from_file(path: Path) -> FrozenSet[str]:
+    axes = set()
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return frozenset()
+    for node in ast.walk(tree):
+        # every tuple-of-short-strings literal: mesh axes declarations like
+        # ("pod", "data", "model") / dp_axes defaults / axes= kwargs
+        if isinstance(node, ast.Tuple) and node.elts and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                and e.value.isidentifier() for e in node.elts):
+            axes.update(e.value for e in node.elts)
+        # string defaults of *_axis fields (fsdp_axis, tp_axis)
+        if isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name) \
+                and node.target.id.endswith("_axis") \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, str):
+            axes.add(node.value.value)
+    return frozenset(axes)
+
+
+@functools.lru_cache(maxsize=1)
+def known_mesh_axes(repo_src: Optional[str] = None) -> FrozenSet[str]:
+    """Axis names declared by the repo's mesh modules (AST-scraped)."""
+    src = Path(repo_src) if repo_src else Path(__file__).resolve().parents[3]
+    found = (_axes_from_file(src / "repro" / "parallel" / "sharding.py")
+             | _axes_from_file(src / "repro" / "launch" / "mesh.py"))
+    return found or _FALLBACK_AXES
+
+
+class CollectiveAxisRule(Rule):
+    """RPR004: literal collective axis names checked against the mesh axes
+    declared in parallel/sharding.py + launch/mesh.py. Variables pass
+    (resolved at run time); only misspelt literals are catchable early."""
+
+    id = "RPR004"
+    name = "collective-axis"
+
+    def applies_to(self, path: str) -> bool:
+        p = norm_path(path)
+        return "repro/" in p or "benchmarks/" in p
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        axes = known_mesh_axes()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = (node.func.attr if isinstance(node.func, ast.Attribute)
+                    else node.func.id if isinstance(node.func, ast.Name)
+                    else None)
+            if name not in _COLLECTIVES:
+                continue
+            ids = _identifiers(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and not ids & {"lax", "jax"}:
+                continue  # someone else's psum
+            pos = _COLLECTIVES[name]
+            arg = None
+            if len(node.args) > pos:
+                arg = node.args[pos]
+            else:
+                for kw in node.keywords:
+                    if kw.arg in ("axis_name", "axis"):
+                        arg = kw.value
+            if arg is None:
+                continue
+            literals = []
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                literals = [arg]
+            elif isinstance(arg, (ast.Tuple, ast.List)):
+                literals = [e for e in arg.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)]
+            for lit in literals:
+                if lit.value not in axes:
+                    yield self.finding(
+                        ctx, lit,
+                        f"{name}(..., {lit.value!r}): axis name not "
+                        "declared by parallel/sharding.py or launch/mesh.py "
+                        f"(known: {', '.join(sorted(axes))}) — typo'd axis "
+                        "names only fail at run time inside shard_map")

@@ -1,0 +1,149 @@
+"""Tracing hazards: RPR001 (Python control flow on traced values inside
+jit/shard_map/Pallas bodies), RPR002 (jnp arrays built at module scope —
+closure-capture / retrace hazard), RPR003 (host casts of traced values).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import FileContext, LintFinding, Rule, in_library
+from repro.analysis.rules._shared import (
+    _FuncDef, _identifiers, taint, traced_scopes, unsanitized_uses)
+
+_JNP_CONSTRUCTORS = {
+    "array", "asarray", "zeros", "ones", "full", "arange", "linspace",
+    "eye", "zeros_like", "ones_like", "full_like", "identity", "tri",
+    "PRNGKey",
+}
+
+
+class TracedBranchRule(Rule):
+    """RPR001: `if`/`while`/ternary on a traced value inside a traced scope
+    either raises ConcretizationTypeError or silently specialises the
+    compiled program to one branch. Use jnp.where / lax.cond / lax.select,
+    or hoist the decision to a static (keyword-only, functools.partial-bound)
+    parameter."""
+
+    id = "RPR001"
+    name = "traced-branch"
+
+    def applies_to(self, path: str) -> bool:
+        return in_library(path)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        for fn, kind in traced_scopes(tree):
+            tainted = taint(fn, kind)
+            if not tainted:
+                continue
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, _FuncDef):
+                        # nested defs get their own scope entry if traced
+                        continue
+                    if isinstance(node, (ast.If, ast.While)):
+                        test = node.test
+                    elif isinstance(node, ast.IfExp):
+                        test = node.test
+                    elif isinstance(node, ast.Assert):
+                        test = node.test
+                    else:
+                        continue
+                    for use in unsanitized_uses(test, tainted):
+                        yield self.finding(
+                            ctx, use,
+                            f"Python control flow on {use.id!r}, which is "
+                            f"traced inside this {kind} scope — use "
+                            "jnp.where/lax.cond or bind it statically via "
+                            "functools.partial")
+                        break  # one finding per branch site
+
+
+class ModuleLevelJnpConstRule(Rule):
+    """RPR002: a jnp array created at import time becomes a baked-in
+    closure constant of every jitted function that touches it — it pins a
+    device at import, defeats donation, and any identity-based cache keys
+    retrace per process. Build arrays inside the traced function (XLA
+    folds them) or keep module constants as numpy."""
+
+    id = "RPR002"
+    name = "module-jnp-constant"
+
+    def applies_to(self, path: str) -> bool:
+        return in_library(path)
+
+    def _walk_static(self, node: ast.AST) -> Iterator[ast.AST]:
+        """Walk without descending into function/lambda bodies (those run
+        later, not at import)."""
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            yield n
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, (*_FuncDef, ast.Lambda)):
+                    # defaults DO evaluate at import time
+                    if isinstance(child, _FuncDef):
+                        stack.extend(child.args.defaults)
+                        stack.extend(d for d in child.args.kw_defaults if d)
+                        stack.extend(child.decorator_list)
+                    continue
+                stack.append(child)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        for node in self._walk_static(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not (isinstance(f, ast.Attribute)
+                    and f.attr in _JNP_CONSTRUCTORS):
+                continue
+            ids = _identifiers(f)
+            if "jnp" in ids or ("jax" in ids
+                                and ids & {"numpy", "random"}):
+                yield self.finding(
+                    ctx, node,
+                    f"{f.attr}(...) on jnp at module scope builds a device "
+                    "array at import — retrace/closure-constant hazard; "
+                    "use numpy here or build it inside the function")
+
+
+class TracedHostCastRule(Rule):
+    """RPR003: `.item()` / int()/float()/bool() on a traced value forces a
+    host sync at best and a ConcretizationTypeError inside jit at worst."""
+
+    id = "RPR003"
+    name = "traced-host-cast"
+
+    def applies_to(self, path: str) -> bool:
+        return in_library(path)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        for fn, kind in traced_scopes(tree):
+            tainted = taint(fn, kind)
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if isinstance(node.func, ast.Attribute) \
+                            and node.func.attr == "item":
+                        yield self.finding(
+                            ctx, node,
+                            ".item() inside a traced scope concretises a "
+                            "tracer — return the array and convert outside "
+                            "the jit boundary")
+                        continue
+                    if isinstance(node.func, ast.Name) \
+                            and node.func.id in ("int", "float", "bool") \
+                            and len(node.args) == 1 \
+                            and any(unsanitized_uses(node.args[0], tainted)):
+                        yield self.finding(
+                            ctx, node,
+                            f"{node.func.id}() on a traced value inside a "
+                            f"{kind} scope raises ConcretizationTypeError — "
+                            "keep it an array or hoist the cast out of the "
+                            "traced region")

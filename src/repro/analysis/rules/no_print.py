@@ -1,0 +1,41 @@
+"""RPR007: no print() in library code.
+
+Library modules (everything under ``repro/`` except ``repro/launch``) are
+imported by tests, benchmarks, and serving hosts; a stray ``print`` writes
+to whatever stdout happens to be attached — corrupting the CSV contract of
+``benchmarks/common.emit_csv`` and bypassing log-level control. Use the
+``logging`` module. CLI entry points (``repro/launch``, ``repro.analysis``'s
+own ``__main__``) and tests are exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import FileContext, LintFinding, Rule, norm_path
+
+
+class NoPrintRule(Rule):
+    """RPR007: print() in library code — use logging instead."""
+
+    id = "RPR007"
+    name = "no-print-in-library"
+
+    def applies_to(self, path: str) -> bool:
+        p = norm_path(path)
+        if "repro/analysis/__main__" in p:
+            return False
+        return ("repro/" in p and "repro/launch/" not in p
+                and "/tests/" not in p)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "print":
+                yield self.finding(
+                    ctx, node,
+                    "print() in library code writes to raw stdout — use a "
+                    "module logger (logging.getLogger(__name__)) so hosts "
+                    "control verbosity and benchmark CSV output stays clean")

@@ -1,0 +1,88 @@
+"""RPR006: registry names are looked up, not string-compared.
+
+PR 5 replaced stringly-typed ``if metric == "router_logits"`` dispatch with
+the registries in ``core/registry.py``; this rule keeps it that way. The set
+of registered names is scraped (AST, no imports) from the ``@register_*``
+decorators under ``src/repro/core``, so registering a new entry
+automatically protects its name. A literal comparison against any of those
+names in library code reintroduces a dispatch site that silently falls out
+of sync when entries are added — route through ``METRICS.get`` /
+``PLANNERS.get`` / plan metadata instead.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+from pathlib import Path
+from typing import FrozenSet, Iterator, Optional
+
+from repro.analysis.lint import FileContext, LintFinding, Rule, norm_path
+
+_REGISTER_FNS = {"register_metric", "register_clustering", "register_merge",
+                 "register_planner"}
+
+
+@functools.lru_cache(maxsize=1)
+def registered_names(repo_src: Optional[str] = None) -> FrozenSet[str]:
+    """Names passed to @register_* decorators anywhere under repro/core."""
+    src = Path(repo_src) if repo_src else Path(__file__).resolve().parents[3]
+    names = set()
+    core = src / "repro" / "core"
+    if not core.is_dir():
+        return frozenset()
+    for file in sorted(core.glob("*.py")):
+        try:
+            tree = ast.parse(file.read_text())
+        except (OSError, SyntaxError):
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                fname = (f.attr if isinstance(f, ast.Attribute)
+                         else f.id if isinstance(f, ast.Name) else None)
+                if fname in _REGISTER_FNS and node.args \
+                        and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[0].value, str):
+                    names.add(node.args[0].value)
+    return frozenset(names)
+
+
+class RegistryNameRule(Rule):
+    """RPR006: equality/membership tests against registered metric /
+    clustering / merge / planner names bypass core/registry.py dispatch."""
+
+    id = "RPR006"
+    name = "registry-string-dispatch"
+
+    def applies_to(self, path: str) -> bool:
+        p = norm_path(path)
+        return ("repro/" in p and "repro/core/registry.py" not in p
+                and "/tests/" not in p)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        names = registered_names()
+        if not names:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            for op, comp in zip(node.ops, node.comparators):
+                if isinstance(op, (ast.Eq, ast.NotEq)):
+                    lits = ([comp] if isinstance(comp, ast.Constant)
+                            else [])
+                elif isinstance(op, (ast.In, ast.NotIn)) \
+                        and isinstance(comp, (ast.Tuple, ast.List, ast.Set)):
+                    lits = list(comp.elts)
+                else:
+                    continue
+                for lit in lits:
+                    if isinstance(lit, ast.Constant) \
+                            and isinstance(lit.value, str) \
+                            and lit.value in names:
+                        yield self.finding(
+                            ctx, lit,
+                            f"string comparison against registered name "
+                            f"{lit.value!r} bypasses core/registry.py — "
+                            "dispatch through the registry (or plan "
+                            "metadata) so new registrations keep working")

@@ -248,13 +248,17 @@ def m_smoe_plan(cfg, params, stats, spec) -> MergePlan:
 def _m_smoe_check_spec(spec: PlanSpec) -> None:
     """m_smoe merges through combine matrices only; reject feature-matching
     merges at PlanSpec construction (fail-fast), not after calibration."""
-    if spec.merge not in ("average", "frequency"):
+    # capability validation (fail-fast error message), not dispatch
+    if spec.merge not in ("average", "frequency"):  # noqa: RPR006
         raise ValueError(
             f"method 'm_smoe' merges via combine matrices; merge must be "
             f"'average' or 'frequency', got {spec.merge!r}")
 
 
 m_smoe_plan.check_spec = _m_smoe_check_spec
+# M-SMoE groups experts by router-logit similarity (paper §4.1); CLI and
+# callers read this instead of hard-coding the metric name per method.
+m_smoe_plan.default_metric = "router_logits"
 
 
 def m_smoe(cfg, params, stats, r: int, *, metric: str = "router_logits",

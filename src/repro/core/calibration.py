@@ -90,6 +90,6 @@ def flatten_stats(cfg, stats) -> List[dict]:
     out = []
     for b in range(cfg.num_blocks):
         for slot, pos in enumerate(moe_positions):
-            st = jax.tree.map(lambda x: x[b], stats[slot])
+            st = jax.tree.map(lambda x, b=b: x[b], stats[slot])
             out.append({"pattern_pos": pos, "block": b, "stats": st})
     return out

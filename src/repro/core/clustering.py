@@ -192,6 +192,11 @@ def _fcm(feats, r, *, linkage="average", seed=0):
     return fcm_cluster(feats, r, seed=seed)
 
 
+# fcm's soft membership becomes the combine matrix directly; that path is
+# applied by the numpy plan executor, not the jax einsum executor.
+_fcm.jax_executor = False
+
+
 def cluster(feats: np.ndarray, r: int, method: str = "hc",
             linkage: str = "average", seed: int = 0) -> np.ndarray:
     """Labels-only convenience wrapper over the clustering registry."""

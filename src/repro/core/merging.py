@@ -45,14 +45,16 @@ FIX_DOM_FEATURES = ("act", "weight", "act+weight")
 
 def cluster_alphas(labels: np.ndarray, freq: np.ndarray, method: str):
     """Per-expert merge coefficient alpha_j (normalised within cluster)."""
-    if method not in ("average", "frequency"):
+    # this module IS the implementation the registry names point at, so the
+    # two alpha formulas are selected by literal here
+    if method not in ("average", "frequency"):  # noqa: RPR006
         raise ValueError(
             f"cluster_alphas supports 'average'/'frequency', got {method!r}")
     E = labels.shape[0]
     alphas = np.zeros(E, np.float64)
     for c in np.unique(labels):
         members = np.where(labels == c)[0]
-        if method == "average":
+        if method == "average":  # noqa: RPR006  (see note above)
             alphas[members] = 1.0 / len(members)
         else:
             fsum = float(freq[members].sum())
@@ -160,6 +162,13 @@ def _plan_average(mi: MergeInputs) -> dict:
                                             mi.num_slots)}
 
 
+# combine-only merges are expressible as einsums over stacked weights, so
+# the jax plan executor can apply them; feature-matching merges (fix_dom,
+# zipit) emit per-expert hidden_maps and stay on the numpy executor.
+_plan_frequency.jax_executor = True
+_plan_average.jax_executor = True
+
+
 def _correlation_map(feat_dom: np.ndarray, feat_e: np.ndarray) -> np.ndarray:
     """For each feature dim of expert e, index of the most-correlated
     dominant feature dim. feats: (T, f) activation traces (or (3d, f))."""
@@ -174,7 +183,8 @@ def _correlation_map(feat_dom: np.ndarray, feat_e: np.ndarray) -> np.ndarray:
 def _fix_dom_features(feature: str, act_sample, wg, wu, wd, e: int):
     if feature == "act":
         return np.asarray(act_sample[e], np.float64)  # (T, f)
-    if feature == "weight":
+    # fix-dom feature *source* name, which collides with the metric "weight"
+    if feature == "weight":  # noqa: RPR006
         return np.concatenate(
             [np.asarray(wg[e], np.float64), np.asarray(wu[e], np.float64),
              np.asarray(wd[e], np.float64).T], axis=0)  # (3d, f)

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import checked
 from repro.core import api
 from repro.core import clustering as clu
 from repro.core import merging as mrg
@@ -207,8 +208,9 @@ def _plan_hc_smoe(cfg, params, stats, spec: PlanSpec) -> MergePlan:
     E = cfg.moe.num_experts
     resize = spec.resize and not spec.non_uniform
     n_slots = spec.target_experts if resize else E
-    use_jax = (spec.merge in ("frequency", "average")
-               and spec.clustering != "fcm")
+    use_jax = (getattr(MERGES.get(spec.merge), "jax_executor", False)
+               and getattr(CLUSTERINGS.get(spec.clustering),
+                           "jax_executor", True))
 
     plan_layers = []
     for layer, r_l in zip(layers, targets):
@@ -322,6 +324,9 @@ def _resolve_executor(plan: MergePlan, executor: Optional[str]) -> str:
     return executor
 
 
+@checked(params=lambda p, _: isinstance(p, dict) and "decoder" in p,
+         plan=lambda p, _: hasattr(p, "kind") and hasattr(p, "layers"),
+         executor=lambda e, _: e in (None, "jax", "numpy"))
 def apply_plan(params, plan: MergePlan, *, executor: Optional[str] = None):
     """Write a plan into a params pytree; returns new params (inputs are
     never mutated). Router weights are untouched: merge plans redirect

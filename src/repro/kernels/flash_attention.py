@@ -24,11 +24,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.contracts import checked
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 TQ = 128
 TK = 128
 NEG = -2.0e38
+
+
+def live_tile(qi, ki, *, tq, tk, causal):
+    """Causal tile skip: the (qi, ki) tile is live iff its highest query row
+    ``qi*tq + tq - 1`` can attend its lowest key column ``ki*tk``. Defined at
+    module level so the host-side contract verifier
+    (repro.analysis.kernel_verify) checks the same gate the kernel runs."""
+    return (qi * tq + tq - 1 >= ki * tk) if causal else True
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
@@ -42,8 +51,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # causal tile skip: tile row range [qi*tq, ...) vs col range [ki*tk, ...)
-    run = (qi * tq + tq - 1 >= ki * tk) if causal else True
+    run = live_tile(qi, ki, tq=tq, tk=tk, causal=causal)
 
     @pl.when(run)
     def _step():
@@ -71,6 +79,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
                     ).astype(o_ref.dtype)
 
 
+@checked(q="B S H hd", k="B S K hd", v="B S K hd", ret="B S H hd")
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,
                     interpret: bool = False):
     """q: (B, S, H, hd); k, v: (B, S, K, hd) with K | H (un-expanded GQA).

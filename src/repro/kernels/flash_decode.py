@@ -39,10 +39,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.contracts import checked
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 TK = 128
 NEG = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Live-tile predicates (the @pl.when compute gates)
+# ---------------------------------------------------------------------------
+# Each kernel's tile-skip gate is defined ONCE here, at module level, and is
+# used both by the kernel body (on traced scalars) and by the host-side
+# contract verifier (repro.analysis.kernel_verify, on concrete ints). The
+# verifier proves the gate agrees with the DMA-eliding index-map clamps
+# (`_last_tile` / the paged live range below) over the full grid — the two
+# formulations are kept independent on purpose, because their silent
+# disagreement IS the bug class being guarded against: a dead tile running
+# on a clamped DMA double-counts an already-resident block (the PR 4
+# sliding-window lower-skip off-by-one).
+
+
+def live_tile(ki, pos_b, *, tk, w):
+    """True iff contiguous-ring KV tile ``ki`` holds any filled row for a
+    slot whose query position is ``pos_b`` (-1 = empty slot)."""
+    n_valid = jnp.minimum(pos_b + 1, w)
+    return ki * tk < n_valid
+
+
+def live_tile_paged(ki, pos_b, *, page, window):
+    """True iff page-tile ``ki`` holds any unmasked row for a slot at
+    ``pos_b``. Paged caches never wrap, so a sliding window bounds the live
+    range from below too: a tile is live iff its last row ``(ki+1)*page - 1``
+    reaches ``pos_b - window + 1`` (see _paged_kernel)."""
+    run = ki * page < pos_b + 1
+    if window:
+        run &= (ki + 1) * page > pos_b - window + 1
+    return run
 
 
 def _online_step(q_ref, k_ref, v_ref, kvp_ref, m_scr, l_scr, acc_scr,
@@ -85,9 +118,8 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref, m_scr, l_scr,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     pos_b = pos_ref[b]
-    n_valid = jnp.minimum(pos_b + 1, w)
 
-    @pl.when(ki * tk < n_valid)
+    @pl.when(live_tile(ki, pos_b, tk=tk, w=w))
     def _step():
         _online_step(q_ref, k_ref, v_ref, kvp_ref, m_scr, l_scr, acc_scr,
                      pos_b, scale=scale, window=window, logit_cap=logit_cap)
@@ -98,6 +130,8 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref, m_scr, l_scr,
                     ).astype(o_ref.dtype)
 
 
+@checked(q="B H hd", k="B W K hd", v="B W K hd", kv_pos="B W:int",
+         pos="B:int", ret="B H hd")
 def flash_decode(q, k, v, kv_pos, pos, *, scale=None, window: int = 0,
                  logit_cap: float = 0.0, interpret: bool = False):
     """q: (B, H, hd); k, v: (B, W, K, hd) un-expanded GQA ring buffers;
@@ -183,16 +217,11 @@ def _paged_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
     # where old positions scatter across every tile — a sliding window also
     # bounds the LIVE tiles from below: pages wholly before pos-window hold
     # only masked rows and are skipped (their DMAs elided by the clamped
-    # index maps).
-    run = ki * page < pos_b + 1
-    if window:
-        # live rows are kvp >= pos-window+1, so a tile is live iff its last
-        # row (ki+1)*page - 1 reaches that bound — this gate must match
-        # _live_tile's `first` exactly, or a dead tile would run on the
-        # first live page's clamped DMA and double-count it
-        run &= (ki + 1) * page > pos_b - window + 1
+    # index maps). The gate must match _live_tile's `first` clamp exactly,
+    # or a dead tile would run on the first live page's clamped DMA and
+    # double-count it — repro.analysis.kernel_verify proves the agreement.
 
-    @pl.when(run)
+    @pl.when(live_tile_paged(ki, pos_b, page=page, window=window))
     def _step():
         _online_step(q_ref, k_ref, v_ref, kvp_ref, m_scr, l_scr, acc_scr,
                      pos_b, scale=scale, window=window, logit_cap=logit_cap)
@@ -203,6 +232,9 @@ def _paged_kernel(pos_ref, pt_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
                     ).astype(o_ref.dtype)
 
 
+@checked(q="B H hd", k_pool="N page K hd", v_pool="N page K hd",
+         kv_pos="N page:int", page_table="B P:int", pos="B:int",
+         ret="B H hd")
 def flash_decode_paged(q, k_pool, v_pool, kv_pos, page_table, pos, *,
                        scale=None, window: int = 0, logit_cap: float = 0.0,
                        interpret: bool = False):

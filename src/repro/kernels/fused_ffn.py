@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.contracts import checked
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 TM = 128
@@ -45,6 +46,7 @@ def _kernel(x_ref, wg_ref, wu_ref, wd_ref, y_ref, acc_scr, *, act, f_steps):
         y_ref[...] = acc_scr[...].astype(y_ref.dtype)
 
 
+@checked(x="M d", wg="d F", wu="d F", wd="F d", ret="M d")
 def fused_ffn(x, wg, wu, wd, act: str = "silu", *, interpret: bool = False):
     """x: (M, d); wg/wu: (d, F); wd: (F, d) -> (M, d)."""
     import math

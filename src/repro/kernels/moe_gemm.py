@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.contracts import checked
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 TILE_N = 128
@@ -38,6 +39,7 @@ def _tile(n: int, pref: int) -> int:
     return math.gcd(n, pref)
 
 
+@checked(x_pad="N d", w="E d F", tile_expert="T:int", ret="N F")
 def grouped_matmul_padded(x_pad, w, tile_expert, *, interpret: bool = False):
     """x_pad: (N_pad, d) rows sorted+padded per expert; w: (E, d, F);
     tile_expert: (N_pad // TILE_N,) int32. Returns (N_pad, F)."""

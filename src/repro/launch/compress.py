@@ -53,15 +53,17 @@ def _build(args):
 def cmd_compute(args) -> None:
     from repro.checkpoint import save_plan
     from repro.core import PlanSpec, compute_plan, plan_summary
+    from repro.core import baselines  # noqa: F401  (registers planners)
     from repro.core.calibration import collect_moe_stats
+    from repro.core.registry import PLANNERS
     from repro.data import calibration_batches
 
     cfg, model, params = _build(args)
     if cfg.moe is None:
         raise SystemExit(f"{cfg.name} has no MoE layers to compress")
-    # per-method metric default: M-SMoE groups on router logits (paper §4.1)
-    metric = args.metric or ("router_logits" if args.method == "m_smoe"
-                             else "expert_output")
+    # per-method metric default declared by the planner itself
+    metric = args.metric or getattr(PLANNERS.get(args.method),
+                                    "default_metric", "expert_output")
     spec = PlanSpec(
         target_experts=args.target, method=args.method,
         metric=metric, clustering=args.clustering,

@@ -3,6 +3,8 @@ train / prefill / decode steps with explicit in/out shardings, plus their
 ShapeDtypeStruct argument pytrees (zero device allocation)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -24,8 +26,9 @@ def _params_sds(model):
 
 
 def build_train_step(cfg, shape: ShapeConfig, mesh: Mesh, pc: ParallelConfig,
-                     opt_cfg: OptimizerConfig = OptimizerConfig()):
+                     opt_cfg: Optional[OptimizerConfig] = None):
     """Returns (jitted_step, (params_sds, opt_sds, batch_sds))."""
+    opt_cfg = opt_cfg if opt_cfg is not None else OptimizerConfig()
     model = build_model(cfg)
     params_sds = _params_sds(model)
     opt_sds = jax.eval_shape(init_opt_state, params_sds)

@@ -40,6 +40,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contracts_enabled
 from repro.models.attention import cache_window
 
 PAGEABLE_MIXERS = ("attn", "attn_local", "attn_global")
@@ -237,6 +238,8 @@ class PageAllocator:
                 "free (raise kv_pages or shrink the admitted batch)")
         fresh = [self._free.pop() for _ in range(need)]
         have.extend(fresh)
+        if contracts_enabled():
+            self._check_invariants()
         return fresh
 
     def release(self, slot: int) -> List[int]:
@@ -245,7 +248,22 @@ class PageAllocator:
         self._reserved.pop(slot, None)
         pages = self._owned.pop(slot, [])
         self._free.extend(pages)
+        if contracts_enabled():
+            self._check_invariants()
         return pages
+
+    def _check_invariants(self) -> None:
+        """The property-tested allocator invariants, asserted inline under
+        REPRO_CONTRACTS (tests/CI); never called in production."""
+        owned_pages = [p for pages in self._owned.values() for p in pages]
+        assert len(owned_pages) == len(set(owned_pages)), (
+            "page owned by more than one slot")
+        assert 0 not in owned_pages and 0 not in self._free, (
+            "null page 0 entered circulation")
+        assert len(self._free) + len(owned_pages) == self.num_pages - 1, (
+            f"page leak: {len(self._free)} free + {len(owned_pages)} owned "
+            f"!= {self.num_pages - 1}")
+        assert self.pages_available >= 0, "reservations exceed the pool"
 
     def table_row(self, slot: int, table_len: int):
         """The slot's page table row, null-padded to ``table_len``."""

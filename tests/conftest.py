@@ -3,6 +3,10 @@ import os
 # Smoke tests and benches see ONE device; multi-device tests run in
 # subprocesses that set xla_force_host_platform_device_count themselves.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Arm the @checked runtime contracts (repro.analysis.contracts) for the
+# whole suite. Must happen before any repro import: the decorator reads the
+# flag at import time so production paths stay a zero-cost identity.
+os.environ.setdefault("REPRO_CONTRACTS", "1")
 
 import jax
 import numpy as np

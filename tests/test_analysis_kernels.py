@@ -1,0 +1,80 @@
+"""The Pallas kernel contract verifier (repro.analysis.kernel_verify).
+
+The battery launches every pallas_call site in interpret mode under a
+capture hook and exhaustively evaluates its BlockSpec index maps over the
+full grid; a clean run proves every DMA tile is in-bounds or intentionally
+clamped, tiles divide dims, scalars prefetch as ints, and out_specs tile
+the output exactly once. The regression test reintroduces the PR 4
+sliding-window lower-skip off-by-one and asserts the verifier flags it."""
+import pytest
+
+from repro.analysis import kernel_verify as kv
+
+
+def test_battery_clean():
+    results = kv.verify_all()
+    assert len(results) >= 14
+    bad = {name: [str(f) for f in fs] for name, fs in results.items() if fs}
+    assert not bad, f"kernel contract violations: {bad}"
+
+
+def test_capture_hook_sees_real_launch():
+    case = next(c for c in kv.build_cases()
+                if c.name == "flash_decode/w256")
+    caps = []
+    with kv.capture_launches(caps):
+        case.run()
+    assert len(caps) == 1
+    cap = caps[0]
+    assert cap.num_scalar_prefetch == 1
+    assert len(cap.grid) == 3
+    assert cap.grid[2] == 256 // 128  # W/TK kv tiles
+
+
+def test_pr4_sliding_window_off_by_one_detected(monkeypatch):
+    """PR 4 shipped `(ki+1)*page >= pos - window + 1` (>= for >) in the
+    paged kernel's lower skip: when (pos - window) % page == page - 1 the
+    gate ran a dead tile whose DMA the index map had clamped onto the last
+    live page, double-counting it. Reintroduce exactly that gate and
+    assert the clamp-coherence check fires on the trap case."""
+    from repro.kernels import flash_decode as fd
+
+    def buggy_live_tile_paged(ki, pos_b, *, page, window):
+        run = ki * page < pos_b + 1
+        if window:
+            run &= (ki + 1) * page >= pos_b - window + 1  # the off-by-one
+        return run
+
+    monkeypatch.setattr(fd, "live_tile_paged", buggy_live_tile_paged)
+    # p8_win12 holds pos=19: (19-12) % 8 == 7 == page-1, the trap layout
+    case = next(c for c in kv.build_cases()
+                if c.name == "flash_decode_paged/p8_win12")
+    findings = kv.verify_case(case)
+    assert findings, "verifier missed the PR 4 off-by-one"
+    clamp = [f for f in findings if f.check == "clamp"]
+    assert clamp, [str(f) for f in findings]
+    assert any("double-count" in f.message for f in clamp)
+
+
+def test_contiguous_gate_coverage_pairs_with_clamp(monkeypatch):
+    """The dual failure mode: a gate that skips a REQUIRED tile (too
+    aggressive rather than too lax) must trip the coverage check."""
+    from repro.kernels import flash_decode as fd
+    import jax.numpy as jnp
+
+    def overeager_live_tile(ki, pos_b, *, tk, w):
+        n_valid = jnp.minimum(pos_b + 1, w)
+        return ki * tk < n_valid - tk  # skips the last (partial) live tile
+
+    monkeypatch.setattr(fd, "live_tile", overeager_live_tile)
+    case = next(c for c in kv.build_cases()
+                if c.name == "flash_decode/w256")
+    findings = kv.verify_case(case)
+    assert any(f.check == "coverage" for f in findings), \
+        [str(f) for f in findings]
+
+
+@pytest.mark.parametrize("name", ["moe_gemm/e3", "fused_ffn/silu"])
+def test_single_case_reverifies(name):
+    case = next(c for c in kv.build_cases() if c.name == name)
+    assert kv.verify_case(case) == []

@@ -1,0 +1,246 @@
+"""Good/bad fixture pairs for every linter rule (RPR001..RPR007) plus the
+noqa suppression contract. Stdlib-only module under test — no jax needed."""
+import textwrap
+
+from repro.analysis.lint import lint_source
+
+LIB = "src/repro/core/_fixture_.py"
+BENCH = "benchmarks/_fixture_.py"
+
+
+def run(src, path=LIB, rule=None):
+    findings = lint_source(textwrap.dedent(src), path=path)
+    if rule is not None:
+        findings = [f for f in findings if f.rule == rule]
+    return findings
+
+
+# --------------------------------------------------------------- RPR001
+def test_traced_branch_flagged():
+    bad = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+    """
+    assert run(bad, rule="RPR001")
+
+
+def test_traced_branch_in_pallas_kernel_flagged():
+    bad = """
+    import functools
+    from jax.experimental import pallas as pl
+
+    def _kernel(x_ref, o_ref):
+        v = x_ref[...]
+        if v > 0:
+            o_ref[...] = v
+
+    def wrapper(x):
+        return pl.pallas_call(functools.partial(_kernel), out_shape=x)(x)
+    """
+    assert run(bad, rule="RPR001")
+
+
+def test_static_branches_pass():
+    good = """
+    import jax
+
+    @jax.jit
+    def f(x, *, causal=True):
+        if causal:                 # kw-only: functools.partial static channel
+            x = x + 1
+        if x.shape[0] > 2:         # shapes are static at trace time
+            x = x * 2
+        if x is None:              # identity checks are host-side
+            return x
+        return x
+    """
+    assert not run(good, rule="RPR001")
+
+
+# --------------------------------------------------------------- RPR002
+def test_module_jnp_constant_flagged():
+    bad = """
+    import jax.numpy as jnp
+
+    SCALE = jnp.array([1.0, 2.0])
+    """
+    assert run(bad, rule="RPR002")
+
+
+def test_numpy_constant_and_local_jnp_pass():
+    good = """
+    import jax.numpy as jnp
+    import numpy as np
+
+    SCALE = np.array([1.0, 2.0])
+
+    def f(x):
+        return x * jnp.array([1.0, 2.0])
+    """
+    assert not run(good, rule="RPR002")
+
+
+# --------------------------------------------------------------- RPR003
+def test_traced_item_flagged():
+    bad = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        return x.sum().item()
+    """
+    assert run(bad, rule="RPR003")
+
+
+def test_traced_int_cast_flagged():
+    bad = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        return int(x)
+    """
+    assert run(bad, rule="RPR003")
+
+
+def test_host_item_passes():
+    good = """
+    def summarize(arr):
+        return arr.sum().item()
+    """
+    assert not run(good, rule="RPR003")
+
+
+# --------------------------------------------------------------- RPR004
+def test_unknown_collective_axis_flagged():
+    bad = """
+    import jax
+
+    def f(x):
+        return jax.lax.psum(x, "modle")
+    """
+    assert run(bad, rule="RPR004")
+
+
+def test_declared_axes_and_variables_pass():
+    good = """
+    import jax
+
+    def f(x, axis):
+        a = jax.lax.psum(x, "model")
+        b = jax.lax.pmean(x, ("data", "model"))
+        return a + b + jax.lax.psum(x, axis)
+    """
+    assert not run(good, rule="RPR004")
+
+
+# --------------------------------------------------------------- RPR005
+def test_unsynced_bench_timing_flagged():
+    bad = """
+    import time
+
+    def bench(fn, x):
+        t0 = time.time()
+        out = fn(x)
+        return out, time.time() - t0
+    """
+    assert run(bad, path=BENCH, rule="RPR005")
+
+
+def test_synced_bench_timing_passes():
+    good = """
+    import time
+    import jax
+
+    def bench(fn, x):
+        t0 = time.time()
+        out = jax.block_until_ready(fn(x))
+        return out, time.time() - t0
+    """
+    assert not run(good, path=BENCH, rule="RPR005")
+
+
+def test_library_timing_not_in_scope():
+    src = """
+    import time
+
+    def bench(fn, x):
+        t0 = time.time()
+        out = fn(x)
+        return out, time.time() - t0
+    """
+    assert not run(src, path=LIB, rule="RPR005")
+
+
+# --------------------------------------------------------------- RPR006
+def test_registry_name_compare_flagged():
+    # "average" is a registered merge; literal dispatch on it is the exact
+    # stringly-typed pattern the registries replaced
+    bad = """
+    def pick(spec):
+        if spec.merge == "average":
+            return 1
+        return 2
+    """
+    assert run(bad, rule="RPR006")
+
+
+def test_registry_lookup_passes():
+    good = """
+    from repro.core.registry import MERGES
+
+    def pick(spec):
+        return MERGES.get(spec.merge)
+    """
+    assert not run(good, rule="RPR006")
+
+
+def test_registry_rule_skips_tests_dir():
+    src = """
+    def pick(spec):
+        return spec.merge == "average"
+    """
+    assert not run(src, path="src/repro/tests/test_x.py", rule="RPR006")
+
+
+# --------------------------------------------------------------- RPR007
+def test_print_in_library_flagged():
+    assert run("print('hi')\n", rule="RPR007")
+
+
+def test_print_in_launch_and_benchmarks_pass():
+    assert not run("print('hi')\n", path="src/repro/launch/cli.py",
+                   rule="RPR007")
+    assert not run("print('hi')\n", path=BENCH, rule="RPR007")
+
+
+def test_logging_passes():
+    good = """
+    import logging
+
+    log = logging.getLogger(__name__)
+
+    def f():
+        log.info("hi")
+    """
+    assert not run(good, rule="RPR007")
+
+
+# ----------------------------------------------------------------- noqa
+def test_noqa_suppresses_matching_rule():
+    assert not run("print('hi')  # noqa: RPR007\n", rule="RPR007")
+    assert not run("print('hi')  # noqa\n", rule="RPR007")
+
+
+def test_noqa_other_rule_does_not_suppress():
+    assert run("print('hi')  # noqa: RPR001\n", rule="RPR007")
+
+
+def test_syntax_error_reported_not_raised():
+    findings = run("def broken(:\n")
+    assert findings and findings[0].rule == "RPR000"

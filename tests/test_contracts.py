@@ -1,0 +1,137 @@
+"""The @checked runtime contract layer (repro.analysis.contracts).
+
+conftest.py sets REPRO_CONTRACTS=1 before any repro import, so the
+decorators on the kernel wrappers are armed for the whole suite — these
+tests exercise the spec mini-language directly and the armed hot
+interfaces end-to-end."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (
+    ContractError, checked, contracts_enabled)
+
+
+def test_contracts_armed_by_conftest():
+    assert contracts_enabled()
+
+
+# ----------------------------------------------------- spec mini-language
+def test_dim_unification_and_literals():
+    @checked(a="B 4", b="B n", ret="B n")
+    def f(a, b):
+        return b
+
+    f(np.zeros((2, 4)), np.zeros((2, 7)))
+    with pytest.raises(ContractError, match="dim B=3 conflicts"):
+        f(np.zeros((2, 4)), np.zeros((3, 7)))
+    with pytest.raises(ContractError, match="dim 4 !="):
+        f(np.zeros((2, 5)), np.zeros((2, 7)))
+
+
+def test_rank_and_non_array():
+    @checked(a="B n")
+    def f(a):
+        return a
+
+    with pytest.raises(ContractError, match="rank 2"):
+        f(np.zeros((2, 3, 4)))
+    with pytest.raises(ContractError, match="expected an array"):
+        f([1, 2, 3])
+
+
+def test_wildcard_and_dtype_markers():
+    @checked(idx="B _:int", x="_ _:float", flag="_:bool")
+    def f(idx, x, flag):
+        return idx
+
+    f(np.zeros((2, 9), np.int32), np.zeros((5, 1), np.float32),
+      np.zeros((3,), bool))
+    with pytest.raises(ContractError, match="expected int dtype"):
+        f(np.zeros((2, 9), np.float32), np.zeros((5, 1), np.float32),
+          np.zeros((3,), bool))
+
+
+def test_return_spec_checks_output():
+    @checked(a="B n", ret="B n")
+    def transpose(a):
+        return a.T
+
+    transpose(np.zeros((3, 3)))
+    with pytest.raises(ContractError, match="return"):
+        transpose(np.zeros((2, 5)))
+
+
+def test_callable_predicate():
+    @checked(mode=lambda m, _: m in ("fast", "slow"))
+    def f(x, mode="fast"):
+        return x
+
+    f(1, mode="slow")
+    with pytest.raises(ContractError, match="predicate"):
+        f(1, mode="turbo")
+
+
+def test_unknown_parameter_rejected_at_decoration():
+    with pytest.raises(ContractError, match="unknown parameters"):
+        @checked(nope="B")
+        def f(x):
+            return x
+
+
+def test_checks_run_on_tracers():
+    import jax
+
+    @checked(x="B n", ret="B n")
+    def f(x):
+        return x * 2
+
+    jax.jit(f)(jnp.zeros((2, 3)))  # shape metadata is static under trace
+    with pytest.raises(ContractError):
+        jax.jit(f)(jnp.zeros((2, 3, 4)))
+
+
+# ------------------------------------------------- armed hot interfaces
+def test_flash_decode_contract_armed():
+    from repro.kernels.flash_decode import flash_decode
+
+    q = jnp.zeros((2, 8, 16), jnp.float32)
+    k = jnp.zeros((2, 8, 2, 16), jnp.float32)
+    with pytest.raises(ContractError, match="kv_pos"):
+        flash_decode(q, k, k, jnp.zeros((2, 8), jnp.float32),
+                     jnp.zeros((2,), jnp.int32), interpret=True)
+
+
+def test_fused_ffn_contract_armed():
+    from repro.kernels.fused_ffn import fused_ffn
+
+    x = jnp.zeros((8, 16), jnp.float32)
+    wg = jnp.zeros((16, 32), jnp.float32)
+    wd_bad = jnp.zeros((16, 32), jnp.float32)  # should be (F, d)
+    with pytest.raises(ContractError, match="wd"):
+        fused_ffn(x, wg, wg, wd_bad, interpret=True)
+
+
+def test_apply_plan_contract_armed():
+    from repro.core.plan import apply_plan
+
+    with pytest.raises(ContractError, match="params"):
+        apply_plan({"not_decoder": {}}, object())
+
+
+# --------------------------------------------- PageAllocator invariants
+def test_page_allocator_invariants_checked():
+    from repro.models.kvcache import PageAllocator
+
+    alloc = PageAllocator(num_pages=8, page_size=4)
+    alloc.reserve(0, 16)
+    alloc.ensure(0, 16)   # invariants asserted inline after each mutation
+    alloc.ensure(1, 4)
+    alloc.release(0)
+    assert alloc.pages_free == 6
+
+    # corrupt the free list the way a double-release would and assert the
+    # inline check trips
+    alloc._free.append(alloc._owned[1][0])
+    with pytest.raises(AssertionError, match="owned"):
+        alloc._check_invariants()

@@ -154,7 +154,7 @@ def test_all_variants_produce_working_models(setup, variant):
 def test_baselines_produce_working_models(setup):
     cfg, model, params, batches, stats = setup
     eb = [{**b, "labels": b["tokens"]} for b in batches]
-    for name, fn in [("f", bl.f_prune), ("s", bl.s_prune)]:
+    for _name, fn in [("f", bl.f_prune), ("s", bl.s_prune)]:
         pruned, info = fn(cfg, params, stats, 4)
         assert np.isfinite(eval_loss(model, pruned, eb, moe_mode="dense"))
         assert info["keep"].sum() == 4 * cfg.num_layers

@@ -47,7 +47,7 @@ class TestPageAllocator:
 
     def test_release_round_trip_never_leaks(self):
         a = PageAllocator(num_pages=9, page_size=8)
-        for cycle in range(5):
+        for _cycle in range(5):
             a.ensure(0, 24)
             a.ensure(1, 16)
             assert a.pages_in_use + a.pages_free == a.num_pages - 1
@@ -96,7 +96,7 @@ class TestPageAllocator:
         a = PageAllocator(num_pages=12, page_size=4)
         rng = np.random.RandomState(0)
         live = {}
-        for step in range(200):
+        for _step in range(200):
             if live and (len(live) >= 3 or rng.rand() < 0.4):
                 s = rng.choice(sorted(live))
                 a.release(s)

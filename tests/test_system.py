@@ -81,7 +81,7 @@ def test_hcsmoe_beats_random_grouping(trained_tiny_moe):
 
     rng = np.random.RandomState(0)
     losses_rand = []
-    for trial in range(3):
+    for _trial in range(3):
         groupings = [dict(g) for g in info["layers"]]
         for g in groupings:
             labels = rng.randint(0, 4, cfg.moe.num_experts)

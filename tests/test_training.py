@@ -107,7 +107,7 @@ def test_grad_accum_matches_full_batch(tiny):
     g_acc = None
     for i in range(4):
         g_i = keep_float(jax.grad(ce_loss, allow_int=True)(
-            params, jax.tree.map(lambda x: x[i], micros)))
+            params, jax.tree.map(lambda x, i=i: x[i], micros)))
         g_acc = g_i if g_acc is None else [a + b for a, b in zip(g_acc, g_i)]
     err = max(
         float(jnp.max(jnp.abs(a / 4.0 - b)))
