@@ -17,11 +17,15 @@ tokens/s, TTFT, decode step ms) so future PRs can regress-check the perf
 trajectory — CI enforces it via ``benchmarks/check_regression.py`` (see
 benchmarks/README.md for the re-baselining contract).
 
-A second table drives a MIXED short/long prompt workload through three KV
-configurations — contiguous, paged, and paged+chunked-prefill — reporting
-the KV bytes actually resident (page-pool peak) vs contiguous
+A second table drives a MIXED short/long prompt workload through four KV
+configurations — contiguous, paged, paged+chunked-prefill, and the fully
+composed ``paged_pallas_ep`` (paged pool x flash-decode kernels x an
+expert-parallel serving mesh, trivial 1-device on the gated CPU run) —
+reporting the KV bytes actually resident (page-pool peak) vs contiguous
 provisioning, plus the TTFT and decode-stall (longest single engine step)
-deltas that chunked prefill buys the co-tenants of a long prompt.
+deltas that chunked prefill buys the co-tenants of a long prompt. The
+composed row is asserted greedy-token-identical to the contiguous/jnp
+engine before it is recorded.
 
 On a no-TPU box the pallas backend runs in interpret mode —
 wall-clock there measures the interpreter, not the kernel — so the JSON
@@ -38,8 +42,11 @@ runs the merged and unmerged models under an expert-sharded
 expert-parameter bytes — the paper's memory-saving claim measured where it
 matters for deployment, per chip. Forces an 8-way host-platform device view
 when run on a single-device box (so jax must not be imported before
-``main()`` parses flags). EP serving keeps ``attn_impl="jnp"`` (pallas
-under GSPMD partitioning is a ROADMAP item).
+``main()`` parses flags). The EP table also serves the combined
+paged + pallas + EP engine (page pools sharded over the model axis, the
+flash kernels launched per-shard via repro.kernels.partition) and asserts
+its greedy tokens match the single-device jnp engine before reporting
+per-device KV bytes next to the expert bytes.
 """
 from __future__ import annotations
 
@@ -71,13 +78,13 @@ REPEATS = 3  # timed repetitions per row; the BEST one is recorded
 
 
 def _serve_once(model, params, cfg, moe_mode, *, n_requests, max_new,
-                slots=4, max_len=64, attn_impl="jnp", parallel=None,
-                mesh=None, repeats=REPEATS):
+                slots=4, max_len=64, attn_impl="jnp", kv_layout="contiguous",
+                parallel=None, mesh=None, repeats=REPEATS):
     from repro.serving import ServingEngine
 
     engine = ServingEngine(model, params, batch_slots=slots, max_len=max_len,
                            moe_mode=moe_mode, attn_impl=attn_impl,
-                           parallel=parallel, mesh=mesh)
+                           kv_layout=kv_layout, parallel=parallel, mesh=mesh)
     # warm-up with the IDENTICAL workload so every prefill bucket shape the
     # timed window will hit is already compiled (same seed -> same prompt
     # lengths -> same admission groupings); then record the BEST of
@@ -139,7 +146,7 @@ def _serve_paged_config(model, cfg, params, *, label, engine_kw, n_short,
                   if len(r.prompt) < long_len]
     long_ttft = [r.ttft for r in best_finished
                  if len(r.prompt) >= long_len]
-    return {
+    row = {
         "config": label,
         "tokens_per_s": st.tokens_per_s,
         "mean_ttft_s": st.mean_ttft_s,
@@ -153,14 +160,20 @@ def _serve_paged_config(model, cfg, params, *, label, engine_kw, n_short,
         "kv_pages_total": st.kv_pages_total,
         "kv_page_util": st.kv_page_util,
         "kv_bytes_peak": st.kv_bytes_peak,
+        "kv_shard_degree": st.kv_shard_degree,
+        "kv_bytes_peak_per_device": st.kv_bytes_peak_per_device,
         "kv_bytes_provisioned": mem["kv_bytes_provisioned"],
         "kv_bytes_contiguous": mem["kv_bytes_contiguous"],
     }
+    return row, {r.uid: list(r.generated) for r in best_finished}
 
 
 def run_paged(ctx, json_payload):
-    """Paged-KV / chunked-prefill table on the ragged MoE path."""
+    """Paged-KV / chunked-prefill table on the ragged MoE path, plus the
+    fully composed paged+pallas+EP engine (token-identity-checked)."""
     from benchmarks.common import emit_csv, record
+    from repro.launch.mesh import make_serving_mesh
+    from repro.parallel import ParallelConfig
 
     model, cfg, params = ctx.model, ctx.cfg, ctx.params
     slots, max_len = 4, 64
@@ -169,15 +182,23 @@ def run_paged(ctx, json_payload):
     n_short, n_long = (3, 1) if ctx.fast else (6, 2)
     long_len = 48
     max_new = 4 if ctx.fast else 8
+    pc = ParallelConfig(fsdp_axis=None, weight_gather=False, ep=True)
     configs = (
         ("contiguous", {}),
         ("paged", dict(kv_layout="paged", kv_page_size=page)),
         ("paged_chunked", dict(kv_layout="paged", kv_page_size=page,
                                prefill_chunk=chunk)),
+        # the tentpole composition: all three serving axes at once (the
+        # mesh is trivially 1-device on the gated CPU run; the 8-device
+        # version runs under --ep and in tests/test_multidevice.py)
+        ("paged_pallas_ep", dict(kv_layout="paged", kv_page_size=page,
+                                 attn_impl="pallas", parallel=pc,
+                                 mesh=make_serving_mesh())),
     )
     rows = []
+    toks = {}
     for label, kw in configs:
-        row = _serve_paged_config(
+        row, toks[label] = _serve_paged_config(
             model, cfg, params, label=label, engine_kw=kw, n_short=n_short,
             n_long=n_long, long_len=long_len, max_new=max_new, slots=slots,
             max_len=max_len)
@@ -191,6 +212,13 @@ def run_paged(ctx, json_payload):
             f"kv_peak_B={row['kv_bytes_peak']};"
             f"kv_contig_B={row['kv_bytes_contiguous']}")
     record("serving_paged", rows)
+
+    # every KV configuration is the SAME greedy computation — the composed
+    # row in particular must not drift from the contiguous/jnp engine
+    for label in ("paged", "paged_chunked", "paged_pallas_ep"):
+        assert toks[label] == toks["contiguous"], (
+            f"{label} diverged from contiguous/jnp greedy tokens")
+    print("# paged_pallas_ep greedy tokens identical to contiguous/jnp")
 
     by = {r["config"]: r for r in rows}
     pk, cg = by["paged"]["kv_bytes_peak"], by["paged"]["kv_bytes_contiguous"]
@@ -207,10 +235,14 @@ def run_paged(ctx, json_payload):
               f"TTFT {by['paged']['short_ttft_s'] * 1e3:.1f} -> "
               f"{by['paged_chunked']['short_ttft_s'] * 1e3:.1f} ms")
     json_payload["paged"] = {
+        # the "configs" entry bumps the workload stanza for the PR that
+        # added the composed row, so older baselines are skipped (not
+        # gated) per the re-baselining contract in benchmarks/README.md
         "workload": {"n_short": n_short, "n_long": n_long,
                      "long_len": long_len, "max_new": max_new,
                      "slots": slots, "max_len": max_len,
-                     "kv_page_size": page, "prefill_chunk": chunk},
+                     "kv_page_size": page, "prefill_chunk": chunk,
+                     "configs": [c for c, _ in configs]},
         "rows": rows,
     }
 
@@ -394,6 +426,40 @@ def run_ep(args) -> None:
                      "expert_bytes_max_per_device": eb["max_per_device"]})
         print(f"# {name}: {eb['total'] / 1e6:.3f} MB expert params total, "
               f"{eb['max_per_device'] / 1e6:.3f} MB max/device")
+
+    # the composed engine at REAL EP degree: paged pool x flash kernels x
+    # expert-sharded mesh, greedy-token-identical to single-device jnp
+    toks = lambda eng: {r.uid: list(r.generated)  # noqa: E731
+                        for r in eng.finished}
+    _, eng_ref = _serve_once(model, params, cfg, "ragged",
+                             n_requests=n_requests, max_new=max_new,
+                             repeats=1)
+    st, eng_c = _serve_once(model, params, cfg, "ragged",
+                            n_requests=n_requests, max_new=max_new,
+                            attn_impl="pallas", kv_layout="paged",
+                            parallel=parallel, mesh=mesh, repeats=1)
+    assert toks(eng_c) == toks(eng_ref), (
+        "paged+EP+pallas diverged from the single-device jnp engine")
+    km = eng_c.kv_memory()
+    us_per_tok = (st.wall_time_s * 1e6 / st.total_new_tokens
+                  if st.total_new_tokens else float("inf"))
+    emit_csv("serving_ep/combined/paged_pallas", us_per_tok,
+             f"tok_s={st.tokens_per_s:.1f};"
+             f"kv_shards={km['kv_shard_degree']};"
+             f"kv_peak_B_per_device={km['kv_bytes_peak_per_device']};"
+             f"ep_degree={ep_degree}")
+    rows.append({"model": "unmerged", "moe_mode": "ragged",
+                 "attn_impl": "pallas", "kv_layout": "paged",
+                 "ep_degree": ep_degree,
+                 "tokens_per_s": st.tokens_per_s,
+                 "tokens_match_single_device_jnp": True,
+                 "kv_shard_degree": km["kv_shard_degree"],
+                 "kv_bytes_peak": km["kv_bytes_peak"],
+                 "kv_bytes_peak_per_device": km["kv_bytes_peak_per_device"]})
+    print(f"# combined paged+pallas+EP: tokens identical to single-device "
+          f"jnp; KV peak {km['kv_bytes_peak']} B "
+          f"({km['kv_bytes_peak_per_device']} B/device, "
+          f"{km['kv_shard_degree']}-way K/V shard)")
     record("serving_ep", rows)
 
 

@@ -36,9 +36,11 @@ on the host, and the following invariants are proved per launch
 
 :func:`build_cases` is the battery: representative shape/position configs for
 all five launch sites (flash_attention, flash_decode, flash_decode_paged,
-moe_gemm, fused_ffn), including ring wrap-around, sliding windows, empty
-slots, the (pos-window) % page == page-1 boundary from the PR 4 bug, gcd
-tiling, and zero-sized expert groups. ``python -m repro.analysis kernels``
+moe_gemm, fused_ffn), including ring wrap-around, sliding windows (decode AND
+the fused windowed/softcap prefill), empty slots, the (pos-window) % page ==
+page-1 boundary from the PR 4 bug, gcd tiling, zero-sized expert groups, and
+the per-shard shapes the shard_map wrappers in repro.kernels.partition launch
+under an expert-parallel serving mesh. ``python -m repro.analysis kernels``
 runs it; tests/test_analysis_kernels.py additionally proves the PR 4
 off-by-one is *detected* when reintroduced in a toy kernel.
 """
@@ -533,7 +535,8 @@ def _flash_decode_paged_case(name, *, page, table_len, pos, window=0,
     )
 
 
-def _flash_attention_case(name, *, s, causal, b_n=2, k_heads=2, g=2, hd=8):
+def _flash_attention_case(name, *, s, causal, b_n=2, k_heads=2, g=2, hd=8,
+                          window=0, logit_cap=0.0):
     import jax.numpy as jnp
 
     from repro.kernels import flash_attention as fa
@@ -547,24 +550,36 @@ def _flash_attention_case(name, *, s, causal, b_n=2, k_heads=2, g=2, hd=8):
         q = jnp.asarray(rng.randn(b_n, s, h, hd), jnp.float32)
         k = jnp.asarray(rng.randn(b_n, s, k_heads, hd), jnp.float32)
         v = jnp.asarray(rng.randn(b_n, s, k_heads, hd), jnp.float32)
-        fa.flash_attention(q, k, v, causal=causal)
+        fa.flash_attention(q, k, v, causal=causal, window=window,
+                           logit_cap=logit_cap)
 
     def live(cap, cell):
         _bh, qi, ki = cell
-        return bool(fa.live_tile(qi, ki, tq=tq, tk=tk, causal=causal))
+        return bool(fa.live_tile(qi, ki, tq=tq, tk=tk, causal=causal,
+                                 window=window))
 
     def required(cap):
-        # attention semantics: output rows of tile qi need every key
-        # position <= their max query position qi*tq + tq - 1
+        # attention semantics: the rows of q tile qi need every key position
+        # some row attends to — [max(row - window + 1, 0), row] per row,
+        # unioned over the tile, intersected with causality
         bh_n, q_n, _ = cap.grid
         req = []
         for qi in range(q_n):
             hi = qi * tq + tq - 1 if causal else s - 1
+            lo = max(qi * tq - (window - 1), 0) if window else 0
             req.extend((bh, qi, ki) for bh in range(bh_n)
-                       for ki in range(hi // tk + 1))
+                       for ki in range(lo // tk, hi // tk + 1))
         return req
 
-    return KernelCase(name=name, run=run, live=live, required_live=required)
+    def nominal_kv(cap, cell):
+        # live k steps must fetch their own tile: clip(j, lo, hi) == j.
+        # folded KV batch row for query-head cell bh is bh // (H/K)
+        bh, _qi, ki = cell
+        return (bh // g, ki, 0)
+
+    return KernelCase(name=name, run=run, live=live,
+                      nominal={1: nominal_kv, 2: nominal_kv},
+                      required_live=required)
 
 
 def _moe_gemm_case(name, *, e, d, f, group_sizes):
@@ -632,6 +647,28 @@ def build_cases() -> List[KernelCase]:
                               causal=False),
         _flash_attention_case("flash_attention/s40_causal", s=40,
                               causal=True),
+        # windowed prefill: the band straddles KV-tile seams (s=256 -> two
+        # 128 tiles, window=40 crosses at rows 128..167) and the clamped
+        # lo/hi index map + band live gate are cross-checked
+        _flash_attention_case("flash_attention/s256_win40", s=256,
+                              causal=True, window=40),
+        # window below one gcd tile + softcap fused (gemma2-style locals)
+        _flash_attention_case("flash_attention/s64_win16_cap", s=64,
+                              causal=True, window=16, logit_cap=50.0),
+        # per-shard launches under the serving mesh ('heads' mode,
+        # K % tp == 0): shard_map partitions operands BEFORE pallas_call, so
+        # each device launches the identical kernel at K/tp kv heads and
+        # H/tp q heads — verified here at exactly those per-shard shapes
+        # (shard_map traces with abstract operands, so the capture hook
+        # cannot observe contents through it; 'gather' mode launches at the
+        # full shapes the existing cases already cover)
+        _flash_decode_case("flash_decode/ep_heads_shard", w=256,
+                           pos=[-1, 0, 300], k_heads=1, g=2),
+        _flash_decode_paged_case("flash_decode_paged/ep_heads_shard", page=8,
+                                 table_len=4, pos=[19, 27, 31], window=12,
+                                 k_heads=1, g=2),
+        _flash_attention_case("flash_attention/ep_heads_shard", s=128,
+                              causal=True, k_heads=1, g=2),
         # moe_gemm: ragged groups incl. a zero-sized expert
         _moe_gemm_case("moe_gemm/e3", e=3, d=16, f=32,
                        group_sizes=[5, 0, 130]),

@@ -1,10 +1,21 @@
-"""Pallas TPU kernel: causal flash attention (blocked online softmax).
+"""Pallas TPU kernel: flash attention prefill (blocked online softmax).
 
 Grid (B*H, S/TQ, S/TK) with the key dimension innermost ("arbitrary"
 semantics — it accumulates). Running max / denominator / accumulator live in
 VMEM scratch across the k steps of one (bh, q) cell; the output tile is
-written once on the final k step. Causal tiles above the diagonal are
-skipped via @pl.when, so the kernel does ~half the work of the dense matmul.
+written once on the final k step. Tiles fully outside the mask (above the
+causal diagonal, or below the sliding-window band) are skipped via @pl.when,
+and the K/V index maps clamp skipped steps onto the nearest live tile so the
+elided DMAs never fetch dead data (the DMA-eliding convention checked by
+repro.analysis.kernel_verify).
+
+Sliding-window (``window > 0``: query ``q`` attends keys in
+``[q-window+1, q]``) and tanh logit soft-capping (``logit_cap > 0``,
+gemma2-style, applied before masking like repro.models.attention._attend)
+are fused in-kernel, so local-attention layers take this path instead of
+the jnp fallback. Masked logits' probabilities are zeroed explicitly —
+a windowed row's first live tile can be fully masked for that row, where
+``exp(NEG - NEG) = 1`` would otherwise corrupt the denominator.
 
 GQA is native: k/v may carry K <= H heads (K | H). The folded K/V batch is
 (B*K, S, hd) and the K/V BlockSpec index map sends query-head cell ``bh`` to
@@ -32,16 +43,25 @@ TK = 128
 NEG = -2.0e38
 
 
-def live_tile(qi, ki, *, tq, tk, causal):
-    """Causal tile skip: the (qi, ki) tile is live iff its highest query row
-    ``qi*tq + tq - 1`` can attend its lowest key column ``ki*tk``. Defined at
-    module level so the host-side contract verifier
+def live_tile(qi, ki, *, tq, tk, causal, window=0):
+    """Mask-aware tile skip. The (qi, ki) tile is live iff some (q, k) pair
+    in it survives the mask: causally, the highest query row ``qi*tq+tq-1``
+    must reach the lowest key column ``ki*tk``; under a sliding window, the
+    highest key column ``ki*tk+tk-1`` must reach the lowest row's window
+    start ``qi*tq - window + 1``. Equivalently ``lo(qi) <= ki <= hi(qi)``
+    with ``lo = max(qi*tq - window + 1, 0) // tk`` and
+    ``hi = (qi*tq + tq - 1) // tk`` — the clamp bounds the index maps use.
+    Defined at module level so the host-side contract verifier
     (repro.analysis.kernel_verify) checks the same gate the kernel runs."""
-    return (qi * tq + tq - 1 >= ki * tk) if causal else True
+    live = (qi * tq + tq - 1 >= ki * tk) if causal else True
+    if window:
+        in_band = ki * tk + tk - 1 >= qi * tq - (window - 1)
+        live = (live & in_band) if causal else in_band
+    return live
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
-            causal, kv_steps, tq=TQ, tk=TK):
+            causal, window, logit_cap, kv_steps, tq=TQ, tk=TK):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -51,7 +71,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    run = live_tile(qi, ki, tq=tq, tk=tk, causal=causal)
+    run = live_tile(qi, ki, tq=tq, tk=tk, causal=causal, window=window)
 
     @pl.when(run)
     def _step():
@@ -59,13 +79,23 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
         k = k_ref[0]  # (TK, hd)
         v = v_ref[0]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        if causal:
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        ok = None
+        if causal or window:
             q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
             k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
-            s = jnp.where(q_pos >= k_pos, s, NEG)
+            ok = (q_pos >= k_pos) if causal else (q_pos == q_pos)
+            if window:
+                ok = ok & (q_pos - k_pos < window)
+            s = jnp.where(ok, s, NEG)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
+        if ok is not None:
+            # a row can be fully masked in a live tile (windowed first tile):
+            # there m_new stays NEG and exp(NEG - NEG) = 1 — zero explicitly
+            p = jnp.where(ok, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
         acc_scr[...] = (acc_scr[...] * alpha[:, None]
@@ -81,8 +111,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
 
 @checked(q="B S H hd", k="B S K hd", v="B S K hd", ret="B S H hd")
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    window: int = 0, logit_cap: float = 0.0,
                     interpret: bool = False):
     """q: (B, S, H, hd); k, v: (B, S, K, hd) with K | H (un-expanded GQA).
+    ``window > 0`` restricts query q to keys [q-window+1, q];
+    ``logit_cap > 0`` applies tanh soft-capping to the scaled logits.
     Returns (B, S, H, hd)."""
     import math
 
@@ -99,16 +132,24 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
     vf = v.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
     kv_steps = S // tk
 
+    def kv_index(b, i, j):
+        # clamp dead k steps onto the live band [lo(i), hi(i)] so their
+        # (elided) DMAs stay on data a live step fetches anyway
+        lo = jnp.maximum(i * tq - (window - 1), 0) // tk if window else 0
+        hi = (i * tq + tq - 1) // tk if causal else kv_steps - 1
+        # query-head cell b*H+h reads KV head group (b*H+h)//G = b*K+h//G
+        return (b // G, jnp.clip(j, lo, hi), 0)
+
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, logit_cap=logit_cap,
                                kv_steps=kv_steps, tq=tq, tk=tk)
     out = pl.pallas_call(
         kernel,
         grid=(B * H, S // tq, kv_steps),
         in_specs=[
             pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
-            # query-head cell b*H+h reads KV head group (b*H+h)//G = b*K+h//G
-            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b // G, j, 0)),
-            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, tk, hd), kv_index),
+            pl.BlockSpec((1, tk, hd), kv_index),
         ],
         out_specs=pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),

@@ -85,10 +85,15 @@ def grouped_ffn(x_sorted, wg, wu, wd, group_sizes, act: str = "silu"):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "scale"))
-def flash_attention(q, k, v, causal: bool = True, scale=None):
-    """q: (B,S,H,hd); k,v: (B,S,K,hd) un-expanded GQA (K | H)."""
-    return _flash(q, k, v, causal=causal, scale=scale, interpret=INTERPRET)
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "window", "logit_cap"))
+def flash_attention(q, k, v, causal: bool = True, scale=None,
+                    window: int = 0, logit_cap: float = 0.0):
+    """q: (B,S,H,hd); k,v: (B,S,K,hd) un-expanded GQA (K | H). ``window``
+    (sliding-window length) and ``logit_cap`` (tanh soft-cap) are fused
+    in-kernel."""
+    return _flash(q, k, v, causal=causal, scale=scale, window=window,
+                  logit_cap=logit_cap, interpret=INTERPRET)
 
 
 # ---------------------------------------------------------------------------

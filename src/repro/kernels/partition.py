@@ -1,0 +1,176 @@
+"""Partitioning story for the Pallas serving kernels under a mesh.
+
+GSPMD has no partitioning rule for ``pallas_call`` — naively tracing a
+kernel launch inside a sharded jit makes the partitioner give up (or
+all-gather the world). Instead, every serving kernel launch goes through a
+``shard_map`` wrapper so the kernel runs **per shard** with shapes GSPMD
+never has to reason about. Three strategies, picked per model config to
+align with :func:`repro.parallel.sharding.choose_kv_spec` (so the engine's
+cache placement and the kernel's expected layout agree, and no resharding
+happens on the hot path):
+
+``heads``  — ``num_kv_heads % tp == 0``. K/V (and q, via the GQA head
+    order ``h = kh*G + g``: a contiguous block of ``H/tp`` query heads is
+    exactly the ``K/tp`` kv-head groups of one shard) are sharded over the
+    head dim. Attention is independent per head, so each shard runs the
+    unmodified kernel on its slice — zero collectives.
+
+``gather`` — ``head_dim % tp == 0`` (the small-config fallback of
+    ``choose_kv_spec``). K/V live sharded over ``hd`` at rest; inside the
+    shard_map each shard ``all_gather``\\ s the head_dim (tiled) and runs
+    the full kernel. Memory stays sharded; compute is replicated — the
+    right trade at decode batch sizes, where KV residency dominates.
+
+``replicated`` — neither divides. Everything is replicated and each shard
+    runs the identical full launch (out_specs replicated).
+
+When no mesh is in context / ``tp == 1`` / ``pc`` is None, the wrappers
+fall through to the plain jitted ops — single-device callers never pay for
+the indirection. Batch dims use the ``pc.dp`` axis when the mesh carries
+it (serving meshes are ``(data=1, model=ep)``), matching ``cache_pspecs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import (
+    flash_decode_paged as _flash_decode_paged,
+)
+from repro.parallel.compat import shard_map_compat
+from repro.parallel.sharding import get_context_mesh
+
+
+class KernelSharding(NamedTuple):
+    mesh: object
+    axis: str          # the tp/ep mesh axis the kernel is partitioned over
+    tp: int
+    mode: str          # 'heads' | 'gather' | 'replicated'
+    batch_axis: object  # pc.dp when the mesh carries it, else None
+
+
+def kernel_sharding(cfg, pc) -> Optional[KernelSharding]:
+    """The partitioning strategy for this (config, ParallelConfig, context
+    mesh) triple, or None when the plain single-device launch applies."""
+    if pc is None or pc.tp_axis is None:
+        return None
+    mesh = get_context_mesh()
+    if mesh is None or pc.tp_axis not in mesh.axis_names:
+        return None
+    tp = int(mesh.shape[pc.tp_axis])
+    if tp == 1:
+        return None
+    if cfg.num_kv_heads % tp == 0:
+        mode = "heads"
+    elif cfg.head_dim % tp == 0:
+        mode = "gather"
+    else:
+        mode = "replicated"
+    dp_axes = pc.dp_axes if isinstance(pc.dp, tuple) else (pc.dp,)
+    b = pc.dp if all(a in mesh.axis_names for a in dp_axes) else None
+    return KernelSharding(mesh, pc.tp_axis, tp, mode, b)
+
+
+def _gathered(fn, axis, kv_argnums, kv_axis):
+    """Wrap ``fn`` so the kv operands all-gather their sharded dim first."""
+
+    def wrapped(*args):
+        args = list(args)
+        for i in kv_argnums:
+            args[i] = jax.lax.all_gather(args[i], axis, axis=kv_axis,
+                                         tiled=True)
+        return fn(*args)
+
+    return wrapped
+
+
+def sharded_flash_decode(cfg, pc, q, k, v, kv_pos, pos, *, scale=None,
+                         window: int = 0, logit_cap: float = 0.0):
+    """flash_decode under the context mesh (per-shard shard_map launch);
+    plain jitted op when unsharded. Same operand contract as
+    :func:`repro.kernels.ops.flash_decode`."""
+    ks = kernel_sharding(cfg, pc)
+    if ks is None:
+        return ops.flash_decode(q, k, v, kv_pos, pos, scale=scale,
+                                window=window, logit_cap=logit_cap)
+    t, b = ks.axis, ks.batch_axis
+    kern = functools.partial(_flash_decode, scale=scale, window=window,
+                             logit_cap=logit_cap, interpret=ops.INTERPRET)
+    if ks.mode == "heads":
+        in_specs = (P(b, t, None), P(b, None, t, None), P(b, None, t, None),
+                    P(b, None), P(b))
+        out_specs = P(b, t, None)
+        fn = kern
+    else:
+        kv = P(b, None, None, t if ks.mode == "gather" else None)
+        in_specs = (P(b, None, None), kv, kv, P(b, None), P(b))
+        out_specs = P(b, None, None)
+        fn = (_gathered(kern, t, (1, 2), 3)
+              if ks.mode == "gather" else kern)
+    return shard_map_compat(fn, mesh=ks.mesh, in_specs=in_specs,
+                            out_specs=out_specs)(q, k, v, kv_pos, pos)
+
+
+def sharded_flash_decode_paged(cfg, pc, q, k_pool, v_pool, kv_pos,
+                               page_table, pos, *, scale=None,
+                               window: int = 0, logit_cap: float = 0.0):
+    """flash_decode_paged under the context mesh. Page pools are sharded
+    over heads (or head_dim) only — the page dim is a logical address space
+    shared by all shards, so ``kv_pos``/``page_table`` stay replicated
+    (batch over dp)."""
+    ks = kernel_sharding(cfg, pc)
+    if ks is None:
+        return ops.flash_decode_paged(q, k_pool, v_pool, kv_pos, page_table,
+                                      pos, scale=scale, window=window,
+                                      logit_cap=logit_cap)
+    t, b = ks.axis, ks.batch_axis
+    kern = functools.partial(_flash_decode_paged, scale=scale, window=window,
+                             logit_cap=logit_cap, interpret=ops.INTERPRET)
+    if ks.mode == "heads":
+        in_specs = (P(b, t, None), P(None, None, t, None),
+                    P(None, None, t, None), P(None, None), P(b, None), P(b))
+        out_specs = P(b, t, None)
+        fn = kern
+    else:
+        pool = P(None, None, None, t if ks.mode == "gather" else None)
+        in_specs = (P(b, None, None), pool, pool, P(None, None),
+                    P(b, None), P(b))
+        out_specs = P(b, None, None)
+        fn = (_gathered(kern, t, (1, 2), 3)
+              if ks.mode == "gather" else kern)
+    return shard_map_compat(fn, mesh=ks.mesh, in_specs=in_specs,
+                            out_specs=out_specs)(q, k_pool, v_pool, kv_pos,
+                                                 page_table, pos)
+
+
+def sharded_flash_attention(cfg, pc, q, k, v, *, causal: bool = True,
+                            scale=None, window: int = 0,
+                            logit_cap: float = 0.0):
+    """flash prefill under the context mesh. Same operand contract as
+    :func:`repro.kernels.ops.flash_attention`."""
+    ks = kernel_sharding(cfg, pc)
+    if ks is None:
+        return ops.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   window=window, logit_cap=logit_cap)
+    t, b = ks.axis, ks.batch_axis
+    kern = functools.partial(_flash, causal=causal, scale=scale,
+                             window=window, logit_cap=logit_cap,
+                             interpret=ops.INTERPRET)
+    if ks.mode == "heads":
+        in_specs = (P(b, None, t, None),) * 3
+        out_specs = P(b, None, t, None)
+        fn = kern
+    else:
+        kv = P(b, None, None, t if ks.mode == "gather" else None)
+        in_specs = (P(b, None, None, None), kv, kv)
+        out_specs = P(b, None, None, None)
+        fn = (_gathered(kern, t, (1, 2), 3)
+              if ks.mode == "gather" else kern)
+    return shard_map_compat(fn, mesh=ks.mesh, in_specs=in_specs,
+                            out_specs=out_specs)(q, k, v)

@@ -19,16 +19,27 @@ def grouped_ffn_ref(x_sorted, wg, wu, wd, group_sizes, act: str = "silu"):
     return jax.lax.ragged_dot(h, wd, gs)
 
 
-def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+def attention_ref(q, k, v, *, causal: bool = True, scale=None,
+                  window: int = 0, logit_cap: float = 0.0):
     """q: (B, S, H, hd); k, v: (B, S, K, hd), K | H (GQA: each kv head
-    serves H/K query heads). Returns (B, S, H, hd), fp32 softmax."""
+    serves H/K query heads). Returns (B, S, H, hd), fp32 softmax. Softcap
+    applies BEFORE masking; ``window`` keeps only the last ``window``
+    positions (q - kv < window) — mirrors the prefill kernel exactly."""
     B, S, H, hd = q.shape
     K = k.shape[2]
     scale = scale or 1.0 / (hd ** 0.5)
     qg = q.reshape(B, S, K, H // K, hd)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if logit_cap:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    mask = None
     if causal:
         mask = jnp.tril(jnp.ones((S, S), bool))
+    if window:
+        pos = jnp.arange(S)
+        band = pos[:, None] - pos[None, :] < window
+        mask = band if mask is None else (mask & band)
+    if mask is not None:
         logits = jnp.where(mask[None, None, None], logits, -2.0e38)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)

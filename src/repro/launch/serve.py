@@ -153,10 +153,14 @@ def main():
           f"{st.prefill_compilations} compiled shapes)")
     if args.kv_layout == "paged":
         mem = engine.kv_memory()
+        per_dev = (f" ({mem['kv_bytes_peak_per_device']} B/device, "
+                   f"{mem['kv_shard_degree']}-way K/V shard)"
+                   if mem["kv_shard_degree"] > 1 else "")
         print(f"paged KV: {st.kv_pages_peak}/{st.kv_pages_total} pages peak "
               f"({st.kv_page_util:.0%} util, {st.prefill_chunk_calls} "
               f"prefill chunks), {mem['kv_bytes_peak']} B resident peak vs "
-              f"{mem['kv_bytes_contiguous']} B contiguous provisioning")
+              f"{mem['kv_bytes_contiguous']} B contiguous provisioning"
+              + per_dev)
     for r in finished[:3]:
         print(f"  req {r.uid}: ttft={r.ttft * 1e3:.0f}ms "
               f"{r.tokens_per_s:.1f} tok/s  {r.generated[:10]}...")

@@ -14,10 +14,14 @@ convention): "jnp" is the grouped-einsum path everywhere; "pallas" routes
 every decode step through the length-aware split-KV flash-decode kernel
 (:mod:`repro.kernels.flash_decode` — ring-buffer ``kv_pos`` masking,
 sliding window, and logit softcap fused in-kernel) and eligible prefill
-layers (causal full-window, no softcap, self-attention — positions are
-``arange(S)`` on every such call in this codebase) through the blocked
-flash-attention kernel. Non-eligible layers fall back to jnp. The pallas
+layers (causal or sliding-window self-attention, softcap fused — positions
+are ``arange(S)`` on every such call in this codebase) through the blocked
+flash-attention kernel. Only cross-attention falls back to jnp. The pallas
 backend is inference-only: the kernels define no VJP.
+
+Under a mesh, every pallas launch goes through the per-shard ``shard_map``
+wrappers in :mod:`repro.kernels.partition` (pass ``pc=``); the jnp path
+needs no such routing — GSPMD partitions the einsums directly.
 """
 from __future__ import annotations
 
@@ -123,11 +127,14 @@ def attention_forward(params, cfg, spec_mixer: str, x, positions,
                       *, kv_override: Optional[jax.Array] = None,
                       mask_kind: str = "causal",
                       return_kv: bool = False,
-                      q_chunk: int = 1024):
+                      q_chunk: int = 1024, pc=None):
     """Training / prefill attention.
 
     x: (B, S, d); positions: (B, S) absolute positions.
     kv_override: encoder output for cross-attention (B, S_src, d).
+    pc: ParallelConfig — partitions the pallas launches per-shard under a
+    context mesh (repro.kernels.partition); ignored on the jnp path, where
+    GSPMD partitions the einsums itself.
     """
     B, S, d = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -153,21 +160,26 @@ def attention_forward(params, cfg, spec_mixer: str, x, positions,
     scale = cfg.attn_scale or 1.0 / (hd ** 0.5)
     mask_fn = make_mask_fn(mask_kind, cfg.sliding_window)
 
-    # pallas prefill path: blocked flash attention for plain causal
-    # self-attention (no window, no softcap). The kernel masks by tile ROW
-    # INDEX, which equals the positions-based causal mask whenever each
+    # pallas prefill path: blocked flash attention for causal and
+    # sliding-window self-attention, with tanh softcap fused in-kernel (so
+    # gemma2-style layers no longer fall back to jnp). The kernel masks by
+    # tile ROW INDEX, which equals the positions-based masks whenever each
     # row's positions ascend by 1 (q_pos >= k_pos <=> i >= j; a shared base
-    # offset cancels). That holds for every self-attention call in this
-    # codebase (model._decoder_inputs builds arange(S)). It does NOT hold
-    # for packed sequences with position resets — such a caller must keep
-    # attn_impl="jnp" or extend the kernel with explicit positions.
-    # Inference-only — no VJP.
+    # offset cancels — likewise for the window band). That holds for every
+    # self-attention call in this codebase (model._decoder_inputs builds
+    # arange(S)). It does NOT hold for packed sequences with position
+    # resets — such a caller must keep attn_impl="jnp" or extend the kernel
+    # with explicit positions. Inference-only — no VJP.
     use_flash = (cfg.attn_impl == "pallas" and not is_cross
-                 and mask_kind == "causal" and not cfg.attn_logit_softcap)
+                 and (mask_kind == "causal"
+                      or (mask_kind == "local" and cfg.sliding_window)))
     if use_flash:
-        from repro.kernels.ops import flash_attention as _flash_prefill
+        from repro.kernels.partition import sharded_flash_attention
 
-        out = _flash_prefill(q, k, v, causal=True, scale=scale)
+        window = cfg.sliding_window if mask_kind == "local" else 0
+        out = sharded_flash_attention(
+            cfg, pc, q, k, v, causal=True, scale=scale, window=window,
+            logit_cap=cfg.attn_logit_softcap)
         out = out.reshape(B, S, H * hd) @ params["wo"]
         if return_kv:
             return out, (k, v)
@@ -191,11 +203,12 @@ def attention_forward(params, cfg, spec_mixer: str, x, positions,
 
 
 def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
-                     *, kv_override: Optional[jax.Array] = None):
+                     *, kv_override: Optional[jax.Array] = None, pc=None):
     """Single-token decode with ring-buffered KV cache.
 
     x: (B, 1, d); pos: (B,) number of tokens already in cache.
     cache_layer: {"k": (B, W, K, hd), "v": ..., "kv_pos": (B, W) int32}.
+    pc: ParallelConfig for per-shard pallas launches under a mesh.
     For cross-attention (kv_override=enc_out) the cache holds nothing; we
     recompute k/v from enc_out (cheap relative to self-attn cache traffic;
     a production enc-dec would cache these too — see serving engine, which
@@ -238,13 +251,13 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
         # split-KV flash decode: ring-buffer kv_pos masking, sliding window,
         # and softcap fused in-kernel; tiles beyond each slot's filled
         # prefix are skipped via the scalar-prefetched pos
-        from repro.kernels.ops import flash_decode as _flash_decode
+        from repro.kernels.partition import sharded_flash_decode
 
         window = cfg.sliding_window if kind == "local" else 0
-        out = _flash_decode(q[:, 0], k_buf, v_buf, kv_pos,
-                            pos.astype(jnp.int32), scale=scale,
-                            window=window,
-                            logit_cap=cfg.attn_logit_softcap)[:, None]
+        out = sharded_flash_decode(cfg, pc, q[:, 0], k_buf, v_buf, kv_pos,
+                                   pos.astype(jnp.int32), scale=scale,
+                                   window=window,
+                                   logit_cap=cfg.attn_logit_softcap)[:, None]
     else:
         mask = make_mask_fn(kind, cfg.sliding_window)(pos[:, None], kv_pos)
         out = _attend(q, k_buf, v_buf, mask, scale, cfg.attn_logit_softcap)
@@ -252,7 +265,8 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
     return out, {"k": k_buf, "v": v_buf, "kv_pos": kv_pos}
 
 
-def paged_attention_step(params, cfg, spec_mixer: str, x, paged, cache_layer):
+def paged_attention_step(params, cfg, spec_mixer: str, x, paged, cache_layer,
+                         *, pc=None):
     """Cached attention over the PAGED KV layout, for 1..C query tokens per
     slot (C == 1 is a decode step; C > 1 is a chunked-prefill extend).
 
@@ -295,12 +309,13 @@ def paged_attention_step(params, cfg, spec_mixer: str, x, paged, cache_layer):
     kind = "local" if spec_mixer == "attn_local" else "causal"
     window = cfg.sliding_window if kind == "local" else 0
     if cfg.attn_impl == "pallas" and C == 1:
-        from repro.kernels.ops import flash_decode_paged as _fd_paged
+        from repro.kernels.partition import sharded_flash_decode_paged
 
-        out = _fd_paged(q[:, 0], k_pool, v_pool, paged["kv_pos"],
-                        paged["page_table"], paged["pos"].astype(jnp.int32),
-                        scale=scale, window=window,
-                        logit_cap=cfg.attn_logit_softcap)[:, None]
+        out = sharded_flash_decode_paged(
+            cfg, pc, q[:, 0], k_pool, v_pool, paged["kv_pos"],
+            paged["page_table"], paged["pos"].astype(jnp.int32),
+            scale=scale, window=window,
+            logit_cap=cfg.attn_logit_softcap)[:, None]
     else:
         k = gather_paged_kv(k_pool, paged["page_table"])   # (B, L, K, hd)
         v = gather_paged_kv(v_pool, paged["page_table"])

@@ -313,6 +313,16 @@ def init_paged_cache(cfg, batch: int, max_len: int, *, num_pages: int,
     }
 
 
+def paged_cache_specs(cfg, batch: int, max_len: int, *, num_pages: int,
+                      page_size: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the paged cache — zero allocation. The
+    paged analogue of :func:`cache_specs`, used to derive shardings for the
+    engine's jitted extend/decode path under a mesh."""
+    return jax.eval_shape(
+        partial(init_paged_cache, cfg, batch, max_len, num_pages=num_pages,
+                page_size=page_size, dtype=dtype))
+
+
 def paged_write_coords(page_table, pos, n_tokens: int, page_size: int,
                        valid):
     """Flat pool-row indices for writing ``n_tokens`` rows per slot starting

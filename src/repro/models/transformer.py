@@ -112,14 +112,15 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
             raise ValueError(
                 f"paged KV cache supports attention mixers only, got {mixer}")
         out, new_cache = attn.paged_attention_step(lp["mixer"], cfg, mixer,
-                                                   h, paged, cache_layer)
+                                                   h, paged, cache_layer,
+                                                   pc=pc)
     elif mode == "extend":
         raise ValueError("mode='extend' requires a paged cache")
     elif mode == "decode":
         pos = positions  # (B,)
         if mixer in ATTN_KINDS:
             out, new_cache = attn.decode_attention(lp["mixer"], cfg, mixer, h, pos,
-                                                   cache_layer)
+                                                   cache_layer, pc=pc)
         elif mixer == "mla":
             out, new_cache = mla_mod.mla_decode(lp["mixer"], cfg, h, pos, cache_layer)
         elif mixer == "mamba":
@@ -138,7 +139,7 @@ def apply_layer(lp, cfg, spec, x, positions, *, mode: str,
         if mixer in ATTN_KINDS:
             out, kv = attn.attention_forward(lp["mixer"], cfg, mixer, h, positions,
                                              mask_kind=mask_kind,
-                                             return_kv=want_cache)
+                                             return_kv=want_cache, pc=pc)
             if want_cache:
                 new_cache = attn.fill_cache_from_prefill(
                     cfg, mixer, kv[0], kv[1], positions, cache_max_len)

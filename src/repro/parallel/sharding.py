@@ -181,11 +181,18 @@ def cache_pspecs(cfg, cache_tree, pc: ParallelConfig,
     """KV caches: batch over dp; kv-heads (or head_dim) over tp; recurrent
     state channel dims over tp.
 
+    PAGED caches (detected by the top-level ``page_table`` key) differ:
+    the leading dim of ``k``/``v`` pools and the shared ``kv_pos`` is the
+    POOL PAGE index (a logical address space every shard must resolve
+    identically), not batch — pools shard over heads/head_dim only, and
+    ``kv_pos`` is replicated. ``pos``/``page_table`` keep batch over dp.
+
     ctx_shard=True (long-context decode where global_batch < dp size):
     replicate batch, shard the cache LENGTH dim over the dp axis instead —
     context parallelism; softmax over the sharded length lowers to local
     partials + a tiny psum."""
     dp, t = pc.dp, pc.tp_axis
+    paged = isinstance(cache_tree, dict) and "page_table" in cache_tree
 
     def visit(path, leaf):
         names = tuple(
@@ -197,6 +204,14 @@ def cache_pspecs(cfg, cache_tree, pc: ParallelConfig,
         b, l = (None, dp) if ctx_shard else (dp, None)
         if name == "pos":
             spec = P(b)
+        elif paged and name in ("k", "v"):
+            # (N, page, K, hd) shared pool: page address space replicated,
+            # heads over tp (head_dim fallback via cache_pspecs_sized)
+            spec = P(None, None, t, None)
+        elif paged and name == "kv_pos":
+            spec = P(None, None)  # (N, page): shared pool metadata
+        elif name == "page_table":
+            spec = P(b, None)  # (B, P): logical table, batch over dp
         elif name in ("k", "v", "ck", "cv"):
             # (B, W, K, hd): shard kv heads over tp (every assigned arch has
             # hd % 16 == 0, and K % tp when K >= tp); fall back to hd.
@@ -223,30 +238,44 @@ def cache_pspecs(cfg, cache_tree, pc: ParallelConfig,
 
 
 def choose_kv_spec(cfg, pc: ParallelConfig, tp_size: int):
-    """Whether kv heads divide tp; else shard head_dim."""
+    """Shard kv heads when they divide tp; else head_dim; else replicate.
+    Mirrors repro.kernels.partition.kernel_sharding's strategy choice so
+    cache placement and per-shard kernel launches agree."""
     if cfg.num_kv_heads % tp_size == 0:
         return P(pc.dp, None, pc.tp_axis, None)
-    return P(pc.dp, None, None, pc.tp_axis)
+    if cfg.head_dim % tp_size == 0:
+        return P(pc.dp, None, None, pc.tp_axis)
+    return P(pc.dp, None, None, None)
+
+
+def kv_shard_degree(cfg, tp_size: int) -> int:
+    """How many ways choose_kv_spec/kernel_sharding split each K/V array."""
+    if cfg.num_kv_heads % tp_size == 0 or cfg.head_dim % tp_size == 0:
+        return tp_size
+    return 1
 
 
 def cache_pspecs_sized(cfg, cache_tree, pc: ParallelConfig, tp_size: int,
                        ctx_shard: bool = False):
-    """cache_pspecs with the kv-head/head-dim choice resolved for a mesh."""
+    """cache_pspecs with the kv-head/head-dim choice resolved for a mesh.
+    Covers both the contiguous ring layout (batch-leading K/V) and the
+    paged pool layout (page-leading K/V, replicated page dims)."""
     base = cache_pspecs(cfg, cache_tree, pc, ctx_shard=ctx_shard)
     if cfg.num_kv_heads % tp_size == 0:
         return base
+    t = pc.tp_axis
+    hd_t = t if cfg.head_dim % tp_size == 0 else None
     b, l = (None, pc.dp) if ctx_shard else (pc.dp, None)
-    kv_spec_head = P(b, l, pc.tp_axis, None)
-    kv_spec_hd = P(b, l, None, pc.tp_axis)
-    kv_spec_head_stacked = P(None, *kv_spec_head)
-    kv_spec_hd_stacked = P(None, *kv_spec_hd)
+    swaps = {}
+    for head_spec, hd_spec in (
+        (P(b, l, t, None), P(b, l, None, hd_t)),        # contiguous ring
+        (P(None, None, t, None), P(None, None, None, hd_t)),  # paged pool
+    ):
+        swaps[head_spec] = hd_spec
+        swaps[P(None, *head_spec)] = P(None, *hd_spec)  # stacked
 
     def fix(spec):
-        if spec == kv_spec_head:
-            return kv_spec_hd
-        if spec == kv_spec_head_stacked:
-            return kv_spec_hd_stacked
-        return spec
+        return swaps.get(spec, spec)
 
     return jax.tree.map(fix, base,
                         is_leaf=lambda x: isinstance(x, P))

@@ -13,8 +13,16 @@ FCFS queue.
 Engine knobs live on :class:`ServingConfig`
 (``ServingEngine(model, params, config=ServingConfig(...))``; flat kwargs
 remain as a back-compat construction path, and
-:meth:`ServingConfig.validate` is the single home of the paged/EP/pallas
-compatibility rules). Engine anatomy (and the knobs that control it):
+:meth:`ServingConfig.validate` is the single home of the few genuinely
+impossible combinations). The three serving axes — **KV layout**
+(contiguous/paged) × **attention backend** (jnp/pallas) × **expert
+parallelism** (single-device/EP mesh) — compose freely: every engine runs
+the same unified dispatch paths (``_splice_fn`` for admission splices,
+``_decode_dispatch`` for the per-token step, ``_call`` entering the serving
+mesh context), and each axis only swaps what it owns — the cache pytree
+shape, the attention kernel, or the shardings. All eight combinations are
+greedy-token-identical (tested). Engine anatomy (and the knobs that control
+it):
 
 * **Bucketed batched prefill** (``bucket_prompts``, ``min_bucket``,
   ``prefill_batch``): admission right-pads up to ``prefill_batch`` queued
@@ -67,8 +75,9 @@ compatibility rules). Engine anatomy (and the knobs that control it):
   runs the page-table-aware flash-decode kernel (page table scalar-
   prefetched to SMEM; unallocated pages are never fetched). Greedy outputs
   are token-identical to the contiguous layout (tested). Paged serving
-  currently requires attention-family mixers and no expert parallelism
-  (both rejected with clear errors; paged+EP is a ROADMAP item).
+  requires attention-family mixers (the one rejected combination — a page
+  pool has no meaning for recurrent state); it composes with EP and with
+  either attention backend.
 * **Chunked prefill** (``prefill_chunk``, paged layout only): prompts
   longer than ``prefill_chunk`` tokens skip the bucketed batch prefill and
   are instead prefilled chunk-by-chunk through ``model.extend`` —
@@ -86,11 +95,18 @@ compatibility rules). Engine anatomy (and the knobs that control it):
   Routing correctness under EP comes from the shard_map forward in
   :mod:`repro.models.moe` (replicated routing, shard-local expert GEMMs —
   design notes in :mod:`repro.parallel.sharding`). Host-side cache splices
-  are re-placed with ``device_put`` onto the cache shardings after every
-  admission. Expert stacks whose slot count does not divide the EP degree
-  (merged models) are zero-padded up front via ``pad_expert_slots`` —
-  routing can never reach the padded slots. Per-device expert-parameter
-  bytes are reported by :meth:`ServingEngine.expert_bytes_per_device`.
+  are re-placed onto the cache shardings by ``_place_cache()`` after every
+  eager mutation (admission splice, page-table sync, page release). Expert
+  stacks whose slot count does not divide the EP degree (merged models) are
+  zero-padded up front via ``pad_expert_slots`` — routing can never reach
+  the padded slots. K/V tensors additionally shard over the model axis when
+  head count or head_dim divides it (:func:`choose_kv_spec` /
+  ``cache_pspecs_sized``); the Pallas kernels then run per-shard via the
+  ``shard_map`` wrappers in :mod:`repro.kernels.partition`, so pallas
+  attention composes with EP on both KV layouts. Per-device footprints are
+  reported by :meth:`ServingEngine.expert_bytes_per_device` and the
+  ``kv_shard_degree`` / ``kv_bytes_peak_per_device`` fields of
+  :meth:`ServingEngine.stats` and :meth:`ServingEngine.kv_memory`.
 """
 from __future__ import annotations
 
@@ -168,6 +184,12 @@ class ServingStats:
     kv_page_util: float = 0.0      # kv_pages_peak / kv_pages_total
     kv_bytes_peak: int = 0         # pages_peak * per-page bytes (all layers)
     kv_bytes_contiguous: int = 0   # what the contiguous layout provisions
+    # per-device accounting under a mesh: K/V arrays are split
+    # kv_shard_degree ways (choose_kv_spec — kv heads or head_dim over tp),
+    # so each device holds kv_bytes_peak_per_device of the pools, NOT the
+    # replicated total. Both are 1x the global numbers single-device.
+    kv_shard_degree: int = 1
+    kv_bytes_peak_per_device: int = 0
 
 
 @dataclass
@@ -198,7 +220,12 @@ class ServingConfig:
     def validate(self, model_cfg=None) -> None:
         """Canonical cross-feature compatibility rules. Pure-config rules
         always run; rules needing the (post-``attn_impl``-rebuild) model
-        config run when ``model_cfg`` is given."""
+        config run when ``model_cfg`` is given.
+
+        The three serving axes — KV layout × attention backend × expert
+        parallelism — compose freely; only genuinely-impossible combos are
+        rejected here (malformed values, chunked prefill without paging,
+        paging over non-attention mixers)."""
         if self.kv_layout not in ("contiguous", "paged"):
             raise ValueError(
                 f"kv_layout must be 'contiguous' or 'paged', got "
@@ -208,19 +235,8 @@ class ServingConfig:
             raise ValueError(
                 "prefill_chunk > 0 requires kv_layout='paged' (chunked "
                 "prefill writes the cache page-by-page)")
-        if self.parallel is not None and paged:
-            raise NotImplementedError(
-                "kv_layout='paged' under expert-parallel serving needs "
-                "sharded page pools; use kv_layout='contiguous' with "
-                "parallel= (tracked in ROADMAP)")
         if model_cfg is None:
             return
-        attn = self.attn_impl or model_cfg.attn_impl
-        if self.parallel is not None and attn == "pallas":
-            raise NotImplementedError(
-                "attn_impl='pallas' under expert-parallel serving needs a "
-                "partitioning rule for the pallas_call; use attn_impl='jnp' "
-                "with parallel= (tracked in ROADMAP)")
         if paged and not supports_paging(model_cfg):
             raise ValueError(
                 f"{model_cfg.name}: kv_layout='paged' requires "
@@ -300,22 +316,32 @@ class ServingEngine:
                 "window, or enc-dec/VLM inputs)")
         self.bucket_prompts = bucket_prompts
 
+        if self.paged:
+            self.pages_per_slot = self.max_len // self.page_size
+            self.num_pages = kv_pages or (batch_slots * self.pages_per_slot
+                                          + 1)
+
         self.pc = parallel
         self.mesh = None
-        self._cache_sh = None
+        self._cache_sh = None          # engine cache (paged pools OR rings)
+        self._prefill_cache_sh = None  # transient prefill (ring) cache
+        self._kv_shards = 1
+        self._extend = None
         if parallel is not None:
             from jax.sharding import NamedSharding, PartitionSpec
 
             from repro.launch.mesh import make_serving_mesh
-            from repro.models.kvcache import cache_specs
+            from repro.models.kvcache import cache_specs, paged_cache_specs
             from repro.parallel.sharding import (
-                cache_pspecs_sized, pad_expert_slots, param_pspecs)
+                cache_pspecs_sized, kv_shard_degree, pad_expert_slots,
+                param_pspecs)
 
             if mesh is None:
                 mesh = make_serving_mesh()
             self.mesh = mesh
             tp_size = (int(mesh.shape[parallel.tp_axis])
                        if parallel.tp_axis in mesh.shape else 1)
+            self._kv_shards = kv_shard_degree(self.cfg, tp_size)
             if (parallel.ep and self.cfg.moe is not None and tp_size > 1
                     and moe_mode in ("ragged", "pallas")):
                 # merged models may have a slot count that does not divide
@@ -330,11 +356,31 @@ class ServingEngine:
                                     is_leaf=is_spec)
             params = jax.device_put(params, param_sh)
             repl = ns(PartitionSpec())
-            struct = cache_specs(self.cfg, batch_slots, max_len,
-                                 jnp.dtype(self.cfg.dtype))
-            self._cache_sh = jax.tree.map(
-                ns, cache_pspecs_sized(self.cfg, struct, parallel, tp_size),
+            # the transient prefill cache is ALWAYS the contiguous ring
+            # layout — paged mode splices it into the pools host-side —
+            # and NamedShardings are shape-polymorphic, so one sharding
+            # tree covers every bucket length
+            ring_struct = cache_specs(self.cfg, batch_slots, max_len,
+                                      jnp.dtype(self.cfg.dtype))
+            self._prefill_cache_sh = jax.tree.map(
+                ns, cache_pspecs_sized(self.cfg, ring_struct, parallel,
+                                       tp_size),
                 is_leaf=is_spec)
+            if self.paged:
+                paged_struct = paged_cache_specs(
+                    self.cfg, batch_slots, self.max_len,
+                    num_pages=self.num_pages, page_size=self.page_size,
+                    dtype=jnp.dtype(self.cfg.dtype))
+                self._cache_sh = jax.tree.map(
+                    ns, cache_pspecs_sized(self.cfg, paged_struct, parallel,
+                                           tp_size),
+                    is_leaf=is_spec)
+                self._extend = jax.jit(
+                    self._extend_fn,
+                    in_shardings=(param_sh, repl, self._cache_sh, repl),
+                    out_shardings=(repl, self._cache_sh))
+            else:
+                self._cache_sh = self._prefill_cache_sh
             self._decode = jax.jit(
                 self._decode_fn,
                 in_shardings=(param_sh, repl, self._cache_sh),
@@ -342,27 +388,28 @@ class ServingEngine:
             self._prefill = jax.jit(
                 self._prefill_fn,
                 in_shardings=(param_sh, repl, repl),
-                out_shardings=(repl, self._cache_sh))
+                out_shardings=(repl, self._prefill_cache_sh))
         else:
             self._decode = jax.jit(self._decode_fn)
             self._prefill = jax.jit(self._prefill_fn)
         self.params = params
 
         if self.paged:
-            self.pages_per_slot = self.max_len // self.page_size
-            num_pages = kv_pages or (batch_slots * self.pages_per_slot + 1)
-            self.allocator = PageAllocator(num_pages, self.page_size)
+            self.allocator = PageAllocator(self.num_pages, self.page_size)
             self.cache = init_paged_cache(
-                self.cfg, batch_slots, self.max_len, num_pages=num_pages,
-                page_size=self.page_size, dtype=jnp.dtype(self.cfg.dtype))
-            self._extend = jax.jit(self._extend_fn)
+                self.cfg, batch_slots, self.max_len,
+                num_pages=self.num_pages, page_size=self.page_size,
+                dtype=jnp.dtype(self.cfg.dtype))
+            if self._extend is None:
+                self._extend = jax.jit(self._extend_fn)
             self._table_dirty = False
         else:
             self.allocator = None
             self.cache = init_cache(self.cfg, batch_slots, max_len,
                                     jnp.dtype(self.cfg.dtype))
-        if self._cache_sh is not None:
-            self.cache = jax.device_put(self.cache, self._cache_sh)
+        # one layout-resolved splice path for every admission site
+        self._splice_fn = self._splice_paged if self.paged else self._splice
+        self._place_cache()
         self.active: Dict[int, Request] = {}   # slot -> request
         # slot -> {"req", "chunks": plan_chunks spans, "next": span index}
         self.prefilling: Dict[int, dict] = {}
@@ -446,11 +493,14 @@ class ServingEngine:
 
         self.cache = jax.tree_util.tree_map_with_path(visit, self.cache,
                                                       cacheN)
+        self._place_cache()
+
+    def _place_cache(self):
+        """Re-place the cache onto the engine cache shardings after a
+        host-side (eager) mutation — splice, page-table sync, page
+        release, slot reset — so the next jitted dispatch matches its
+        in_shardings with zero resharding. No-op single-device."""
         if self._cache_sh is not None:
-            # the host-side splice runs eagerly and may leave leaves with
-            # whatever sharding GSPMD picked for the scatter; re-place onto
-            # the engine cache shardings so the next decode dispatch matches
-            # its in_shardings with zero resharding
             self.cache = jax.device_put(self.cache, self._cache_sh)
 
     # ------------------------------------------------------- paged helpers
@@ -467,6 +517,7 @@ class ServingEngine:
                       for s in range(self.slots)])
         self.cache["page_table"] = jnp.asarray(t)
         self._table_dirty = False
+        self._place_cache()
 
     def _ensure_pages(self, slot: int, n_rows: int):
         if self.allocator.ensure(slot, n_rows):
@@ -482,6 +533,7 @@ class ServingEngine:
             self.cache["kv_pos"] = self.cache["kv_pos"].at[
                 jnp.asarray(np.asarray(released, np.int32))].set(-1)
             self._table_dirty = True
+            self._place_cache()
 
     def _worst_rows(self, req: Request) -> int:
         return len(req.prompt) + req.max_new_tokens
@@ -584,6 +636,7 @@ class ServingEngine:
             jnp.asarray(np.asarray(slots, np.int32))].set(
             jnp.asarray(lens.astype(np.int32)))
         self._sync_page_table()
+        self._place_cache()
 
     def _record_prefill(self, shape):
         self.prefill_calls += 1
@@ -630,6 +683,7 @@ class ServingEngine:
                 # tenant; chunk writes derive their rows from it, so the
                 # slot must restart at 0 before the first chunk
                 self.cache["pos"] = self.cache["pos"].at[free[0]].set(0)
+                self._place_cache()
                 self.prefilling[free[0]] = {
                     "req": req,
                     "chunks": plan_chunks(len(req.prompt),
@@ -669,10 +723,7 @@ class ServingEngine:
                 self._record_prefill((Bp, L))
                 lens = np.asarray([len(r.prompt) for r in take], np.int32)
                 slots = free[:n]
-                if self.paged:
-                    self._splice_paged(slots, cacheN, lens)
-                else:
-                    self._splice(slots, cacheN, lens)
+                self._splice_fn(slots, cacheN, lens)
                 sampling = [r.sampling for r in take] + [None] * (Bp - n)
                 counters = [0] * Bp
                 toks = np.asarray(sample_tokens(
@@ -696,10 +747,7 @@ class ServingEngine:
                 dt = time.perf_counter() - t0
                 self._record_prefill((1, len(req.prompt)))
                 lens1 = np.asarray([len(req.prompt)], np.int32)
-                if self.paged:
-                    self._splice_paged(free[:1], cache1, lens1)
-                else:
-                    self._splice(free[:1], cache1, lens1)
+                self._splice_fn(free[:1], cache1, lens1)
                 tok = np.asarray(sample_tokens(
                     logits[:, 0], *sampling_arrays([req.sampling], [0])))
                 self._assign([req], free[:1], tok[:1], t0 + dt, dt, retired)
@@ -770,6 +818,32 @@ class ServingEngine:
             retired.append(req)
 
     # --------------------------------------------------------------- decode
+    def _grow_pages_for_decode(self):
+        """Paged layouts only: grow any slot whose next decode write crosses
+        into an unallocated page, then push the table to the device.
+        Contiguous layouts are a no-op — the ring is pre-provisioned."""
+        if not self.paged:
+            return
+        for s, req in self.active.items():
+            self._ensure_pages(s, len(req.prompt) + len(req.generated))
+        self._sync_page_table()
+
+    def _decode_dispatch(self):
+        """One decode dispatch, layout-agnostic. Paged layouts decode via a
+        single-token ``extend`` (dead and still-prefilling slots frozen with
+        valid=0); contiguous layouts via the dedicated decode step. Both run
+        under the serving mesh (if any) through :meth:`_call`, so the same
+        path covers single-device and expert-parallel engines."""
+        tok = jnp.asarray(self.last_token)
+        if self.paged:
+            logits, self.cache = self._call(
+                self._extend, self.params, tok, self.cache,
+                jnp.asarray(self.slot_live.astype(np.int32)))
+        else:
+            logits, self.cache = self._call(
+                self._decode, self.params, tok, self.cache)
+        return logits
+
     def step(self) -> List[Request]:
         """One engine step: admit waiting requests, decode one token for
         every live slot, retire finished requests. Returns the requests
@@ -786,25 +860,9 @@ class ServingEngine:
                 self._advance_prefills(retired)
             if not self.slot_live.any():
                 return retired
-            if self.paged:
-                # grow any slot whose next decode write crosses into an
-                # unallocated page, then push the table to the device
-                for s, req in self.active.items():
-                    self._ensure_pages(
-                        s, len(req.prompt) + len(req.generated))
-                self._sync_page_table()
+            self._grow_pages_for_decode()
             t_dec = time.perf_counter()
-            if self.paged:
-                # a single-token extend IS the paged decode step; dead and
-                # still-prefilling slots are frozen via valid=0
-                logits, self.cache = self._call(
-                    self._extend, self.params, jnp.asarray(self.last_token),
-                    self.cache,
-                    jnp.asarray(self.slot_live.astype(np.int32)))
-            else:
-                logits, self.cache = self._call(
-                    self._decode, self.params, jnp.asarray(self.last_token),
-                    self.cache)
+            logits = self._decode_dispatch()
             logits.block_until_ready()
             self._decode_time += time.perf_counter() - t_dec
             sampling = [self.active[s].sampling if self.slot_live[s] else None
@@ -880,24 +938,40 @@ class ServingEngine:
 
         return expert_param_bytes_per_device(self.params)
 
+    def _page_bytes_per_device(self) -> int:
+        """Per-device bytes of one KV page under the serving mesh. The K/V
+        payload splits across ``_kv_shards`` devices (head- or head_dim-
+        sharded per :func:`choose_kv_spec`); the int32 ``kv_pos`` row
+        (page_size * 4 bytes) is replicated on every device."""
+        full = paged_kv_page_bytes(self.cfg, self.page_size)
+        pos_b = self.page_size * 4
+        return (full - pos_b) // self._kv_shards + pos_b
+
     def kv_memory(self) -> dict:
         """KV memory accounting: what this engine actually holds vs what the
-        contiguous layout provisions for the same ``(slots, max_len)``."""
+        contiguous layout provisions for the same ``(slots, max_len)``.
+        ``*_per_device`` fields report the per-shard footprint under the
+        serving mesh (equal to the global value when unsharded)."""
         contig = contiguous_kv_bytes(self.cfg, self.slots, self.max_len)
         if not self.paged:
             return {"layout": "contiguous",
+                    "kv_shard_degree": self._kv_shards,
                     "kv_bytes_provisioned": contig,
                     "kv_bytes_contiguous": contig}
         page_b = paged_kv_page_bytes(self.cfg, self.page_size)
+        page_b_dev = self._page_bytes_per_device()
         return {
             "layout": "paged",
             "page_size": self.page_size,
             "page_bytes": page_b,
+            "page_bytes_per_device": page_b_dev,
+            "kv_shard_degree": self._kv_shards,
             "pages_total": self.allocator.num_pages - 1,
             "pages_in_use": self.allocator.pages_in_use,
             "pages_peak": self._kv_pages_peak,
             "kv_bytes_provisioned": self.allocator.num_pages * page_b,
             "kv_bytes_peak": self._kv_pages_peak * page_b,
+            "kv_bytes_peak_per_device": self._kv_pages_peak * page_b_dev,
             "kv_bytes_contiguous": contig,
         }
 
@@ -935,4 +1009,8 @@ class ServingEngine:
             kv_bytes_peak=self._kv_pages_peak * page_bytes,
             kv_bytes_contiguous=contiguous_kv_bytes(
                 self.cfg, self.slots, self.max_len),
+            kv_shard_degree=self._kv_shards,
+            kv_bytes_peak_per_device=(
+                self._kv_pages_peak * self._page_bytes_per_device()
+                if self.paged else 0),
         )

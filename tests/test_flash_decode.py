@@ -149,6 +149,63 @@ def test_prefill_flash_gqa(h, kv):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("window,cap", [(16, 0.0), (16, 50.0), (8, 30.0),
+                                        (1, 0.0)])
+def test_prefill_flash_windowed_softcap(window, cap):
+    """Sliding-window + softcap fused into the prefill kernel (gemma2-style
+    local layers). window=1 is the degenerate diagonal-only band; every
+    windowed row's FIRST live KV tile can be fully masked, so this also
+    guards the masked-prob zeroing in the online softmax."""
+    key = jax.random.PRNGKey(window)
+    q = jax.random.normal(key, (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 16))
+    o = ops.flash_attention(q, k, v, causal=True, window=window,
+                            logit_cap=cap)
+    o_ref = ref.attention_ref(q, k, v, causal=True, window=window,
+                              logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_prefill_flash_windowed_multitile():
+    """window smaller than a KV tile AND spanning tile boundaries: S=256
+    -> two 128-row tiles; window=40 straddles the tile-0/tile-1 seam for
+    rows 128..167, and the clamped index map must still fetch the right
+    lo/hi tile band."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 256, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 32))
+    o = ops.flash_attention(q, k, v, causal=True, window=40, logit_cap=30.0)
+    o_ref = ref.attention_ref(q, k, v, causal=True, window=40,
+                              logit_cap=30.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_prefill_windowed_parity_vs_attention_forward():
+    """gemma2-style config: attn_impl='pallas' prefill now routes local
+    sliding-window + softcap layers through the fused flash kernel instead
+    of falling back to jnp — logits must match attention_forward exactly
+    (the satellite parity requirement)."""
+    cfg = get_config("gemma2-2b").reduced(dtype="float32")
+    assert cfg.sliding_window and cfg.attn_logit_softcap
+    model_j = build_model(cfg)
+    model_p = build_model(dataclasses.replace(cfg, attn_impl="pallas"))
+    params = model_j.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 24), 0,
+                              cfg.vocab_size)
+    lj, cache_j = model_j.prefill(params, tokens=toks, cache_max_len=32)
+    lp, cache_p = model_p.prefill(params, tokens=toks, cache_max_len=32)
+    np.testing.assert_allclose(np.asarray(lj), np.asarray(lp),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(cache_j), jax.tree.leaves(cache_p)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_prefill_parity_vs_attention_forward():
     """cfg.attn_impl='pallas' prefill must match the jnp attention_forward
     on the same params/tokens (the satellite parity requirement)."""

@@ -275,3 +275,60 @@ def test_ep_serving_matches_single_device_engine():
         assert res[name]["match"], name
         # every device holds 1/8 of the (padded) expert stacks
         assert abs(res[name]["bytes_ratio"] - 1 / 8) < 1e-6, res[name]
+
+
+def test_paged_ep_pallas_serving_matches_single_device_engine():
+    """The tentpole composition: paged KV layout x Pallas flash-decode x
+    expert-parallel mesh in ONE engine. The page pools shard over the model
+    axis (head_dim for the reduced mixtral: K=2 does not divide tp=8 but
+    hd=16 does), the paged flash-decode kernel runs per-shard inside
+    shard_map's all-gather wrapper, and greedy tokens must be identical to
+    the plain single-device contiguous/jnp engine. Per-device KV accounting
+    must reflect the 8-way K/V split."""
+    res = run_sub("""
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.parallel import ParallelConfig
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving import Request, ServingEngine
+
+        cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (4, 7, 10, 5)]
+
+        def serve(**kw):
+            eng = ServingEngine(model, params, batch_slots=2, max_len=32,
+                                **kw)
+            reqs = [Request(uid=i, prompt=pr, max_new_tokens=4)
+                    for i, pr in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            return [r.generated for r in reqs], eng
+
+        ref, _ = serve()
+        pc = ParallelConfig(fsdp_axis=None, weight_gather=False, ep=True)
+        combo, eng = serve(kv_layout="paged", attn_impl="pallas",
+                           parallel=pc, mesh=make_serving_mesh(8))
+        st = eng.stats()
+        km = eng.kv_memory()
+        eb = eng.expert_bytes_per_device()
+        print(json.dumps({
+            "match": combo == ref,
+            "kv_shards": st.kv_shard_degree,
+            "peak": st.kv_bytes_peak,
+            "peak_dev": st.kv_bytes_peak_per_device,
+            "km_peak_dev": km["kv_bytes_peak_per_device"],
+            "bytes_ratio": eb["max_per_device"] / eb["total"],
+        }))
+    """)
+    assert res["match"]
+    assert res["kv_shards"] == 8
+    # K/V payload splits 8 ways; only the replicated kv_pos rows stay whole
+    assert 0 < res["peak_dev"] < res["peak"]
+    assert res["km_peak_dev"] == res["peak_dev"]
+    assert abs(res["bytes_ratio"] - 1 / 8) < 1e-6

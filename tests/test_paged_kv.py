@@ -481,18 +481,14 @@ def test_paged_admission_reserves_decode_growth(paged_served):
 
 
 def test_paged_gating():
-    """Clear errors: paged+EP, paged+recurrent mixers, chunking without
-    paging, bad layout name."""
+    """Clear errors: paged+recurrent mixers, chunking without paging, bad
+    layout name. paged+EP is LEGAL since the serving runtime unification
+    (the composition matrix in tests/test_serving.py covers it serving
+    token-identically); only genuinely impossible combos raise."""
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    from repro.parallel import ParallelConfig
 
-    with pytest.raises(NotImplementedError, match="paged"):
-        ServingEngine(model, params, batch_slots=2, max_len=32,
-                      kv_layout="paged",
-                      parallel=ParallelConfig(fsdp_axis=None,
-                                              weight_gather=False, ep=True))
     with pytest.raises(ValueError, match="paged"):
         ServingEngine(model, params, batch_slots=2, max_len=32,
                       prefill_chunk=8)

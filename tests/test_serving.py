@@ -430,15 +430,50 @@ def test_attn_impl_pallas_token_identical(served):
     assert st_j.decode_time_s <= st_j.wall_time_s
 
 
-def test_attn_impl_pallas_rejects_parallel(served):
+def test_serving_axes_composition_matrix(served):
+    """All 8 combos of {contiguous,paged} x {jnp,pallas} x
+    {single-device,EP} construct and serve greedy-token-identically — the
+    tentpole acceptance criterion: no serving axis rejects another.
+
+    Single-process EP here runs on a 1-device mesh (tp=1 -> kernels stay
+    unpartitioned); the real 8-device paged+EP+pallas parity lives in
+    tests/test_multidevice.py."""
     cfg, model, params = served
+    from repro.launch.mesh import make_serving_mesh
     from repro.parallel import ParallelConfig
 
-    with pytest.raises(NotImplementedError, match="pallas"):
-        ServingEngine(model, params, batch_slots=2, max_len=32,
-                      attn_impl="pallas",
-                      parallel=ParallelConfig(fsdp_axis=None,
-                                              weight_gather=False, ep=True))
+    rng = np.random.RandomState(21)
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 7, 12, 5)]
+
+    def serve(layout, impl, par):
+        kw = {}
+        if par:
+            kw["parallel"] = ParallelConfig(fsdp_axis=None,
+                                            weight_gather=False, ep=True)
+            kw["mesh"] = make_serving_mesh()
+        engine = ServingEngine(model, params, batch_slots=2, max_len=32,
+                               kv_layout=layout, attn_impl=impl, **kw)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        st = engine.stats()
+        assert st.kv_shard_degree >= 1
+        if layout == "paged":
+            assert st.kv_bytes_peak_per_device > 0
+            assert st.kv_bytes_peak_per_device <= st.kv_bytes_peak
+        return [r.generated for r in reqs]
+
+    reference = serve("contiguous", "jnp", False)
+    for layout in ("contiguous", "paged"):
+        for impl in ("jnp", "pallas"):
+            for par in (False, True):
+                if (layout, impl, par) == ("contiguous", "jnp", False):
+                    continue
+                assert serve(layout, impl, par) == reference, \
+                    f"{layout}/{impl}/{'ep' if par else 'single'} diverged"
 
 
 def test_attn_impl_validated():
@@ -592,8 +627,10 @@ class TestServingConfig:
             ServingEngine(model, params, batch_slotz=2)
 
     def test_validate_is_the_canonical_incompatibility_site(self, served):
-        """The paged/EP/pallas rules live on ServingConfig.validate and
-        reject bad combinations without building an engine."""
+        """validate() rejects only the genuinely impossible combinations —
+        bad kv_layout values, prefill_chunk without paging, paging a
+        non-attention mixer — and composes everything else: paged+EP,
+        pallas+EP, and paged+pallas+EP all pass validation."""
         cfg, model, params = served
         from repro.parallel import ParallelConfig
         from repro.serving import ServingConfig
@@ -603,13 +640,12 @@ class TestServingConfig:
             ServingConfig(kv_layout="ring").validate()
         with pytest.raises(ValueError, match="paged"):
             ServingConfig(prefill_chunk=8).validate()
-        with pytest.raises(NotImplementedError, match="page pools"):
-            ServingConfig(kv_layout="paged", parallel=pc).validate()
-        with pytest.raises(NotImplementedError, match="partitioning"):
-            ServingConfig(attn_impl="pallas", parallel=pc).validate(cfg)
-        # and the engine constructor routes through the same site
-        with pytest.raises(NotImplementedError, match="page pools"):
-            ServingEngine(model, params, kv_layout="paged", parallel=pc)
+        # the three serving axes compose freely: no combination of layout,
+        # backend, and parallelism is rejected
+        ServingConfig(kv_layout="paged", parallel=pc).validate(cfg)
+        ServingConfig(attn_impl="pallas", parallel=pc).validate(cfg)
+        ServingConfig(kv_layout="paged", attn_impl="pallas",
+                      parallel=pc).validate(cfg)
 
     def test_merge_plan_applied_at_load(self, served, merged_served):
         """ServingConfig(merge_plan=...) == serving pre-merged params."""
