@@ -7,6 +7,7 @@ RPR004 collective-axis          psum/collective axis names vs declared mesh
 RPR005 bench-unsynced-timing    timed regions without block_until_ready
 RPR006 registry-string-dispatch literal compares against registered names
 RPR007 no-print-in-library      print() in library code (use logging)
+RPR008 swallowed-exception      bare/no-op broad except hiding failures
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ from repro.analysis.rules.jax_hazards import (
     ModuleLevelJnpConstRule, TracedBranchRule, TracedHostCastRule)
 from repro.analysis.rules.no_print import NoPrintRule
 from repro.analysis.rules.registry_names import RegistryNameRule
+from repro.analysis.rules.swallowed_exceptions import SwallowedExceptionRule
 
 
 def all_rules() -> List[Rule]:
@@ -30,6 +32,7 @@ def all_rules() -> List[Rule]:
         BenchTimingRule(),
         RegistryNameRule(),
         NoPrintRule(),
+        SwallowedExceptionRule(),
     ]
 
 
@@ -42,4 +45,5 @@ __all__ = [
     "BenchTimingRule",
     "RegistryNameRule",
     "NoPrintRule",
+    "SwallowedExceptionRule",
 ]

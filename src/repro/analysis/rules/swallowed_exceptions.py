@@ -1,0 +1,80 @@
+"""RPR008: swallowed exceptions in library code.
+
+A bare ``except:`` or an ``except Exception:`` / ``except BaseException:``
+whose body does nothing (only ``pass`` / ``...``) hides real failures: a
+PageExhausted that should trigger preemption, a poisoned-logits guard, a
+splice error that must fail the batch — all vanish into a no-op handler.
+The serving engine's robustness contract depends on errors PROPAGATING to
+the layer that owns the recovery decision (see docs/serving_lifecycle.md),
+so library code may only catch what it handles.
+
+Flagged:
+* ``except:`` (bare) — anywhere in library code, regardless of body: it
+  also traps KeyboardInterrupt/SystemExit.
+* ``except Exception:`` / ``except BaseException:`` (incl. aliased via
+  ``as e``) whose body is only ``pass``/``...`` — the classic silent
+  swallow.
+
+Not flagged: narrow handlers (``except PageExhausted:``), broad handlers
+that DO something (log, re-raise, return a fallback), and anything outside
+library code (CLI entry points in ``repro/launch`` legitimately catch-all
+at top level to format user-facing errors).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import FileContext, LintFinding, Rule, in_library
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_noop_body(body) -> bool:
+    """True when the handler body does nothing: only pass / bare `...`."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) \
+                and isinstance(stmt.value, ast.Constant) \
+                and stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+def _broad_name(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Attribute):     # builtins.Exception
+        return t.attr in _BROAD
+    return False
+
+
+class SwallowedExceptionRule(Rule):
+    """RPR008: bare/broad except that silently discards the error."""
+
+    id = "RPR008"
+    name = "swallowed-exception"
+
+    def applies_to(self, path: str) -> bool:
+        return in_library(path)
+
+    def check(self, tree: ast.AST, ctx: FileContext
+              ) -> Iterator[LintFinding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.finding(
+                    ctx, node,
+                    "bare `except:` traps everything incl. "
+                    "KeyboardInterrupt/SystemExit — catch the specific "
+                    "exception the code can actually handle")
+            elif _broad_name(node) and _is_noop_body(node.body):
+                yield self.finding(
+                    ctx, node,
+                    "`except Exception: pass` silently swallows failures "
+                    "the caller needs (preemption, quarantine, abort) — "
+                    "handle it, log it, or let it propagate")

@@ -76,6 +76,29 @@ def main():
                          "over the 'model' mesh axis")
     ap.add_argument("--ep-degree", type=int, default=0,
                     help="EP mesh size (default: all visible devices)")
+    ap.add_argument("--admission", default="optimistic",
+                    choices=("optimistic", "reserve"),
+                    help="paged admission policy: 'optimistic' admits "
+                         "against expected occupancy and preempts on pool "
+                         "exhaustion (recompute on re-admission); 'reserve' "
+                         "budgets worst-case pages up front and never "
+                         "preempts (see docs/serving_lifecycle.md)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds from submission; "
+                         "overdue requests are EXPIRED at the next step "
+                         "boundary (0 = no deadline)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm the deterministic fault injector "
+                         "(repro.serving.faults): forced preemptions + "
+                         "simulated pool exhaustion; greedy output must "
+                         "stay token-identical to an undisturbed run")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-preempt-every", type=int, default=4,
+                    help="force-preempt the newest resident every N engine "
+                         "steps under --chaos (0 = off)")
+    ap.add_argument("--chaos-exhaust-prob", type=float, default=0.1,
+                    help="per-ensure probability that page growth pretends "
+                         "the pool is dry under --chaos")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -116,6 +139,16 @@ def main():
                                   ep=True, moe_mode=args.moe_mode)
         print(f"expert-parallel serving on {mesh}")
 
+    faults = None
+    if args.chaos:
+        from repro.serving import FaultConfig
+
+        faults = FaultConfig(seed=args.chaos_seed,
+                             preempt_every=args.chaos_preempt_every,
+                             exhaust_prob=args.chaos_exhaust_prob)
+        print(f"chaos armed: seed={args.chaos_seed} "
+              f"preempt_every={args.chaos_preempt_every} "
+              f"exhaust_prob={args.chaos_exhaust_prob}")
     engine = ServingEngine(model, params, config=ServingConfig(
         batch_slots=args.slots,
         max_len=args.prompt_len + args.max_new + 8,
@@ -125,6 +158,7 @@ def main():
         kv_page_size=args.kv_page_size or None,
         kv_pages=args.kv_pages or None,
         prefill_chunk=args.prefill_chunk or None,
+        admission=args.admission, faults=faults,
         parallel=parallel, mesh=mesh, merge_plan=merge_plan))
     if args.ep:
         eb = engine.expert_bytes_per_device()
@@ -138,6 +172,7 @@ def main():
                     prompt=rng.randint(0, cfg.vocab_size,
                                        args.prompt_len).astype(np.int32),
                     max_new_tokens=args.max_new,
+                    deadline_s=args.deadline_s or None,
                     sampling=SamplingParams(temperature=args.temperature,
                                             top_p=args.top_p,
                                             seed=args.seed + i))
@@ -151,6 +186,11 @@ def main():
           f"decode step {st.decode_step_ms:.2f} ms [{engine.attn_impl}], "
           f"{st.prefill_calls} prefill calls / "
           f"{st.prefill_compilations} compiled shapes)")
+    if st.preemptions or st.cancelled or st.expired or st.failed:
+        print(f"lifecycle: {st.preemptions} preemption(s) "
+              f"(mean requeue wait {st.mean_requeue_wait_s * 1e3:.0f} ms), "
+              f"{st.cancelled} cancelled, {st.expired} expired, "
+              f"{st.failed} failed")
     if args.kv_layout == "paged":
         mem = engine.kv_memory()
         per_dev = (f" ({mem['kv_bytes_peak_per_device']} B/device, "

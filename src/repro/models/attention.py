@@ -202,6 +202,51 @@ def attention_forward(params, cfg, spec_mixer: str, x, positions,
     return out, None
 
 
+def _decode_kv_sharding(cfg, pc):
+    """The resting sharding of a decode-step K/V ring slice (B, W, K, hd)
+    under the ambient mesh (:func:`~repro.parallel.sharding.choose_kv_spec`),
+    or None outside a >1-way tensor-parallel mesh context."""
+    if pc is None:
+        return None
+    from repro.parallel.sharding import get_context_mesh
+
+    mesh = get_context_mesh()
+    if mesh is None or pc.tp_axis not in mesh.shape \
+            or int(mesh.shape[pc.tp_axis]) <= 1:
+        return None
+    from jax.sharding import NamedSharding
+
+    from repro.parallel.sharding import choose_kv_spec
+
+    return NamedSharding(mesh, choose_kv_spec(
+        cfg, pc, int(mesh.shape[pc.tp_axis])))
+
+
+def _pin_kv_sharding(cfg, pc, k_buf, v_buf, q):
+    """Pin the freshly-scattered decode K/V ring AND the query to the
+    cache's resting sharding. Without the annotations, GSPMD is free to
+    pick a different partitioning for the decode attention einsums (it
+    favors kv-head×head-group×head_dim tiling) and then cannot reshard
+    the vmapped per-slot ``dynamic_update_slice`` output into it — it
+    falls back to involuntarily rematerializing the FULL ring on every
+    device each step (correct but warned-about and bandwidth-hostile).
+    Constraining both einsum operands to the stored layout (kv-heads over
+    tp when they divide it, else head_dim) keeps the scatter and the
+    attention shard-local; the returned sharding should also be applied
+    to the attention OUTPUT (same (B, S, heads, hd) axis order) so the
+    layout survives the post-attention transpose into the wo projection.
+    Returns (k_buf, v_buf, q, sharding-or-None); no-op outside a >1-way
+    tensor-parallel mesh context."""
+    sh = _decode_kv_sharding(cfg, pc)
+    if sh is None:
+        return k_buf, v_buf, q, None
+    wsc = jax.lax.with_sharding_constraint
+    # q is (B, S=1, H, hd): dims line up with the ring's (B, W, K, hd) for
+    # both strategies (heads over tp when K divides it — H = K*G keeps
+    # groups shard-local — else head_dim over tp)
+    return wsc(k_buf, sh), wsc(v_buf, sh), wsc(q, sh), sh
+
+
 def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
                      *, kv_override: Optional[jax.Array] = None, pc=None):
     """Single-token decode with ring-buffered KV cache.
@@ -242,6 +287,7 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
 
     k_buf = jax.vmap(write)(cache_layer["k"], k_new[:, 0:1], slot)
     v_buf = jax.vmap(write)(cache_layer["v"], v_new[:, 0:1], slot)
+    k_buf, v_buf, q, kv_sh = _pin_kv_sharding(cfg, pc, k_buf, v_buf, q)
     kv_pos = cache_layer["kv_pos"]
     kv_pos = jax.vmap(lambda p, s, val: jax.lax.dynamic_update_slice(p, val, (s,)))(
         kv_pos, slot, pos[:, None].astype(jnp.int32))
@@ -261,6 +307,8 @@ def decode_attention(params, cfg, spec_mixer: str, x, pos, cache_layer,
     else:
         mask = make_mask_fn(kind, cfg.sliding_window)(pos[:, None], kv_pos)
         out = _attend(q, k_buf, v_buf, mask, scale, cfg.attn_logit_softcap)
+        if kv_sh is not None:
+            out = jax.lax.with_sharding_constraint(out, kv_sh)
     out = out.reshape(B, 1, H * hd) @ params["wo"]
     return out, {"k": k_buf, "v": v_buf, "kv_pos": kv_pos}
 

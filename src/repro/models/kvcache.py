@@ -156,12 +156,17 @@ class PageAllocator:
     (admission, chunked prefill, decode crossing a page boundary) and
     :meth:`release` returns every page of a retired slot to the free list.
 
-    :meth:`reserve` is the admission-time backpressure primitive: it
-    budgets a slot's WORST-CASE page count (prompt + max_new rows) against
-    :attr:`pages_available` without allocating anything, so later
-    :meth:`ensure` growth — a decode step crossing a page boundary, the
-    next prefill chunk — can never exhaust the pool mid-request. Physical
-    pages are still handed out lazily; reservations are pure accounting.
+    :meth:`reserve` is the admission-time backpressure primitive of the
+    engine's "reserve" policy: it budgets a slot's WORST-CASE page count
+    (prompt + max_new rows) against :attr:`pages_available` without
+    allocating anything, so later :meth:`ensure` growth — a decode step
+    crossing a page boundary, the next prefill chunk — can never exhaust
+    the pool mid-request. Physical pages are still handed out lazily;
+    reservations are pure accounting. The engine's default "optimistic"
+    policy never reserves: it admits against the free list directly and
+    answers a failed :meth:`ensure` by preempting a resident slot
+    (:meth:`release` both frees the pages and drops any reservation, so
+    preemption and retirement share one exit path).
 
     Invariants (property-tested): a physical page is owned by at most one
     slot, ``free + owned == num_pages - 1`` at all times, and
@@ -202,6 +207,10 @@ class PageAllocator:
 
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, ()))
+
+    def reserved(self, slot: int) -> int:
+        """The slot's budgeted page count (0 if nothing reserved)."""
+        return self._reserved.get(slot, 0)
 
     # ---------------------------------------------------------- mutation
     def reserve(self, slot: int, n_rows: int):

@@ -3,5 +3,7 @@ from repro.models.kvcache import (  # noqa: F401
 from repro.serving.bucketing import (  # noqa: F401
     bucket_length, num_buckets, plan_chunks, supports_bucketing)
 from repro.serving.engine import (  # noqa: F401
-    Request, ServingConfig, ServingEngine, ServingStats)
+    Request, RequestStatus, ServingConfig, ServingEngine, ServingStats)
+from repro.serving.faults import (  # noqa: F401
+    FaultConfig, FaultEvent, FaultInjector, InjectedFault)
 from repro.serving.sampling import GREEDY, SamplingParams  # noqa: F401

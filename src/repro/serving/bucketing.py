@@ -20,6 +20,11 @@ Recurrent mixers (mamba/xLSTM) fold padded tokens into their O(1) state and
 local attention with a window smaller than the bucket drops real tokens from
 the ring buffer, so bucketing is only offered where it is exact — see
 :func:`supports_bucketing`.
+
+Preemption resume (docs/serving_lifecycle.md) re-prefills a victim's
+``prompt + generated`` tokens through these same buckets: resumed lengths
+grow past the original prompt's bucket, but stay bounded by ``max_len``, so
+the O(log2(max_len)) compile-count bound is unchanged under churn.
 """
 from __future__ import annotations
 

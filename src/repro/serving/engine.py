@@ -107,9 +107,37 @@ it):
   reported by :meth:`ServingEngine.expert_bytes_per_device` and the
   ``kv_shard_degree`` / ``kv_bytes_peak_per_device`` fields of
   :meth:`ServingEngine.stats` and :meth:`ServingEngine.kv_memory`.
+* **Request lifecycle under overload** (``admission="optimistic" |
+  "reserve"``, ``Request.deadline_s``, :meth:`ServingEngine.cancel`,
+  ``faults=FaultConfig(...)``): every request walks an explicit state
+  machine (:class:`RequestStatus`: QUEUED → PREFILLING/RUNNING → one of
+  FINISHED / CANCELLED / EXPIRED / FAILED). The default paged admission
+  policy is **optimistic**: a request is admitted when its *resident*
+  rows (prompt + already-generated tokens, plus one decode row) fit the
+  free pool — not its worst case — so the pool runs at the occupancy the
+  traffic actually needs. When decode growth or a prefill chunk then
+  exhausts the pool, the engine **preempts** the latest-admitted resident
+  request vLLM-style: its pages are released, the request rejoins the
+  FRONT of the queue with its generated tokens carried along, and
+  re-admission recomputes its KV by prefilling ``prompt + generated``
+  through the normal (bucketed or chunked) prefill path. Because token
+  ``i`` is always sampled from ``fold_in(seed, i)``, a resumed stream is
+  token-identical to an unpreempted run — greedy *and* stochastic (the
+  chaos-test oracle). ``admission="reserve"`` keeps the PR-4 worst-case
+  reservation behavior as the conservative baseline. Per-request
+  ``deadline_s`` (measured from submit) and :meth:`~ServingEngine.cancel`
+  are enforced at step boundaries; a NaN/Inf logit guard
+  (``logit_guard``) quarantines the offending request (FAILED) instead
+  of crashing the batch; and a seeded fault-injection layer
+  (:mod:`repro.serving.faults`) can force preemptions, allocator
+  exhaustion, splice failures, poisoned logits, and stalled steps to
+  drive every failure path deterministically. See
+  docs/serving_lifecycle.md.
 """
 from __future__ import annotations
 
+import enum
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -119,12 +147,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.kvcache import (
-    PageAllocator, contiguous_kv_bytes, init_cache, init_paged_cache,
-    paged_kv_page_bytes, supports_paging)
+    PageAllocator, PageExhausted, contiguous_kv_bytes, init_cache,
+    init_paged_cache, paged_kv_page_bytes, supports_paging)
 from repro.serving.bucketing import (
     pad_prompts, plan_admission, plan_chunks, supports_bucketing)
+from repro.serving.faults import FaultConfig, FaultInjector, InjectedFault
 from repro.serving.sampling import (
-    SamplingParams, sample_tokens, sampling_arrays)
+    SamplingParams, finite_rows, sample_tokens, sampling_arrays)
+
+
+class RequestStatus(enum.Enum):
+    """Request lifecycle states. QUEUED / PREFILLING / RUNNING are
+    transient (a preempted request returns to QUEUED); the other four are
+    terminal. ``Request.done`` is True exactly in a terminal state."""
+
+    QUEUED = "queued"
+    PREFILLING = "prefilling"     # chunked prefill in progress
+    RUNNING = "running"           # decoding
+    FINISHED = "finished"         # max_new_tokens or EOS
+    CANCELLED = "cancelled"       # engine.cancel(uid)
+    EXPIRED = "expired"           # deadline_s elapsed
+    FAILED = "failed"             # quarantined (non-finite logits, splice)
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestStatus.FINISHED, RequestStatus.CANCELLED,
+                        RequestStatus.EXPIRED, RequestStatus.FAILED)
 
 
 @dataclass
@@ -135,9 +183,14 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # wall-clock budget from submission; checked at step boundaries, so
+    # enforcement granularity is one engine step. None = no deadline.
+    deadline_s: Optional[float] = None
+    status: RequestStatus = RequestStatus.QUEUED
+    error: str = ""               # why status == FAILED
     # --- telemetry (filled by the engine; perf_counter timestamps) ---
     t_submit: float = 0.0
-    t_admit: float = 0.0
+    t_admit: float = 0.0          # FIRST admission (stable across preemption)
     t_first_token: float = 0.0
     t_done: float = 0.0
     # total prefill wall time this request rode in, ACCUMULATED (+=) so a
@@ -145,20 +198,43 @@ class Request:
     # call, which would double-count shared calls or drop all but the last
     # chunk
     prefill_time: float = 0.0
+    preemptions: int = 0          # times evicted and requeued
+    requeue_wait_s: float = 0.0   # total preempt -> re-admit wall time
+    admit_seq: int = -1           # engine-global admission order (LIFO victim)
+    _t_preempt: float = 0.0       # pending preemption timestamp (internal)
 
     @property
     def queue_time(self) -> float:
-        return max(0.0, self.t_admit - self.t_submit)
+        """Submission → first admission. NaN until admitted — a missing
+        timestamp must not masquerade as an instant admission."""
+        if self.t_submit == 0.0 or self.t_admit == 0.0:
+            return float("nan")
+        return self.t_admit - self.t_submit
 
     @property
     def ttft(self) -> float:
-        """Time to first token, from submission."""
-        return max(0.0, self.t_first_token - self.t_submit)
+        """Time to first token, from submission; NaN if no token was ever
+        produced (cancelled/expired while queued, failed admission)."""
+        if self.t_submit == 0.0 or self.t_first_token == 0.0:
+            return float("nan")
+        return self.t_first_token - self.t_submit
 
     @property
     def tokens_per_s(self) -> float:
+        """Decode throughput over the request's resident lifetime (first
+        admission → terminal); NaN for zero-token or never-admitted
+        requests rather than a fake 0.0."""
+        if not self.generated or self.t_admit == 0.0 or self.t_done == 0.0:
+            return float("nan")
         dt = self.t_done - self.t_admit
-        return len(self.generated) / dt if dt > 0 else 0.0
+        return len(self.generated) / dt if dt > 0 else float("nan")
+
+
+def _nanmean(values) -> float:
+    """Mean over the non-NaN entries; 0.0 when none remain (stats of an
+    idle engine stay zeros, not NaN-poisoned)."""
+    vals = [v for v in values if not math.isnan(v)]
+    return float(np.mean(vals)) if vals else 0.0
 
 
 @dataclass
@@ -190,6 +266,12 @@ class ServingStats:
     # replicated total. Both are 1x the global numbers single-device.
     kv_shard_degree: int = 1
     kv_bytes_peak_per_device: int = 0
+    # lifecycle / overload accounting
+    preemptions: int = 0           # eviction events since reset_stats
+    mean_requeue_wait_s: float = 0.0   # mean preempt -> re-admit latency
+    cancelled: int = 0             # terminal-status counts over `requests`
+    expired: int = 0
+    failed: int = 0
 
 
 @dataclass
@@ -213,6 +295,16 @@ class ServingConfig:
     prefill_chunk: Optional[int] = None    # paged layout only
     parallel: Optional[object] = None      # ParallelConfig for EP serving
     mesh: Optional[object] = None
+    # paged admission policy: "optimistic" admits against the rows a
+    # request will actually occupy (prompt + generated + 1) and preempts
+    # under pressure; "reserve" keeps worst-case (prompt + max_new) page
+    # reservation — no preemption, lower pool utilization
+    admission: str = "optimistic"
+    # drop requests whose sampled logits go non-finite (status FAILED)
+    # instead of crashing the batch
+    logit_guard: bool = True
+    # deterministic fault injection (repro.serving.faults.FaultConfig)
+    faults: Optional[object] = None
     # compression plan (repro.core.plan.MergePlan) applied to the served
     # params at engine load time — the offline-computed artifact path
     merge_plan: Optional[object] = None
@@ -235,6 +327,16 @@ class ServingConfig:
             raise ValueError(
                 "prefill_chunk > 0 requires kv_layout='paged' (chunked "
                 "prefill writes the cache page-by-page)")
+        if self.admission not in ("optimistic", "reserve"):
+            raise ValueError(
+                f"admission must be 'optimistic' or 'reserve', got "
+                f"{self.admission!r}")
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultConfig):
+                raise ValueError(
+                    "faults must be a repro.serving.faults.FaultConfig, "
+                    f"got {type(self.faults).__name__}")
+            self.faults.validate()
         if model_cfg is None:
             return
         if paged and not supports_paging(model_cfg):
@@ -411,12 +513,22 @@ class ServingEngine:
         self._splice_fn = self._splice_paged if self.paged else self._splice
         self._place_cache()
         self.active: Dict[int, Request] = {}   # slot -> request
-        # slot -> {"req", "chunks": plan_chunks spans, "next": span index}
+        # slot -> {"req", "tokens": full resume prompt, "chunks":
+        #          plan_chunks spans, "next": span index}
         self.prefilling: Dict[int, dict] = {}
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.last_token = np.zeros((batch_slots, 1), np.int32)
         self.slot_live = np.zeros(batch_slots, bool)
+
+        # lifecycle: admission policy, fault injection, cancellation
+        self.admission = config.admission
+        self.logit_guard = config.logit_guard
+        self.faults = (FaultInjector(config.faults)
+                       if config.faults is not None else None)
+        self._cancel_uids: set = set()
+        self._admit_counter = 0        # monotonic; LIFO preemption victims
+        self.engine_steps = 0          # every step() call; fault clock
 
         # telemetry
         self.prefill_calls = 0
@@ -428,6 +540,8 @@ class ServingEngine:
         self._max_step_s = 0.0
         self._kv_pages_peak = 0
         self._prefill_cache_base = 0
+        self.preemption_count = 0
+        self._requeue_waits: List[float] = []
 
     def _prefill_fn(self, params, tokens, last_pos):
         # paged mode splices the transient prefill cache into the page pool
@@ -463,8 +577,36 @@ class ServingEngine:
                 f"request {req.uid}: prompt ({len(req.prompt)}) + "
                 f"max_new_tokens ({req.max_new_tokens}) exceeds engine "
                 f"max_len ({self.max_len})")
+        if self.paged:
+            # fail fast on a request that can NEVER fit: even with every
+            # other resident evicted, its worst case exceeds the pool.
+            # Admitted requests are therefore always completable, which is
+            # what lets preemption guarantee progress (zero PageExhausted
+            # escapes the engine).
+            worst = self.allocator.pages_for(self._worst_rows(req))
+            if worst > self.allocator.num_pages - 1:
+                raise RuntimeError(
+                    f"kv_pages pool too small: request {req.uid} needs "
+                    f"{worst} page(s) worst-case (prompt "
+                    f"{len(req.prompt)} + max_new {req.max_new_tokens}) "
+                    f"but the pool holds {self.allocator.num_pages - 1} "
+                    "(raise kv_pages)")
+        req.status = RequestStatus.QUEUED
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Request cancellation of ``uid``. Applied at the next step
+        boundary: the request reaches terminal status CANCELLED, its slot
+        and pages are released, and any already-generated tokens are kept.
+        Returns False if ``uid`` is unknown or already terminal."""
+        resident = [r.uid for r in self.queue]
+        resident += [r.uid for r in self.active.values()]
+        resident += [st["req"].uid for st in self.prefilling.values()]
+        if uid not in resident:
+            return False
+        self._cancel_uids.add(uid)
+        return True
 
     def _splice(self, slots: List[int], cacheN, lens: np.ndarray):
         """Copy rows ``0..len(slots)-1`` of a prefill cache (batch B') into
@@ -538,12 +680,32 @@ class ServingEngine:
     def _worst_rows(self, req: Request) -> int:
         return len(req.prompt) + req.max_new_tokens
 
+    def _resume_prompt(self, req: Request) -> np.ndarray:
+        """The tokens to prefill at (re-)admission: the original prompt
+        plus every already-generated token, so a preempted request's KV is
+        recomputed exactly and its next sample (counter = len(generated))
+        continues the stream token-identically."""
+        if not req.generated:
+            return req.prompt
+        return np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.generated, np.int32)])
+
+    def _admission_rows(self, req: Request) -> int:
+        """Rows a request must be able to occupy to be admitted. The
+        optimistic policy budgets what admission actually writes (the
+        resume prompt) plus one decode row; "reserve" budgets the worst
+        case, so growth can never exhaust the pool (no preemption)."""
+        if self.admission == "reserve":
+            return self._worst_rows(req)
+        return len(req.prompt) + len(req.generated) + 1
+
     def _fits_pages(self, n_rows_list) -> bool:
         """Can the unreserved pool budget these admissions right now?
         Raises instead of deadlocking when nothing resident could ever
-        free a page. Admission always budgets WORST-CASE rows (prompt +
-        max_new), so an admitted request can never hit pool exhaustion
-        mid-decode or mid-chunk."""
+        free a page (the submit-time worst-case check already rejected
+        requests the EMPTY pool can't hold, so this only triggers on
+        fragmentation across policy edge cases)."""
         need = sum(self.allocator.pages_for(r) for r in n_rows_list)
         if need <= self.allocator.pages_available:
             return True
@@ -556,19 +718,94 @@ class ServingEngine:
         return False
 
     def _clamp_to_pool(self, reqs: List[Request], n: int) -> int:
-        """Largest FCFS prefix of ``reqs[:n]`` whose worst-case page
+        """Largest FCFS prefix of ``reqs[:n]`` whose admission page
         budgets the unreserved pool can hold."""
         budget = self.allocator.pages_available
         fit = 0
         for r in reqs[:n]:
-            need = self.allocator.pages_for(self._worst_rows(r))
+            need = self.allocator.pages_for(self._admission_rows(r))
             if need > budget:
                 break
             budget -= need
             fit += 1
         if fit == 0:
-            self._fits_pages([self._worst_rows(reqs[0])])  # may raise
+            self._fits_pages([self._admission_rows(reqs[0])])  # may raise
         return fit
+
+    # ---------------------------------------------------------- preemption
+    def _evict(self, slot: int):
+        """Remove whatever occupies ``slot`` (decode or prefill tenant)
+        and release its pages. Caller decides the request's fate."""
+        self.active.pop(slot, None)
+        self.prefilling.pop(slot, None)
+        self.slot_live[slot] = False
+        if self.paged:
+            self._release_pages(slot)
+
+    def _preempt_victim(self, exclude=()) -> Optional[int]:
+        """LIFO victim choice: the latest-admitted resident slot (decode
+        or prefilling), so the oldest work — closest to finishing, most
+        KV already paid for — is protected. vLLM's recompute policy."""
+        cands = [(req.admit_seq, s) for s, req in self.active.items()
+                 if s not in exclude]
+        cands += [(st["req"].admit_seq, s)
+                  for s, st in self.prefilling.items() if s not in exclude]
+        return max(cands)[1] if cands else None
+
+    def _preempt(self, slot: int):
+        """Evict ``slot`` and requeue its request at the FRONT of the
+        queue with generated tokens kept; re-admission recomputes the KV
+        via :meth:`_resume_prompt`. Token-identical under the sampling
+        determinism contract (token i <- fold_in(seed, i))."""
+        req = (self.prefilling[slot]["req"] if slot in self.prefilling
+               else self.active[slot])
+        self._evict(slot)
+        req.status = RequestStatus.QUEUED
+        req.preemptions += 1
+        req._t_preempt = time.perf_counter()
+        self.preemption_count += 1
+        # FRONT of the queue: preempted work outranks never-admitted work
+        # (FCFS by original arrival — victims are chosen newest-first, so
+        # multiple insertions in one step restore arrival order)
+        self.queue.insert(0, req)
+
+    def _ensure_resident(self, slot: int, n_rows: int):
+        """``_ensure_pages`` with overload handling: on pool exhaustion
+        (real or injected) preempt the latest-admitted OTHER resident and
+        retry. The submit-time worst-case check guarantees this loop
+        terminates with the growth satisfied once enough victims are
+        evicted — PageExhausted never escapes the engine."""
+        if not self.paged:
+            return
+        while True:
+            try:
+                if (self.faults is not None
+                        and self.allocator.pages_for(n_rows)
+                        > len(self.allocator.owned(slot))
+                        and self.faults.exhaust_now()):
+                    raise PageExhausted(
+                        f"injected pool exhaustion growing slot {slot}")
+                self._ensure_pages(slot, n_rows)
+                return
+            except PageExhausted:
+                victim = self._preempt_victim(exclude=(slot,))
+                if victim is None:
+                    raise
+                self._preempt(victim)
+
+    def _mark_admitted(self, req: Request, t: float):
+        """Admission bookkeeping shared by every admission site: first
+        admission fixes ``t_admit``; re-admissions account requeue
+        latency; ``admit_seq`` orders preemption victims."""
+        if req.t_admit == 0.0:
+            req.t_admit = t
+        if req._t_preempt:
+            wait = max(0.0, t - req._t_preempt)
+            req.requeue_wait_s += wait
+            self._requeue_waits.append(wait)
+            req._t_preempt = 0.0
+        req.admit_seq = self._admit_counter
+        self._admit_counter += 1
 
     def _splice_paged(self, slots: List[int], cacheN, lens: np.ndarray):
         """Scatter a CONTIGUOUS prefill cache (ring layout, batch B') into
@@ -642,6 +879,19 @@ class ServingEngine:
         self.prefill_calls += 1
         self.prefill_shapes.add(tuple(shape))
 
+    def _occupy(self, req: Request, slot: int, tok: int, now: float,
+                retired: List[Request]):
+        """A prefilled request joins the decode batch with its first newly
+        sampled token (or immediately retires on it)."""
+        req.status = RequestStatus.RUNNING
+        req.generated.append(tok)
+        if req.t_first_token == 0.0:
+            req.t_first_token = now
+        self.last_token[slot, 0] = tok
+        self.active[slot] = req
+        self.slot_live[slot] = True
+        self._maybe_retire(slot, tok, retired)
+
     def _assign(self, reqs: List[Request], slots: List[int],
                 first_tokens: np.ndarray, t_admit: float, prefill_dt: float,
                 retired: List[Request]):
@@ -649,18 +899,35 @@ class ServingEngine:
         store the first sampled token, occupy (or immediately retire)."""
         now = time.perf_counter()
         for req, slot, tok in zip(reqs, slots, first_tokens):
-            req.t_admit = t_admit
+            self._mark_admitted(req, t_admit)
             req.prefill_time += prefill_dt
-            req.generated.append(int(tok))
-            req.t_first_token = now
-            self.last_token[slot, 0] = int(tok)
-            self.active[slot] = req
-            self.slot_live[slot] = True
-            self._maybe_retire(slot, int(tok), retired)
+            self._occupy(req, slot, int(tok), now, retired)
+
+    def _splice_admitted(self, reqs: List[Request], slots: List[int],
+                         cacheN, lens, retired: List[Request]) -> bool:
+        """Run the layout splice for an admitted batch, absorbing an
+        injected splice failure: the whole batch reaches terminal FAILED
+        (pages released, slots still free) and serving continues. Real
+        splice exceptions still propagate — they are engine bugs, not a
+        condition to degrade around."""
+        if self.faults is not None:
+            bad = self.faults.splice_fail_now([r.uid for r in reqs])
+            if bad >= 0:
+                now = time.perf_counter()
+                for req, slot in zip(reqs, slots):
+                    if self.paged:
+                        self._release_pages(slot)
+                    req.error = (f"admission splice failed (injected at "
+                                 f"uid {bad})")
+                    self._terminate(req, None, RequestStatus.FAILED,
+                                    retired, now)
+                return False
+        self._splice_fn(slots, cacheN, lens)
+        return True
 
     def _is_chunked(self, req: Request) -> bool:
         return bool(self.prefill_chunk) and \
-            len(req.prompt) > self.prefill_chunk
+            len(self._resume_prompt(req)) > self.prefill_chunk
 
     def _admit(self, retired: List[Request]):
         while self.queue:
@@ -671,23 +938,28 @@ class ServingEngine:
             if self._is_chunked(self.queue[0]):
                 # long prompt: occupy a slot now, prefill it chunk-by-chunk
                 # interleaved with decode (see _advance_prefills) — no
-                # power-of-two mega-bucket is compiled for it. The full
-                # worst-case page budget is reserved up front so later
-                # chunks and decode growth can never exhaust the pool.
-                if not self._fits_pages([self._worst_rows(self.queue[0])]):
+                # power-of-two mega-bucket is compiled for it. Reserve mode
+                # budgets the full worst case up front; optimistic mode
+                # admits on the resume prompt and lets chunk growth preempt
+                # under pressure.
+                if not self._fits_pages(
+                        [self._admission_rows(self.queue[0])]):
                     return  # wait: retirements release budgeted pages
                 req = self.queue.pop(0)
-                self.allocator.reserve(free[0], self._worst_rows(req))
-                req.t_admit = time.perf_counter()
+                if self.admission == "reserve":
+                    self.allocator.reserve(free[0], self._worst_rows(req))
+                self._mark_admitted(req, time.perf_counter())
+                req.status = RequestStatus.PREFILLING
                 # a reused slot's cache pos is stale from its previous
                 # tenant; chunk writes derive their rows from it, so the
                 # slot must restart at 0 before the first chunk
                 self.cache["pos"] = self.cache["pos"].at[free[0]].set(0)
                 self._place_cache()
+                resume = self._resume_prompt(req)
                 self.prefilling[free[0]] = {
                     "req": req,
-                    "chunks": plan_chunks(len(req.prompt),
-                                          self.prefill_chunk),
+                    "tokens": resume,
+                    "chunks": plan_chunks(len(resume), self.prefill_chunk),
                     "next": 0,
                 }
                 continue
@@ -696,7 +968,7 @@ class ServingEngine:
                 for r in self.queue:
                     if self._is_chunked(r):
                         break  # FCFS: never reorder past a chunked prompt
-                    lens.append(len(r.prompt))
+                    lens.append(len(self._resume_prompt(r)))
                 n, L = plan_admission(lens, len(free),
                                       self.prefill_batch, self.min_bucket,
                                       self.max_len)
@@ -708,12 +980,12 @@ class ServingEngine:
                     L = bucket_length(max(lens[:n]), self.min_bucket,
                                       self.max_len)
                 take = [self.queue.pop(0) for _ in range(n)]
-                if self.paged:
+                if self.paged and self.admission == "reserve":
                     for req, slot in zip(take, free):
                         self.allocator.reserve(slot, self._worst_rows(req))
                 Bp = self.prefill_batch
-                tokens, last_pos = pad_prompts(
-                    [r.prompt for r in take], Bp, L)
+                prompts = [self._resume_prompt(r) for r in take]
+                tokens, last_pos = pad_prompts(prompts, Bp, L)
                 t0 = time.perf_counter()
                 logits, cacheN = self._call(
                     self._prefill, self.params, jnp.asarray(tokens),
@@ -721,11 +993,18 @@ class ServingEngine:
                 logits.block_until_ready()
                 dt = time.perf_counter() - t0
                 self._record_prefill((Bp, L))
-                lens = np.asarray([len(r.prompt) for r in take], np.int32)
+                lens = np.asarray([len(p) for p in prompts], np.int32)
                 slots = free[:n]
-                self._splice_fn(slots, cacheN, lens)
+                if not self._splice_admitted(take, slots, cacheN, lens,
+                                             retired):
+                    continue
                 sampling = [r.sampling for r in take] + [None] * (Bp - n)
-                counters = [0] * Bp
+                # a resumed request's next token is index len(generated),
+                # NOT 0 — the fold_in(seed, i) contract is what makes the
+                # post-preemption stream identical under stochastic
+                # sampling too (fresh requests: len(generated) == 0)
+                counters = ([len(r.generated) for r in take]
+                            + [0] * (Bp - n))
                 toks = np.asarray(sample_tokens(
                     logits[:, 0], *sampling_arrays(sampling, counters)))
                 self._assign(take, slots, toks[:n], t0 + dt, dt, retired)
@@ -733,23 +1012,28 @@ class ServingEngine:
                 # exact-length single-request prefill (recurrent mixers etc.)
                 if self.paged:
                     if not self._fits_pages(
-                            [self._worst_rows(self.queue[0])]):
+                            [self._admission_rows(self.queue[0])]):
                         return
-                    self.allocator.reserve(
-                        free[0], self._worst_rows(self.queue[0]))
+                    if self.admission == "reserve":
+                        self.allocator.reserve(
+                            free[0], self._worst_rows(self.queue[0]))
                 req = self.queue.pop(0)
+                resume = self._resume_prompt(req)
                 t0 = time.perf_counter()
                 logits, cache1 = self._call(
                     self._prefill, self.params,
-                    jnp.asarray(req.prompt[None]),
-                    jnp.asarray([len(req.prompt) - 1], jnp.int32))
+                    jnp.asarray(resume[None]),
+                    jnp.asarray([len(resume) - 1], jnp.int32))
                 logits.block_until_ready()
                 dt = time.perf_counter() - t0
-                self._record_prefill((1, len(req.prompt)))
-                lens1 = np.asarray([len(req.prompt)], np.int32)
-                self._splice_fn(free[:1], cache1, lens1)
+                self._record_prefill((1, len(resume)))
+                lens1 = np.asarray([len(resume)], np.int32)
+                if not self._splice_admitted([req], free[:1], cache1, lens1,
+                                             retired):
+                    continue
                 tok = np.asarray(sample_tokens(
-                    logits[:, 0], *sampling_arrays([req.sampling], [0])))
+                    logits[:, 0], *sampling_arrays(
+                        [req.sampling], [len(req.generated)])))
                 self._assign([req], free[:1], tok[:1], t0 + dt, dt, retired)
 
     def _advance_prefills(self, retired: List[Request]):
@@ -761,13 +1045,23 @@ class ServingEngine:
         if not self.prefilling:
             return
         C = self.prefill_chunk
+        # growth first, on a snapshot: ensuring pages for one slot may
+        # PREEMPT another prefilling slot under pressure, mutating
+        # self.prefilling mid-walk
+        for s in list(self.prefilling):
+            if s not in self.prefilling:
+                continue  # preempted by an earlier slot's growth
+            st = self.prefilling[s]
+            _, end = st["chunks"][st["next"]]
+            self._ensure_resident(s, end)
+        if not self.prefilling:
+            return
         tokens = np.zeros((self.slots, C), np.int32)
         valid = np.zeros((self.slots,), np.int32)
         for s, st in self.prefilling.items():
             start, end = st["chunks"][st["next"]]
-            tokens[s, :end - start] = st["req"].prompt[start:end]
+            tokens[s, :end - start] = st["tokens"][start:end]
             valid[s] = end - start
-            self._ensure_pages(s, end)
         self._sync_page_table()
         t0 = time.perf_counter()
         logits, self.cache = self._call(
@@ -789,43 +1083,92 @@ class ServingEngine:
         sampling = [None] * self.slots
         counters = [0] * self.slots
         for s in finishing:
-            sampling[s] = self.prefilling[s]["req"].sampling
+            req = self.prefilling[s]["req"]
+            sampling[s] = req.sampling
+            counters[s] = len(req.generated)  # != 0 for resumed requests
         toks = np.asarray(sample_tokens(
             logits[:, 0], *sampling_arrays(sampling, counters)))
         now = time.perf_counter()
         for s in finishing:
             req = self.prefilling.pop(s)["req"]
-            tok = int(toks[s])
-            req.generated.append(tok)
-            req.t_first_token = now
-            self.last_token[s, 0] = tok
-            self.active[s] = req
-            self.slot_live[s] = True
-            self._maybe_retire(s, tok, retired)
+            self._occupy(req, s, int(toks[s]), now, retired)
 
     # ------------------------------------------------------------ retirement
+    def _terminate(self, req: Request, slot: Optional[int],
+                   status: RequestStatus, retired: List[Request],
+                   now: Optional[float] = None):
+        """Move ``req`` to a terminal status, freeing its slot and pages
+        if resident. The single exit point for every lifecycle outcome."""
+        if slot is not None:
+            self._evict(slot)
+        req.status = status
+        req.done = True
+        req.t_done = now if now is not None else time.perf_counter()
+        self.finished.append(req)
+        retired.append(req)
+
     def _maybe_retire(self, slot: int, tok: int, retired: List[Request]):
         req = self.active[slot]
         hit_eos = self.eos_id is not None and tok == self.eos_id
         if len(req.generated) >= req.max_new_tokens or hit_eos:
-            req.done = True
-            req.t_done = time.perf_counter()
-            del self.active[slot]
-            self.slot_live[slot] = False
-            if self.paged:
-                self._release_pages(slot)
-            self.finished.append(req)
-            retired.append(req)
+            self._terminate(req, slot, RequestStatus.FINISHED, retired)
+
+    def _sweep_lifecycle(self, retired: List[Request]):
+        """Step-boundary enforcement of cancellation and deadlines, over
+        the queue and every resident slot. Deadlines are measured from
+        t_submit, so time spent queued (including requeued after
+        preemption) counts against the budget."""
+        if not self._cancel_uids and not any(
+                r.deadline_s is not None for r in self._all_requests()):
+            return
+        now = time.perf_counter()
+
+        def fate(req: Request) -> Optional[RequestStatus]:
+            if req.uid in self._cancel_uids:
+                self._cancel_uids.discard(req.uid)
+                return RequestStatus.CANCELLED
+            if (req.deadline_s is not None
+                    and now - req.t_submit > req.deadline_s):
+                return RequestStatus.EXPIRED
+            return None
+
+        keep = []
+        for req in self.queue:
+            status = fate(req)
+            if status is None:
+                keep.append(req)
+            else:
+                self._terminate(req, None, status, retired, now)
+        self.queue = keep
+        residents = [(s, req) for s, req in self.active.items()]
+        residents += [(s, st["req"]) for s, st in self.prefilling.items()]
+        for s, req in residents:
+            status = fate(req)
+            if status is not None:
+                self._terminate(req, s, status, retired, now)
+        self._cancel_uids.clear()  # unknown-by-now uids don't linger
+
+    def _all_requests(self):
+        for r in self.queue:
+            yield r
+        for r in self.active.values():
+            yield r
+        for st in self.prefilling.values():
+            yield st["req"]
 
     # --------------------------------------------------------------- decode
     def _grow_pages_for_decode(self):
         """Paged layouts only: grow any slot whose next decode write crosses
         into an unallocated page, then push the table to the device.
-        Contiguous layouts are a no-op — the ring is pre-provisioned."""
+        Growth under pressure preempts the latest-admitted other resident
+        (:meth:`_ensure_resident`) — iteration runs on a snapshot because a
+        preempted victim may be a slot later in the walk. Contiguous
+        layouts are a no-op — the ring is pre-provisioned."""
         if not self.paged:
             return
-        for s, req in self.active.items():
-            self._ensure_pages(s, len(req.prompt) + len(req.generated))
+        for s, req in list(self.active.items()):
+            if s in self.active:  # not preempted by an earlier growth
+                self._ensure_resident(s, len(req.prompt) + len(req.generated))
         self._sync_page_table()
 
     def _decode_dispatch(self):
@@ -855,9 +1198,28 @@ class ServingEngine:
         t0 = time.perf_counter()
         try:
             retired: List[Request] = []
+            fault_step = self.engine_steps  # monotone even on prefill-only
+            self.engine_steps += 1          # steps (decode_steps is not)
+            if self.faults is not None:
+                stall = self.faults.stall_now(fault_step)
+                if stall:
+                    time.sleep(stall)
+            self._sweep_lifecycle(retired)
             self._admit(retired)
             if self.paged:
                 self._advance_prefills(retired)
+            # Injected preemption needs >= 2 residents: LIFO victim choice
+            # then never touches the oldest-admitted request, which makes
+            # progress every step — the forward-progress guarantee that
+            # keeps chaos runs terminating. (Preempting a lone resident
+            # frees pages for nobody and can livelock a chunked prefill
+            # longer than the injection period.)
+            if (self.faults is not None
+                    and len(self.active) + len(self.prefilling) >= 2
+                    and self.faults.preempt_now(fault_step)):
+                victim = self._preempt_victim()
+                if victim is not None:
+                    self._preempt(victim)
             if not self.slot_live.any():
                 return retired
             self._grow_pages_for_decode()
@@ -865,14 +1227,31 @@ class ServingEngine:
             logits = self._decode_dispatch()
             logits.block_until_ready()
             self._decode_time += time.perf_counter() - t_dec
+            rows = logits[:, 0]
+            if self.faults is not None:
+                for s, req in self.active.items():
+                    if self.slot_live[s] and self.faults.poison_now(
+                            req.uid, len(req.generated)):
+                        rows = rows.at[s].set(jnp.nan)
             sampling = [self.active[s].sampling if self.slot_live[s] else None
                         for s in range(self.slots)]
             counters = [len(self.active[s].generated) if self.slot_live[s]
                         else 0 for s in range(self.slots)]
             next_tokens = np.asarray(sample_tokens(
-                logits[:, 0], *sampling_arrays(sampling, counters)))
+                rows, *sampling_arrays(sampling, counters)))
+            finite = (np.asarray(finite_rows(rows)) if self.logit_guard
+                      else None)
             self.decode_steps += 1
             for slot, req in list(self.active.items()):
+                if finite is not None and not finite[slot]:
+                    # quarantine, don't crash the batch: the slot frees,
+                    # the other requests keep decoding
+                    req.error = (f"non-finite logits at decode step "
+                                 f"{self.decode_steps} (token "
+                                 f"{len(req.generated)})")
+                    self._terminate(req, slot, RequestStatus.FAILED,
+                                    retired)
+                    continue
                 tok = int(next_tokens[slot])
                 req.generated.append(tok)
                 self.last_token[slot, 0] = tok
@@ -920,6 +1299,8 @@ class ServingEngine:
         self._kv_pages_peak = (self.allocator.pages_in_use if self.paged
                                else 0)
         self._prefill_cache_base = self._jit_prefill_cache_size() or 0
+        self.preemption_count = 0
+        self._requeue_waits = []
 
     def prefill_compilations(self) -> int:
         """Distinct prefill executables compiled since the last
@@ -976,7 +1357,11 @@ class ServingEngine:
         }
 
     def stats(self) -> ServingStats:
-        """Aggregate telemetry over every request retired so far."""
+        """Aggregate telemetry over every request retired so far. Means
+        skip NaN per-request values (never-admitted or zero-token
+        requests report NaN rather than a fake 0.0, see
+        :class:`Request`), so a cancelled-while-queued request doesn't
+        drag mean TTFT toward zero."""
         reqs = self.finished
         tokens = sum(len(r.generated) for r in reqs)
         pages_total = (self.allocator.num_pages - 1) if self.paged else 0
@@ -987,11 +1372,9 @@ class ServingEngine:
             total_new_tokens=tokens,
             wall_time_s=self._run_time,
             tokens_per_s=tokens / self._run_time if self._run_time else 0.0,
-            mean_ttft_s=float(np.mean([r.ttft for r in reqs])) if reqs else 0.0,
-            mean_queue_s=float(np.mean([r.queue_time for r in reqs]))
-            if reqs else 0.0,
-            mean_prefill_s=float(np.mean([r.prefill_time for r in reqs]))
-            if reqs else 0.0,
+            mean_ttft_s=_nanmean(r.ttft for r in reqs),
+            mean_queue_s=_nanmean(r.queue_time for r in reqs),
+            mean_prefill_s=_nanmean(r.prefill_time for r in reqs),
             prefill_calls=self.prefill_calls,
             prefill_compilations=self.prefill_compilations(),
             decode_steps=self.decode_steps,
@@ -1013,4 +1396,11 @@ class ServingEngine:
             kv_bytes_peak_per_device=(
                 self._kv_pages_peak * self._page_bytes_per_device()
                 if self.paged else 0),
+            preemptions=self.preemption_count,
+            mean_requeue_wait_s=(float(np.mean(self._requeue_waits))
+                                 if self._requeue_waits else 0.0),
+            cancelled=sum(r.status is RequestStatus.CANCELLED
+                          for r in reqs),
+            expired=sum(r.status is RequestStatus.EXPIRED for r in reqs),
+            failed=sum(r.status is RequestStatus.FAILED for r in reqs),
         )

@@ -1,0 +1,164 @@
+"""Deterministic fault injection for the serving engine.
+
+Chaos testing for the request lifecycle: every failure path the engine
+claims to survive (KV-pool exhaustion, forced preemption, poisoned
+logits, splice failures, stalled steps) can be driven on purpose from a
+seeded :class:`FaultConfig` armed via ``ServingConfig(faults=...)``.
+Injection is host-side only — no fault ever touches compiled code — so
+an injected run is reproducible given the same workload and seed, and
+under greedy sampling must stay token-identical to an undisturbed run
+(the correctness oracle used by the chaos tests and CI smoke).
+
+Injection points (all consulted by ``ServingEngine``):
+
+- ``preempt_now(step)``: force-preempt the latest-admitted resident
+  request at a step boundary (``preempt_every`` deterministic cadence
+  and/or ``preempt_prob`` seeded coin flip).
+- ``exhaust_now()``: make a page-growth ``ensure`` behave as if the
+  allocator were out of pages, exercising the preemption-on-exhaustion
+  path without actually shrinking the pool.
+- ``poison_now(uid, n_generated)``: overwrite one request's decode
+  logits with NaN once it has generated ``poison_after`` tokens,
+  exercising the logit guard's quarantine path.
+- ``splice_fail_now(uids)``: raise from the prefill→cache splice for a
+  chosen request, exercising admission failure handling.
+- ``stall_now(step)``: sleep inside chosen engine steps, exercising the
+  ``max_step_s`` telemetry and deadline enforcement.
+
+Every fired fault is appended to ``FaultInjector.events`` so tests can
+assert that the chaos they asked for actually happened.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Declarative description of the faults to inject.
+
+    All knobs default to "off"; a default-constructed config injects
+    nothing. ``seed`` drives the probabilistic knobs (``preempt_prob``,
+    ``exhaust_prob``) through a private ``RandomState`` so runs are
+    reproducible.
+    """
+
+    seed: int = 0
+    # Preempt the latest-admitted resident request every N engine steps
+    # (0 disables) and/or with probability p per step. The engine skips
+    # the injection unless >= 2 requests are resident: preempting a lone
+    # resident frees pages for nobody and could starve a chunked prefill
+    # forever (forward-progress guarantee).
+    preempt_every: int = 0
+    preempt_prob: float = 0.0
+    # Probability that a page-growth ``ensure`` is treated as exhausted.
+    exhaust_prob: float = 0.0
+    # Overwrite these uids' decode logits with NaN (once each) after
+    # they have generated >= ``poison_after`` tokens.
+    poison_uids: Tuple[int, ...] = ()
+    poison_after: int = 1
+    # Raise from the prefill->cache splice for these uids (once each).
+    splice_fail_uids: Tuple[int, ...] = ()
+    # Sleep ``stall_s`` seconds inside these engine step indices.
+    stall_steps: Tuple[int, ...] = ()
+    stall_s: float = 0.02
+
+    def validate(self) -> None:
+        if self.preempt_every < 0:
+            raise ValueError("preempt_every must be >= 0")
+        for name in ("preempt_prob", "exhaust_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if self.stall_s < 0.0:
+            raise ValueError("stall_s must be >= 0")
+
+
+@dataclass
+class FaultEvent:
+    """One fired fault: ``kind`` plus the site it hit."""
+
+    kind: str
+    step: int = -1
+    uid: int = -1
+
+
+class FaultInjector:
+    """Stateful, seeded driver for a :class:`FaultConfig`.
+
+    One injector lives per engine; its RNG stream advances only when a
+    probabilistic knob is consulted, so a run is deterministic given
+    the workload, the config, and the seed.
+    """
+
+    def __init__(self, config: FaultConfig):
+        config.validate()
+        self.config = config
+        self._rng = np.random.RandomState(config.seed)
+        self._poisoned: set = set()
+        self._splice_failed: set = set()
+        self.events: List[FaultEvent] = []
+
+    def _fire(self, kind: str, *, step: int = -1, uid: int = -1) -> bool:
+        self.events.append(FaultEvent(kind=kind, step=step, uid=uid))
+        return True
+
+    def count(self, kind: str) -> int:
+        return sum(1 for e in self.events if e.kind == kind)
+
+    # -- injection points ------------------------------------------------
+
+    def preempt_now(self, step: int) -> bool:
+        """Should the engine force-preempt at this step boundary?"""
+        cfg = self.config
+        every = cfg.preempt_every
+        if every and (step + 1) % every == 0:
+            return self._fire("preempt", step=step)
+        if cfg.preempt_prob and self._rng.rand() < cfg.preempt_prob:
+            return self._fire("preempt", step=step)
+        return False
+
+    def exhaust_now(self) -> bool:
+        """Should this page-growth ``ensure`` pretend the pool is dry?"""
+        cfg = self.config
+        if cfg.exhaust_prob and self._rng.rand() < cfg.exhaust_prob:
+            return self._fire("exhaust")
+        return False
+
+    def poison_now(self, uid: int, n_generated: int) -> bool:
+        """Should this request's decode logits be poisoned this step?"""
+        cfg = self.config
+        if (
+            uid in cfg.poison_uids
+            and uid not in self._poisoned
+            and n_generated >= cfg.poison_after
+        ):
+            self._poisoned.add(uid)
+            return self._fire("poison", uid=uid)
+        return False
+
+    def splice_fail_now(self, uids: Sequence[int]) -> int:
+        """Return a uid from ``uids`` whose splice should fail, or -1."""
+        for uid in uids:
+            if (
+                uid in self.config.splice_fail_uids
+                and uid not in self._splice_failed
+            ):
+                self._splice_failed.add(uid)
+                self._fire("splice_fail", uid=uid)
+                return uid
+        return -1
+
+    def stall_now(self, step: int) -> float:
+        """Seconds to sleep inside this engine step (0.0 = no stall)."""
+        if step in self.config.stall_steps:
+            self._fire("stall", step=step)
+            return self.config.stall_s
+        return 0.0
+
+
+class InjectedFault(RuntimeError):
+    """Raised at an injection point standing in for a real failure."""

@@ -57,6 +57,14 @@ def _sample_one(logits, temperature, top_p, seed, counter):
 
 
 @partial(jax.jit)
+def finite_rows(logits):
+    """Per-row health mask for the engine's logit guard: row b is True iff
+    every entry of ``logits[b]`` is finite (no NaN/Inf). Computed in
+    float32 so a bf16 overflow that round-trips to Inf is still caught."""
+    return jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+
+
+@partial(jax.jit)
 def sample_tokens(logits, temperature, top_p, seed, counter):
     """Batched per-row sampling.
 

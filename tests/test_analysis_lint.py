@@ -1,4 +1,4 @@
-"""Good/bad fixture pairs for every linter rule (RPR001..RPR007) plus the
+"""Good/bad fixture pairs for every linter rule (RPR001..RPR008) plus the
 noqa suppression contract. Stdlib-only module under test — no jax needed."""
 import textwrap
 
@@ -229,6 +229,82 @@ def test_logging_passes():
         log.info("hi")
     """
     assert not run(good, rule="RPR007")
+
+
+# --------------------------------------------------------------- RPR008
+def test_bare_except_flagged():
+    bad = """
+    def f():
+        try:
+            risky()
+        except:
+            handle()
+    """
+    assert run(bad, rule="RPR008")
+
+
+def test_broad_except_pass_flagged():
+    bad = """
+    def f():
+        try:
+            risky()
+        except Exception:
+            pass
+    """
+    assert run(bad, rule="RPR008")
+
+
+def test_broad_except_ellipsis_and_alias_flagged():
+    bad = """
+    def f():
+        try:
+            risky()
+        except BaseException as e:
+            ...
+    """
+    assert run(bad, rule="RPR008")
+
+
+def test_narrow_or_handled_except_passes():
+    good = """
+    import logging
+
+    log = logging.getLogger(__name__)
+
+    def f():
+        try:
+            risky()
+        except ValueError:
+            pass               # narrow: caller opted into this exact case
+        try:
+            risky()
+        except Exception:
+            log.warning("risky failed; using fallback")
+            return fallback()
+    """
+    assert not run(good, rule="RPR008")
+
+
+def test_swallow_in_launch_passes():
+    bad = """
+    def main():
+        try:
+            run()
+        except Exception:
+            pass
+    """
+    assert not run(bad, path="src/repro/launch/cli.py", rule="RPR008")
+
+
+def test_swallow_noqa_suppresses():
+    src = """
+    def f():
+        try:
+            risky()
+        except Exception:  # noqa: RPR008
+            pass
+    """
+    assert not run(src, rule="RPR008")
 
 
 # ----------------------------------------------------------------- noqa

@@ -169,6 +169,109 @@ class TestAllocatorProperties:
         assert (n - 1) * page_size < rows
 
 
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestExhaustionProperties:
+    """PageExhausted error paths: every refusal is atomic (nothing recorded,
+    nothing allocated) and reservations interact correctly with release —
+    the invariants the engine's preemption loop leans on."""
+
+    @prop_settings
+    @given(st.integers(min_value=2, max_value=24),
+           st.integers(min_value=1, max_value=8),
+           st.integers(min_value=0, max_value=2 ** 60))
+    def test_failed_reserve_is_atomic(self, num_pages, page_size, seed):
+        """An over-budget reserve raises and records NOTHING: the slot's
+        budget, every slot's pages, and pages_available are unchanged."""
+        rng = np.random.RandomState(seed % (2 ** 32))
+        a = PageAllocator(num_pages, page_size)
+        # random pre-state: some owned pages, some reservations
+        for s in range(3):
+            rows = int(rng.randint(0, (num_pages // 2) * page_size + 1))
+            try:
+                a.ensure(s, rows)
+                if rng.rand() < 0.5:
+                    a.reserve(s, rows + int(rng.randint(0, page_size + 1)))
+            except PageExhausted:
+                pass
+        snap = (a.pages_free, a.pages_available,
+                {s: a.owned(s) for s in range(4)},
+                {s: a.reserved(s) for s in range(4)})
+        over = (max(a.pages_available, 0) + 1
+                + int(rng.randint(0, 3))) * page_size
+        with pytest.raises(PageExhausted):
+            a.reserve(3, over)
+        assert (a.pages_free, a.pages_available,
+                {s: a.owned(s) for s in range(4)},
+                {s: a.reserved(s) for s in range(4)}) == snap
+
+    @prop_settings
+    @given(st.integers(min_value=2, max_value=24),
+           st.integers(min_value=1, max_value=8),
+           st.integers(min_value=0, max_value=2 ** 60))
+    def test_failed_ensure_on_drained_pool_is_atomic(self, num_pages,
+                                                     page_size, seed):
+        """ensure on an exhausted (or insufficient) pool raises with the
+        requesting slot untouched, and a release afterwards makes the
+        identical request succeed — the preempt-retry cycle."""
+        rng = np.random.RandomState(seed % (2 ** 32))
+        a = PageAllocator(num_pages, page_size)
+        a.ensure(0, (num_pages - 1) * page_size)     # drain the free list
+        assert a.pages_free == 0
+        # a demand the pool CAN satisfy once the victim is gone
+        rows = int(rng.randint(1, (num_pages - 1) * page_size + 1))
+        with pytest.raises(PageExhausted):
+            a.ensure(1, rows)
+        assert a.owned(1) == [] and a.reserved(1) == 0
+        a.release(0)                                 # "preempt the victim"
+        assert len(a.ensure(1, rows)) == a.pages_for(rows)
+
+    @prop_settings
+    @given(st.integers(min_value=3, max_value=24),
+           st.integers(min_value=1, max_value=8),
+           st.integers(min_value=0, max_value=2 ** 60))
+    def test_release_while_reserved_returns_full_budget(self, num_pages,
+                                                        page_size, seed):
+        """release on a slot holding BOTH pages and a reservation drops
+        both, so pages_available rebounds by the whole budget — never a
+        partial refund that would strand headroom forever."""
+        rng = np.random.RandomState(seed % (2 ** 32))
+        a = PageAllocator(num_pages, page_size)
+        budget_pages = int(rng.randint(1, num_pages))
+        a.reserve(0, budget_pages * page_size)
+        drawn = int(rng.randint(0, budget_pages + 1))
+        if drawn:
+            a.ensure(0, drawn * page_size)
+        assert a.pages_available == num_pages - 1 - budget_pages
+        a.release(0)
+        assert a.reserved(0) == 0 and a.owned(0) == []
+        assert a.pages_available == num_pages - 1
+        assert a.pages_free == num_pages - 1
+
+    @prop_settings
+    @given(st.integers(min_value=2, max_value=20),
+           st.integers(min_value=1, max_value=8),
+           st.integers(min_value=0, max_value=2 ** 60))
+    def test_reserved_growth_never_fails(self, num_pages, page_size, seed):
+        """The reserve-policy contract: once reserve(slot, n) succeeds,
+        any ensure(slot, m <= n) succeeds regardless of other slots'
+        reserve pressure on the remaining pool."""
+        rng = np.random.RandomState(seed % (2 ** 32))
+        a = PageAllocator(num_pages, page_size)
+        budget = int(rng.randint(1, num_pages)) * page_size
+        a.reserve(0, budget)
+        # competing slots soak up everything else (reserve may refuse)
+        for s in range(1, 4):
+            try:
+                a.reserve(s, int(rng.randint(1, num_pages)) * page_size)
+            except PageExhausted:
+                pass
+        rows = 0
+        while rows < budget:
+            rows = min(rows + int(rng.randint(1, page_size + 1)), budget)
+            a.ensure(0, rows)   # must never raise
+        assert len(a.owned(0)) == a.pages_for(budget)
+
+
 # ---------------------------------------------------------------------------
 # Paged flash-decode kernel vs oracle
 # ---------------------------------------------------------------------------

@@ -1,0 +1,373 @@
+"""Overload robustness: optimistic admission + preemption-with-recompute
+token parity, terminal lifecycle (cancel/deadline/quarantine), and the
+deterministic fault-injection harness (repro.serving.faults).
+
+The central oracle: under greedy sampling, a preempted-and-recomputed
+request must emit EXACTLY the tokens of an undisturbed run — preemption
+releases pages, not determinism (prompt+generated replayed through the
+prefill path, sampling counters resumed at len(generated))."""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    FaultConfig, Request, RequestStatus, SamplingParams, ServingEngine)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PROMPT_LENS = (3, 20, 7, 26, 11)
+MAX_NEW = 5
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens=PROMPT_LENS, seed=3):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab_size, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+def _serve(model, params, prompts, max_new=MAX_NEW, sampling=None, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 64)
+    eng = ServingEngine(model, params, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
+                    **({} if sampling is None else {"sampling": sampling[i]}))
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs, eng
+
+
+@pytest.fixture(scope="module")
+def baseline(served):
+    """Undisturbed paged-jnp greedy tokens: the parity oracle."""
+    cfg, model, params = served
+    reqs, _ = _serve(model, params, _prompts(cfg),
+                     kv_layout="paged", kv_page_size=8, kv_pages=32)
+    return {r.uid: list(r.generated) for r in reqs}
+
+
+def _tokens(reqs):
+    return {r.uid: list(r.generated) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle state machine (no model)
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycleStateMachine:
+    def test_terminal_statuses(self):
+        terminal = {RequestStatus.FINISHED, RequestStatus.CANCELLED,
+                    RequestStatus.EXPIRED, RequestStatus.FAILED}
+        for s in RequestStatus:
+            assert s.terminal == (s in terminal)
+
+    def test_fresh_request_telemetry_is_nan(self):
+        r = Request(uid=0, prompt=np.array([1, 2], np.int32),
+                    max_new_tokens=2)
+        assert r.status is RequestStatus.QUEUED
+        assert math.isnan(r.ttft) and math.isnan(r.queue_time)
+        assert math.isnan(r.tokens_per_s)
+
+    def test_fault_config_validates(self):
+        with pytest.raises(ValueError, match="preempt_every"):
+            FaultConfig(preempt_every=-1).validate()
+        with pytest.raises(ValueError, match="preempt_prob"):
+            FaultConfig(preempt_prob=1.5).validate()
+        with pytest.raises(ValueError, match="stall_s"):
+            FaultConfig(stall_s=-0.1).validate()
+
+    def test_engine_rejects_bad_admission(self, served):
+        cfg, model, params = served
+        with pytest.raises(ValueError, match="admission"):
+            ServingEngine(model, params, batch_slots=1, max_len=32,
+                          admission="pessimistic")
+
+
+# ---------------------------------------------------------------------------
+# Preemption token parity (the tentpole oracle)
+# ---------------------------------------------------------------------------
+
+
+class TestPreemptionParity:
+    def test_injected_preemption_paged_jnp(self, served, baseline):
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg),
+                           kv_layout="paged", kv_page_size=8, kv_pages=32,
+                           faults=FaultConfig(preempt_every=2))
+        assert _tokens(reqs) == baseline
+        assert all(r.status is RequestStatus.FINISHED for r in reqs)
+        st = eng.stats()
+        assert st.preemptions > 0
+        assert st.preemptions == eng.faults.count("preempt")
+        bounced = [r for r in reqs if r.preemptions]
+        assert bounced, "chaos run never actually preempted anything"
+        assert all(r.requeue_wait_s >= 0.0 for r in bounced)
+        assert st.mean_requeue_wait_s >= 0.0
+
+    def test_injected_preemption_paged_pallas(self, served, baseline):
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg),
+                           kv_layout="paged", kv_page_size=8, kv_pages=32,
+                           attn_impl="pallas",
+                           faults=FaultConfig(preempt_every=3))
+        assert _tokens(reqs) == baseline
+        assert all(r.status is RequestStatus.FINISHED for r in reqs)
+        assert eng.stats().preemptions > 0
+
+    def test_injected_exhaustion_paged(self, served, baseline):
+        """exhaust_prob makes random ensure() calls pretend the pool is
+        dry: the preempt-on-exhaustion path must keep token parity."""
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg),
+                           kv_layout="paged", kv_page_size=8, kv_pages=32,
+                           faults=FaultConfig(seed=1, exhaust_prob=0.25))
+        assert _tokens(reqs) == baseline
+        assert all(r.status is RequestStatus.FINISHED for r in reqs)
+
+    def test_stochastic_sampling_parity_under_preemption(self, served):
+        """Counter-resume correctness: non-greedy streams replay across
+        preemption because token i is always drawn with fold_in(seed, i),
+        with the counter resumed at len(generated) on re-admission."""
+        cfg, model, params = served
+        sampling = [SamplingParams(temperature=0.9, top_p=0.9, seed=17 + i)
+                    for i in range(len(PROMPT_LENS))]
+        quiet, _ = _serve(model, params, _prompts(cfg), sampling=sampling,
+                          kv_layout="paged", kv_page_size=8, kv_pages=32)
+        chaos, eng = _serve(model, params, _prompts(cfg), sampling=sampling,
+                            kv_layout="paged", kv_page_size=8, kv_pages=32,
+                            faults=FaultConfig(preempt_every=2))
+        assert eng.stats().preemptions > 0
+        assert _tokens(chaos) == _tokens(quiet)
+
+    def test_chunked_prefill_chaos(self, served):
+        """Preemption mid-chunked-prefill restarts the chunk walk from the
+        resume prompt; injection skips lone residents so a prefill longer
+        than the injection period still terminates (livelock guard)."""
+        cfg, model, params = served
+        prompts = _prompts(cfg, lens=(4, 40, 6, 33), seed=7)
+        kw = dict(kv_layout="paged", kv_page_size=8, kv_pages=8,
+                  prefill_chunk=8)
+        quiet, _ = _serve(model, params, prompts, **kw)
+        chaos, eng = _serve(model, params, prompts,
+                            faults=FaultConfig(seed=3, preempt_every=4),
+                            **kw)
+        assert all(r.status is RequestStatus.FINISHED for r in chaos)
+        assert _tokens(chaos) == _tokens(quiet)
+
+
+# ---------------------------------------------------------------------------
+# Natural overload: optimistic admission vs reserve baseline
+# ---------------------------------------------------------------------------
+
+
+class TestOverload:
+    def test_oversubscribed_pool_completes(self, served, baseline):
+        """Aggregate worst-case demand (13 pages) far exceeds the pool
+        (5): optimistic admission over-admits, preempts on exhaustion,
+        recomputes, and still matches the undisturbed token streams with
+        no PageExhausted escaping run()."""
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg),
+                           kv_layout="paged", kv_page_size=8, kv_pages=6)
+        assert _tokens(reqs) == baseline
+        assert all(r.status is RequestStatus.FINISHED for r in reqs)
+        st = eng.stats()
+        assert st.kv_pages_in_use == 0          # pool fully drained
+        assert st.kv_pages_peak <= 5
+
+    def test_reserve_policy_never_preempts(self, served, baseline):
+        """The worst-case-reservation baseline on the same oversubscribed
+        workload: admission throttles instead, so zero preemptions."""
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg),
+                           kv_layout="paged", kv_page_size=8, kv_pages=6,
+                           admission="reserve")
+        assert _tokens(reqs) == baseline
+        assert eng.stats().preemptions == 0
+
+    def test_submit_fails_fast_on_unservable_request(self, served):
+        """A request whose WORST-CASE footprint exceeds the whole pool can
+        never complete under any policy: reject at submit, not after
+        burning pool time."""
+        cfg, model, params = served
+        eng = ServingEngine(model, params, batch_slots=2, max_len=64,
+                            kv_layout="paged", kv_page_size=8, kv_pages=3)
+        with pytest.raises(RuntimeError, match="kv_pages"):
+            eng.submit(Request(uid=0,
+                               prompt=np.arange(1, 30, dtype=np.int32),
+                               max_new_tokens=20))
+
+
+# ---------------------------------------------------------------------------
+# Cancellation, deadlines, quarantine
+# ---------------------------------------------------------------------------
+
+
+class TestTerminalPaths:
+    def test_cancel_running_and_queued(self, served):
+        cfg, model, params = served
+        prompts = _prompts(cfg, lens=(6, 9, 12))
+        eng = ServingEngine(model, params, batch_slots=1, max_len=64,
+                            kv_layout="paged", kv_page_size=8, kv_pages=16)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=30)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.step()
+        eng.step()
+        assert eng.cancel(0)          # resident by now (batch_slots=1)
+        assert eng.cancel(2)          # still queued
+        assert not eng.cancel(99)     # unknown uid
+        eng.run()
+        assert reqs[0].status is RequestStatus.CANCELLED
+        assert reqs[2].status is RequestStatus.CANCELLED
+        assert reqs[1].status is RequestStatus.FINISHED
+        assert len(reqs[2].generated) == 0
+        st = eng.stats()
+        assert st.cancelled == 2
+        assert st.kv_pages_in_use == 0
+
+    def test_deadline_expires_queued_request(self, served):
+        cfg, model, params = served
+        prompts = _prompts(cfg, lens=(6, 9))
+        eng = ServingEngine(model, params, batch_slots=1, max_len=64)
+        keep = Request(uid=0, prompt=prompts[0], max_new_tokens=4,
+                       deadline_s=120.0)
+        drop = Request(uid=1, prompt=prompts[1], max_new_tokens=4,
+                       deadline_s=0.0)
+        eng.submit(keep)
+        eng.submit(drop)
+        eng.run()
+        assert keep.status is RequestStatus.FINISHED
+        assert drop.status is RequestStatus.EXPIRED
+        assert len(drop.generated) == 0
+        assert math.isnan(drop.ttft) and math.isnan(drop.queue_time)
+        st = eng.stats()
+        assert st.expired == 1
+        # NaN telemetry of the expired request must not pollute the means
+        assert st.mean_ttft_s > 0.0 and not math.isnan(st.mean_ttft_s)
+
+    def test_poisoned_logits_quarantined(self, served, baseline):
+        """A NaN logit row fails ONE request; co-batched requests keep
+        their exact token streams (guard masks, engine never crashes)."""
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg),
+                           kv_layout="paged", kv_page_size=8, kv_pages=32,
+                           faults=FaultConfig(poison_uids=(1,),
+                                              poison_after=2))
+        bad = next(r for r in reqs if r.uid == 1)
+        assert bad.status is RequestStatus.FAILED
+        assert "non-finite" in bad.error
+        assert len(bad.generated) == 2      # poisoned after 2 tokens
+        for r in reqs:
+            if r.uid != 1:
+                assert r.status is RequestStatus.FINISHED
+                assert list(r.generated) == baseline[r.uid]
+        st = eng.stats()
+        assert st.failed == 1
+        assert st.kv_pages_in_use == 0
+
+    def test_splice_failure_fails_batch_not_engine(self, served):
+        cfg, model, params = served
+        prompts = _prompts(cfg, lens=(6, 9, 12, 15))
+        reqs, eng = _serve(model, params, prompts,
+                           kv_layout="paged", kv_page_size=8, kv_pages=32,
+                           faults=FaultConfig(splice_fail_uids=(0,)))
+        failed = [r for r in reqs if r.status is RequestStatus.FAILED]
+        assert failed and any(r.uid == 0 for r in failed)
+        assert all("splice" in r.error for r in failed)
+        finished = [r for r in reqs if r.status is RequestStatus.FINISHED]
+        assert finished, "engine stopped serving after a splice failure"
+        st = eng.stats()
+        assert st.kv_pages_in_use == 0
+        assert st.failed == len(failed)
+
+    def test_stall_injection_shows_in_telemetry(self, served):
+        cfg, model, params = served
+        reqs, eng = _serve(model, params, _prompts(cfg, lens=(6, 9)),
+                           faults=FaultConfig(stall_steps=(0,),
+                                              stall_s=0.05))
+        assert all(r.status is RequestStatus.FINISHED for r in reqs)
+        assert eng.faults.count("stall") == 1
+        assert eng.stats().max_step_s >= 0.05
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel chaos (subprocess: 8 host devices)
+# ---------------------------------------------------------------------------
+
+
+def test_ep_preemption_token_parity():
+    """Acceptance matrix: injected preemption keeps greedy token parity on
+    paged x {jnp, pallas} x EP-sharded engines (single-device covered
+    above). Runs in a subprocess so the main process keeps one device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    code = textwrap.dedent("""
+        import json
+        import jax
+        import numpy as np
+        assert len(jax.devices()) == 8
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.parallel import ParallelConfig
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving import FaultConfig, Request, ServingEngine
+
+        cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(3)
+        prompts = [rng.randint(1, cfg.vocab_size, size=(n,)).astype(np.int32)
+                   for n in (3, 20, 7, 26, 11)]
+
+        def serve(**kw):
+            eng = ServingEngine(model, params, batch_slots=2, max_len=64,
+                                kv_layout="paged", kv_page_size=8,
+                                kv_pages=32, **kw)
+            reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            return {r.uid: list(map(int, r.generated)) for r in reqs}, eng
+
+        ref, _ = serve()
+        pc = ParallelConfig(fsdp_axis=None, weight_gather=False, ep=True)
+        out = {}
+        for impl in ("jnp", "pallas"):
+            got, eng = serve(attn_impl=impl, parallel=pc,
+                             mesh=make_serving_mesh(8),
+                             faults=FaultConfig(preempt_every=3))
+            out[impl] = {"match": got == ref,
+                         "preemptions": eng.stats().preemptions}
+        print(json.dumps(out))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    import json
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for impl in ("jnp", "pallas"):
+        assert res[impl]["match"], f"EP {impl} diverged under preemption"
+        assert res[impl]["preemptions"] > 0
