@@ -11,7 +11,7 @@ from repro.configs import get_config
 from repro.core import HCSMoEConfig, run_hcsmoe
 from repro.data import calibration_batches
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingConfig, ServingEngine
 
 
 def param_bytes(params):
@@ -36,8 +36,8 @@ def main():
 
     rng = np.random.RandomState(0)
     for name, p in [("original", params), ("HC-SMoE merged", merged)]:
-        engine = ServingEngine(model, p, batch_slots=4, max_len=64,
-                               moe_mode="ragged")
+        engine = ServingEngine(model, p, config=ServingConfig(
+            batch_slots=4, max_len=64, moe_mode="ragged"))
         # mixed prompt lengths: bucketing keeps this to ~2 compiled prefills
         reqs = [Request(uid=i,
                         prompt=rng.randint(0, cfg.vocab_size,

@@ -475,18 +475,28 @@ def _flash_decode_case(name, *, w, pos, window=0, k_heads=2, g=2, hd=8,
     )
 
 
-def _paged_pools(pos, page, table_len, k_heads, hd):
+def _paged_pools(pos, page, table_len, k_heads, hd, shared=0):
     """Toy allocator state mirroring PageAllocator: slot b owns consecutive
     physical pages covering logical rows [0, pos[b]]; page 0 is the null
-    page (kv_pos all -1)."""
-    n = 1 + sum(-(-(p + 1) // page) for p in pos if p >= 0) + 1  # +1 spare
+    page (kv_pos all -1). With ``shared`` > 0, every live slot ALIASES the
+    same ``shared`` leading physical pages — the prefix-cache splice state
+    (PageAllocator.splice_prefix), where one refcounted set of pages backs
+    logical rows [0, shared*page) of several page tables at once. Live
+    slots must then satisfy ``pos >= shared*page``."""
+    own = [max(0, -(-(p + 1) // page) - shared) for p in pos if p >= 0]
+    n = 1 + shared + sum(own) + 1  # null + shared prefix + owned + spare
     kv_pos = np.full((n, page), -1, np.int32)
     table = np.zeros((len(pos), table_len), np.int32)
-    nxt = 1
+    for j in range(shared):
+        kv_pos[1 + j] = np.arange(j * page, (j + 1) * page)
+    nxt = 1 + shared
     for b, p in enumerate(pos):
         if p < 0:
             continue
-        for j in range(-(-(p + 1) // page)):
+        assert p >= shared * page, (
+            f"slot {b}: pos {p} does not cover the {shared} shared page(s)")
+        table[b, :shared] = 1 + np.arange(shared)
+        for j in range(shared, -(-(p + 1) // page)):
             table[b, j] = nxt
             rows = np.arange(j * page, min((j + 1) * page, p + 1))
             kv_pos[nxt, : len(rows)] = rows
@@ -495,7 +505,7 @@ def _paged_pools(pos, page, table_len, k_heads, hd):
 
 
 def _flash_decode_paged_case(name, *, page, table_len, pos, window=0,
-                             k_heads=2, g=2, hd=8):
+                             k_heads=2, g=2, hd=8, shared=0):
     import functools
 
     import jax.numpy as jnp
@@ -504,7 +514,8 @@ def _flash_decode_paged_case(name, *, page, table_len, pos, window=0,
 
     b_n = len(pos)
     h = k_heads * g
-    n, kv_pos, table = _paged_pools(pos, page, table_len, k_heads, hd)
+    n, kv_pos, table = _paged_pools(pos, page, table_len, k_heads, hd,
+                                    shared=shared)
     rng = np.random.RandomState(0)
 
     def run():
@@ -640,6 +651,20 @@ def build_cases() -> List[KernelCase]:
         # window smaller than a page / window spanning all pages
         _flash_decode_paged_case("flash_decode_paged/p16_win5", page=16,
                                  table_len=2, pos=[3, 18, 31], window=5),
+        # SHARED page table (prefix-cache splice): three decode slots alias
+        # the same two physical prefix pages at different total lengths,
+        # plus a dead slot — the page-table indirection must read aliased
+        # rows identically for every consumer (the reason the kernel needs
+        # NO change for cross-request prefix caching)
+        _flash_decode_paged_case("flash_decode_paged/p8_shared2", page=8,
+                                 table_len=4, pos=[19, 23, 31, -1],
+                                 shared=2),
+        # aliased prefix under a sliding window that ends INSIDE the
+        # shared pages for the shortest consumer (pos=17, window=12 ->
+        # first live row 6 lands in shared page 0)
+        _flash_decode_paged_case("flash_decode_paged/p8_shared2_win12",
+                                 page=8, table_len=4, pos=[17, 24, 31],
+                                 window=12, shared=2),
         # flash_attention: 128-tiles and odd gcd tiles, causal + full
         _flash_attention_case("flash_attention/s256_causal", s=256,
                               causal=True),

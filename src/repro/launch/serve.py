@@ -17,6 +17,15 @@ axis; on a CPU dev box force a multi-device view first):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --reduced --ep --merge-to 4
+
+Cross-request prefix caching (shared system prompt, paged layout only):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --kv-layout paged \
+      --prefix-cache --shared-prefix 24
+
+Every engine flag is registered by ``ServingConfig.add_cli_args`` and
+consumed by ``ServingConfig.from_args`` — this launcher only owns the
+WORKLOAD flags (model choice, request count, prompt shape, sampling).
 """
 from __future__ import annotations
 
@@ -43,62 +52,20 @@ def main():
                          "applied to the params at engine load time")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="first N prompt tokens identical across requests "
+                         "(a shared system prompt); pair with "
+                         "--prefix-cache to exercise cross-request reuse")
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--moe-mode", default="ragged")
-    ap.add_argument("--attn-impl", default="jnp", choices=("jnp", "pallas"),
-                    help="decode/prefill attention backend: 'pallas' runs "
-                         "the flash-decode + flash-attention kernels "
-                         "(interpret mode on CPU)")
-    ap.add_argument("--kv-layout", default="contiguous",
-                    choices=("contiguous", "paged"),
-                    help="'paged' serves from a shared page pool (block-"
-                         "table allocator, on-demand growth, release on "
-                         "retirement) instead of per-slot max_len rings")
-    ap.add_argument("--kv-page-size", type=int, default=0,
-                    help="rows per KV page (default: cfg.kv_page_size)")
-    ap.add_argument("--kv-pages", type=int, default=0,
-                    help="physical pages in the pool (default: worst case "
-                         "slots * max_len / page + null page)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill: prompts longer than this many "
-                         "tokens prefill chunk-by-chunk interleaved with "
-                         "decode (paged layout only; 0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with per-request seeds")
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-bucketing", action="store_true",
-                    help="exact-length per-request prefill (recompiles per "
-                         "distinct prompt length)")
-    ap.add_argument("--ep", action="store_true",
-                    help="expert-parallel serving: shard MoE expert stacks "
-                         "over the 'model' mesh axis")
-    ap.add_argument("--ep-degree", type=int, default=0,
-                    help="EP mesh size (default: all visible devices)")
-    ap.add_argument("--admission", default="optimistic",
-                    choices=("optimistic", "reserve"),
-                    help="paged admission policy: 'optimistic' admits "
-                         "against expected occupancy and preempts on pool "
-                         "exhaustion (recompute on re-admission); 'reserve' "
-                         "budgets worst-case pages up front and never "
-                         "preempts (see docs/serving_lifecycle.md)")
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request deadline in seconds from submission; "
                          "overdue requests are EXPIRED at the next step "
                          "boundary (0 = no deadline)")
-    ap.add_argument("--chaos", action="store_true",
-                    help="arm the deterministic fault injector "
-                         "(repro.serving.faults): forced preemptions + "
-                         "simulated pool exhaustion; greedy output must "
-                         "stay token-identical to an undisturbed run")
-    ap.add_argument("--chaos-seed", type=int, default=0)
-    ap.add_argument("--chaos-preempt-every", type=int, default=4,
-                    help="force-preempt the newest resident every N engine "
-                         "steps under --chaos (0 = off)")
-    ap.add_argument("--chaos-exhaust-prob", type=float, default=0.1,
-                    help="per-ensure probability that page growth pretends "
-                         "the pool is dry under --chaos")
+    ServingConfig.add_cli_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -129,53 +96,36 @@ def main():
         print(f"HC-SMoE merged {cfg.moe.num_experts} -> {args.merge_to} "
               f"experts/layer in {time.time() - t0:.1f}s")
 
-    parallel = mesh = None
-    if args.ep:
-        from repro.launch.mesh import make_serving_mesh
-        from repro.parallel import ParallelConfig
-
-        mesh = make_serving_mesh(args.ep_degree or None)
-        parallel = ParallelConfig(fsdp_axis=None, weight_gather=False,
-                                  ep=True, moe_mode=args.moe_mode)
-        print(f"expert-parallel serving on {mesh}")
-
-    faults = None
-    if args.chaos:
-        from repro.serving import FaultConfig
-
-        faults = FaultConfig(seed=args.chaos_seed,
-                             preempt_every=args.chaos_preempt_every,
-                             exhaust_prob=args.chaos_exhaust_prob)
+    config = ServingConfig.from_args(
+        args, max_len=args.max_len or args.prompt_len + args.max_new + 8,
+        merge_plan=merge_plan)
+    if config.mesh is not None:
+        print(f"expert-parallel serving on {config.mesh}")
+    if config.faults is not None:
         print(f"chaos armed: seed={args.chaos_seed} "
               f"preempt_every={args.chaos_preempt_every} "
               f"exhaust_prob={args.chaos_exhaust_prob}")
-    engine = ServingEngine(model, params, config=ServingConfig(
-        batch_slots=args.slots,
-        max_len=args.prompt_len + args.max_new + 8,
-        moe_mode=args.moe_mode, attn_impl=args.attn_impl,
-        bucket_prompts=False if args.no_bucketing else None,
-        kv_layout=args.kv_layout,
-        kv_page_size=args.kv_page_size or None,
-        kv_pages=args.kv_pages or None,
-        prefill_chunk=args.prefill_chunk or None,
-        admission=args.admission, faults=faults,
-        parallel=parallel, mesh=mesh, merge_plan=merge_plan))
-    if args.ep:
+    engine = ServingEngine(model, params, config=config)
+    if config.mesh is not None:
         eb = engine.expert_bytes_per_device()
         print(f"expert params: {eb['total'] / 1e6:.2f} MB total, "
               f"{eb['max_per_device'] / 1e6:.2f} MB max/device "
-              f"({mesh.shape['model']}-way EP)")
+              f"({config.mesh.shape['model']}-way EP)")
     rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size,
+                         min(args.shared_prefix, args.prompt_len)
+                         ).astype(np.int32)
     reqs = []
     for i in range(args.requests):
-        r = Request(uid=i,
-                    prompt=rng.randint(0, cfg.vocab_size,
-                                       args.prompt_len).astype(np.int32),
+        tail = rng.randint(0, cfg.vocab_size,
+                           args.prompt_len - len(shared)).astype(np.int32)
+        r = Request(uid=i, prompt=np.concatenate([shared, tail]),
                     max_new_tokens=args.max_new,
-                    deadline_s=args.deadline_s or None,
                     sampling=SamplingParams(temperature=args.temperature,
                                             top_p=args.top_p,
-                                            seed=args.seed + i))
+                                            seed=args.seed + i,
+                                            deadline_s=args.deadline_s
+                                            or None))
         reqs.append(r)
         engine.submit(r)
     finished = engine.run()
@@ -191,7 +141,7 @@ def main():
               f"(mean requeue wait {st.mean_requeue_wait_s * 1e3:.0f} ms), "
               f"{st.cancelled} cancelled, {st.expired} expired, "
               f"{st.failed} failed")
-    if args.kv_layout == "paged":
+    if engine.paged:
         mem = engine.kv_memory()
         per_dev = (f" ({mem['kv_bytes_peak_per_device']} B/device, "
                    f"{mem['kv_shard_degree']}-way K/V shard)"
@@ -201,6 +151,14 @@ def main():
               f"prefill chunks), {mem['kv_bytes_peak']} B resident peak vs "
               f"{mem['kv_bytes_contiguous']} B contiguous provisioning"
               + per_dev)
+    if config.prefix_cache:
+        print(f"prefix cache: {st.prefix_hits} hit(s) / "
+              f"{st.prefix_misses} miss(es) ({st.prefix_hit_rate:.0%}), "
+              f"{st.prefix_rows_reused} rows reused, "
+              f"{st.kv_bytes_saved} B prefill KV skipped, "
+              f"{st.kv_pages_cached} page(s) retained; "
+              f"TTFT warm {st.mean_ttft_warm_s * 1e3:.0f} ms vs "
+              f"cold {st.mean_ttft_cold_s * 1e3:.0f} ms")
     for r in finished[:3]:
         print(f"  req {r.uid}: ttft={r.ttft * 1e3:.0f}ms "
               f"{r.tokens_per_s:.1f} tok/s  {r.generated[:10]}...")

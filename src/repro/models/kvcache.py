@@ -34,11 +34,15 @@ Paging supports attention-family mixers only (:func:`supports_paging`).
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
 from functools import partial
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.contracts import contracts_enabled
 from repro.models.attention import cache_window
@@ -147,6 +151,51 @@ class PageExhausted(RuntimeError):
     """The page pool has no free page for a required allocation."""
 
 
+def prefix_keys(tokens, page_size: int) -> List[Tuple[int, bytes]]:
+    """Chain-hash candidates for cross-request prefix caching.
+
+    Returns ``[(n_rows, key), ...]`` shortest-first: one candidate per full
+    page boundary ``k * page_size <= len(tokens) - 1`` plus the maximal
+    prefix ``len(tokens) - 1`` when it ends mid-page. The cap at ``len - 1``
+    guarantees every request keeps at least one suffix token to run through
+    ``extend`` — the forward pass that produces its first-token logits.
+
+    Each key hashes (previous key, this span's tokens), so a key commits to
+    the ENTIRE token prefix, not just its last span; the page size is folded
+    into the chain root so pools with different page geometry never share
+    keys. Registration and lookup both derive candidates from this one
+    function — the sets match by construction.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    n = len(toks)
+    out: List[Tuple[int, bytes]] = []
+    digest = b"kvpage:%d" % page_size
+    done = 0
+    for b in range(page_size, n, page_size):   # b <= n - 1 by construction
+        digest = hashlib.sha256(digest + toks[done:b].tobytes()).digest()
+        out.append((b, digest))
+        done = b
+    if done < n - 1:
+        tail = hashlib.sha256(digest + toks[done:n - 1].tobytes()).digest()
+        out.append((n - 1, tail))
+    return out
+
+
+@dataclass(frozen=True)
+class PrefixEntry:
+    """One published prefix: ``pages`` hold rows ``[0, n_rows)`` of every
+    request whose prompt starts with the hashed token prefix. A
+    maximal (mid-page) entry's last page also holds ONE stale row beyond
+    the claim — row ``n_rows``, the publisher's final prompt token. That
+    is exactly where a consumer's first suffix write lands, and every
+    layer writes its page rows before attending (model.extend), so the
+    stale row is overwritten before any read can see it."""
+
+    key: bytes
+    n_rows: int
+    pages: Tuple[int, ...]
+
+
 class PageAllocator:
     """Host-side free-list allocator for the paged KV pool.
 
@@ -168,38 +217,93 @@ class PageAllocator:
     (:meth:`release` both frees the pages and drops any reservation, so
     preemption and retirement share one exit path).
 
-    Invariants (property-tested): a physical page is owned by at most one
-    slot, ``free + owned == num_pages - 1`` at all times, and
-    ``pages_available >= 0``.
+    **Cross-request prefix caching** (``prefix_cache=True``): pages become
+    refcounted. :meth:`register_prefix` publishes a slot's freshly written
+    prompt pages under chain-hash keys (:func:`prefix_keys`);
+    :meth:`match_prefix` finds the longest cached prefix of a new prompt
+    and :meth:`splice_prefix` maps its pages into the new slot (incref —
+    the pages now back several page tables at once). :meth:`release` then
+    decrefs instead of freeing; a page whose refcount reaches zero stays
+    RESIDENT while the prefix index still references it, forming an LRU
+    cache of warm prefixes that is reclaimed on demand (allocation
+    pressure evicts least-recently-matched entries first;
+    ``prefix_cache_pages`` caps the resident unreferenced footprint).
+    :meth:`cow` re-maps one logical page of a slot to a private copy
+    target so a writer never mutates a page another slot or the index
+    maps — the engine copies the page payload device-side and then writes
+    into the copy. Pages freed by cache eviction are queued on
+    :meth:`drain_evicted` so the engine can neutralise their stale
+    ``kv_pos`` rows before reuse.
+
+    Invariants (property-tested): refcounts equal the number of slot page
+    tables mapping each page; no page is simultaneously free and mapped
+    (or free and cached); ``free + mapped + cached-unreferenced ==
+    num_pages - 1`` at all times; ``pages_available >= 0``. Without
+    prefix caching every refcount is 1 and the original exclusive-
+    ownership invariants fall out as the special case.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         if num_pages < 2:
             raise ValueError(f"num_pages ({num_pages}) must be >= 2 "
                              "(page 0 is the reserved null page)")
         if page_size < 1:
             raise ValueError(f"page_size ({page_size}) must be >= 1")
+        if prefix_cache_pages is not None and prefix_cache_pages < 0:
+            raise ValueError(
+                f"prefix_cache_pages ({prefix_cache_pages}) must be >= 0")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_cache_pages = prefix_cache_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._owned: Dict[int, List[int]] = {}
         self._reserved: Dict[int, int] = {}   # slot -> budgeted page count
+        self._refs: Dict[int, int] = {}       # page -> # slot tables mapping it
+        # prefix index: key -> entry, insertion/touch order == LRU order
+        self._prefix: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
+        self._cached: Dict[int, int] = {}     # page -> # index entries using it
+        self._evicted: List[int] = []         # freed-by-eviction, undrained
 
     # ------------------------------------------------------------ queries
     @property
     def pages_in_use(self) -> int:
-        return sum(len(v) for v in self._owned.values())
+        """UNIQUE pages mapped by at least one resident slot — a page
+        shared across page tables counts once (refcount-aware)."""
+        return len(self._refs)
 
     @property
     def pages_free(self) -> int:
         return len(self._free)
 
     @property
+    def pages_cached(self) -> int:
+        """Resident prefix-cache pages mapped by NO slot: warm KV kept
+        around for future hits, reclaimable on demand."""
+        return sum(1 for p in self._cached if p not in self._refs)
+
+    @property
     def pages_available(self) -> int:
-        """Free pages not spoken for by an outstanding reservation."""
-        unbacked = sum(max(r - len(self._owned.get(s, ())), 0)
+        """Pages an admission can claim right now: the free list plus
+        evictable cached pages, minus outstanding reservation debt. A
+        reservation is backed only by pages its slot can write WITHOUT a
+        copy (exclusively mapped, not in the prefix index), so the budget
+        always covers the copy-on-write a shared page may later cost."""
+        unbacked = sum(max(r - self._exclusive(s), 0)
                        for s, r in self._reserved.items())
-        return len(self._free) - unbacked
+        return len(self._free) + self.pages_cached - unbacked
+
+    def _exclusive(self, slot: int) -> int:
+        # A refs-1 page backs its owner's reservation even while the
+        # prefix index caches it: if a write ever needs the page back
+        # exclusively under exhaustion, evicting the cache entry restores
+        # exclusivity without consuming a page (the engine falls back to
+        # an in-place write). Only a second MAPPING (refs > 1, i.e. a
+        # warm splice) truly un-backs it — and splice budgets for that.
+        return sum(1 for p in self._owned.get(slot, ())
+                   if self._refs.get(p, 0) == 1)
 
     def pages_for(self, n_rows: int) -> int:
         """Pages needed to hold ``n_rows`` logical rows."""
@@ -212,14 +316,28 @@ class PageAllocator:
         """The slot's budgeted page count (0 if nothing reserved)."""
         return self._reserved.get(slot, 0)
 
+    def refs(self, page: int) -> int:
+        """How many slot page tables map ``page`` right now."""
+        return self._refs.get(page, 0)
+
+    def page_shared(self, page: int) -> bool:
+        """True when writing ``page`` in place would corrupt state some
+        other reader depends on: another slot maps it, or the prefix
+        index holds it for future requests. Writers must :meth:`cow`."""
+        return self._refs.get(page, 0) > 1 or page in self._cached
+
+    @property
+    def prefix_entries(self) -> int:
+        return len(self._prefix)
+
     # ---------------------------------------------------------- mutation
     def reserve(self, slot: int, n_rows: int):
         """Budget pages so ``slot`` can grow to ``n_rows`` rows without
-        ever failing an :meth:`ensure`. Raises :class:`PageExhausted` —
-        with nothing recorded — if the unreserved pool cannot cover it."""
+        ever failing an :meth:`ensure` (or a COW). Raises
+        :class:`PageExhausted` — with nothing recorded — if the
+        unreserved pool cannot cover it."""
         need = self.pages_for(n_rows)
-        backed = max(self._reserved.get(slot, 0),
-                     len(self._owned.get(slot, ())))
+        backed = max(self._reserved.get(slot, 0), self._exclusive(slot))
         grow = need - backed
         if grow <= 0:
             return
@@ -231,53 +349,214 @@ class PageAllocator:
                 "admit fewer requests)")
         self._reserved[slot] = need
 
+    def _evict_lru(self) -> None:
+        """Drop the least-recently-matched prefix entry; its pages return
+        to the free list once nothing else references them."""
+        _, entry = self._prefix.popitem(last=False)
+        for p in entry.pages:
+            left = self._cached[p] - 1
+            if left:
+                self._cached[p] = left
+                continue
+            del self._cached[p]
+            if p not in self._refs:
+                self._free.append(p)
+                self._evicted.append(p)
+
+    def _take_free(self, n: int) -> List[int]:
+        """Pop ``n`` pages off the free list, reclaiming LRU cache entries
+        as needed. Raises :class:`PageExhausted` with nothing allocated
+        (already-triggered evictions stand — they only grew the free
+        list) when even a fully drained cache cannot cover it."""
+        while len(self._free) < n and self._prefix:
+            self._evict_lru()
+        if len(self._free) < n:
+            raise PageExhausted(
+                f"need {n} page(s) but only {len(self._free)} of "
+                f"{self.num_pages - 1} are free (raise kv_pages or shrink "
+                "the admitted batch)")
+        return [self._free.pop() for _ in range(n)]
+
+    def _trim_cache(self) -> None:
+        if self.prefix_cache_pages is None:
+            return
+        while self._prefix and self.pages_cached > self.prefix_cache_pages:
+            self._evict_lru()
+
     def ensure(self, slot: int, n_rows: int) -> List[int]:
         """Grow ``slot`` to cover rows ``[0, n_rows)``; returns the newly
         allocated page ids (empty if already covered). Raises
         :class:`PageExhausted` — with the slot untouched — if the pool
-        cannot satisfy the growth."""
+        (free list + evictable cached pages) cannot satisfy the growth."""
         have = self._owned.setdefault(slot, [])
         need = self.pages_for(n_rows) - len(have)
         if need <= 0:
             return []
-        if need > len(self._free):
+        if need > len(self._free) + self.pages_cached:
             raise PageExhausted(
                 f"slot {slot} needs {need} more page(s) for {n_rows} rows "
-                f"but only {len(self._free)} of {self.num_pages - 1} are "
-                "free (raise kv_pages or shrink the admitted batch)")
-        fresh = [self._free.pop() for _ in range(need)]
+                f"but only {len(self._free) + self.pages_cached} of "
+                f"{self.num_pages - 1} are free (raise kv_pages or shrink "
+                "the admitted batch)")
+        fresh = self._take_free(need)
+        for p in fresh:
+            self._refs[p] = 1
         have.extend(fresh)
         if contracts_enabled():
             self._check_invariants()
         return fresh
 
     def release(self, slot: int) -> List[int]:
-        """Free every page of ``slot`` (and drop its reservation); returns
-        the released page ids."""
+        """Decref every page of ``slot`` (and drop its reservation);
+        returns the page ids actually FREED — shared pages survive under
+        their other owners, and pages the prefix index references stay
+        resident as reclaimable cache. Retirement and preemption share
+        this one exit path, so preempting a warm-prefix request can never
+        free pages another request still maps."""
         self._reserved.pop(slot, None)
-        pages = self._owned.pop(slot, [])
-        self._free.extend(pages)
+        freed: List[int] = []
+        for p in self._owned.pop(slot, []):
+            left = self._refs[p] - 1
+            if left:
+                self._refs[p] = left
+                continue
+            del self._refs[p]
+            if p in self._cached:
+                continue                      # stays resident for reuse
+            self._free.append(p)
+            freed.append(p)
+        self._trim_cache()
+        if contracts_enabled():
+            self._check_invariants()
+        return freed
+
+    def cow(self, slot: int, logical_page: int) -> Tuple[int, int]:
+        """Copy-on-write: re-map ``slot``'s ``logical_page`` from its
+        shared physical page to a freshly allocated private one. Returns
+        ``(old, new)``; the caller must copy the page payload (and its
+        ``kv_pos`` row) device-side before writing. Raises
+        :class:`PageExhausted` with the mapping untouched when no page
+        can be claimed."""
+        owned = self._owned[slot]
+        old = owned[logical_page]
+        new = self._take_free(1)[0]
+        self._refs[new] = 1
+        left = self._refs[old] - 1
+        if left:
+            self._refs[old] = left
+        elif old in self._cached:
+            del self._refs[old]               # lives on as cache only
+        else:
+            # sole owner and the caching entry was evicted while claiming
+            # the copy target: the old page is plain free after the swap
+            del self._refs[old]
+            self._free.append(old)
+            self._evicted.append(old)
+        owned[logical_page] = new
+        if contracts_enabled():
+            self._check_invariants()
+        return old, new
+
+    # ----------------------------------------------------- prefix caching
+    def match_prefix(self, candidates: Sequence[Tuple[int, bytes]],
+                     *, touch: bool = True) -> Optional[PrefixEntry]:
+        """Longest cached prefix among ``candidates`` (``prefix_keys``
+        output), or None. ``touch`` refreshes the winner's LRU position —
+        pass False for scheduling probes that may not lead to admission."""
+        if not self.prefix_cache:
+            return None
+        for n_rows, key in sorted(candidates, key=lambda c: c[0],
+                                  reverse=True):
+            entry = self._prefix.get(key)
+            if entry is not None and entry.n_rows == n_rows:
+                if touch:
+                    self._prefix.move_to_end(key)
+                return entry
+        return None
+
+    def splice_prefix(self, slot: int, entry: PrefixEntry) -> List[int]:
+        """Map a cached prefix's pages into fresh ``slot`` (incref each);
+        the slot's logical rows ``[0, entry.n_rows)`` are now backed by
+        shared physical pages and need no prefill."""
+        if self._owned.get(slot):
+            raise ValueError(
+                f"splice_prefix into slot {slot} which already owns pages")
+        pages = list(entry.pages)
+        for p in pages:
+            self._refs[p] = self._refs.get(p, 0) + 1
+        self._owned[slot] = pages
+        self._prefix.move_to_end(entry.key)
         if contracts_enabled():
             self._check_invariants()
         return pages
 
+    def register_prefix(self, slot: int,
+                        candidates: Sequence[Tuple[int, bytes]]) -> int:
+        """Publish ``slot``'s freshly written prefix pages under every
+        candidate key (``prefix_keys`` of the tokens just prefilled).
+        Existing entries are touched, new ones map the slot's leading
+        pages. Returns the number of entries added."""
+        if not self.prefix_cache:
+            return 0
+        owned = self._owned.get(slot, [])
+        added = 0
+        for n_rows, key in sorted(candidates, key=lambda c: c[0]):
+            if key in self._prefix:
+                self._prefix.move_to_end(key)
+                continue
+            n_pages = self.pages_for(n_rows)
+            if n_pages > len(owned):
+                continue                      # slot doesn't cover this span
+            pages = tuple(owned[:n_pages])
+            self._prefix[key] = PrefixEntry(key=key, n_rows=n_rows,
+                                            pages=pages)
+            for p in pages:
+                self._cached[p] = self._cached.get(p, 0) + 1
+            added += 1
+        self._trim_cache()
+        if contracts_enabled():
+            self._check_invariants()
+        return added
+
+    def drain_evicted(self) -> List[int]:
+        """Pages returned to the free list by cache eviction since the
+        last drain. The engine resets their stale ``kv_pos`` rows before
+        the pages can be re-issued to a new owner."""
+        evicted, self._evicted = self._evicted, []
+        return evicted
+
     def _check_invariants(self) -> None:
         """The property-tested allocator invariants, asserted inline under
         REPRO_CONTRACTS (tests/CI); never called in production."""
-        owned_pages = [p for pages in self._owned.values() for p in pages]
-        assert len(owned_pages) == len(set(owned_pages)), (
-            "page owned by more than one slot")
-        assert 0 not in owned_pages and 0 not in self._free, (
-            "null page 0 entered circulation")
-        assert len(self._free) + len(owned_pages) == self.num_pages - 1, (
-            f"page leak: {len(self._free)} free + {len(owned_pages)} owned "
-            f"!= {self.num_pages - 1}")
+        mult: Dict[int, int] = {}
+        for pages in self._owned.values():
+            assert len(pages) == len(set(pages)), (
+                "slot maps a physical page twice")
+            for p in pages:
+                mult[p] = mult.get(p, 0) + 1
+        assert mult == self._refs, (
+            "refcounts out of sync with slot page tables")
+        assert 0 not in mult and 0 not in self._free \
+            and 0 not in self._cached, "null page 0 entered circulation"
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "page double-freed"
+        assert not free_set & set(mult), "page both free and mapped"
+        assert not free_set & set(self._cached), "page both free and cached"
+        cached_only = sum(1 for p in self._cached if p not in mult)
+        assert len(self._free) + len(mult) + cached_only \
+            == self.num_pages - 1, (
+            f"page leak: {len(self._free)} free + {len(mult)} mapped + "
+            f"{cached_only} cached != {self.num_pages - 1}")
+        for entry in self._prefix.values():
+            assert len(entry.pages) == self.pages_for(entry.n_rows), (
+                "prefix entry page count != pages_for(n_rows)")
+            for p in entry.pages:
+                assert self._cached.get(p, 0) >= 1, (
+                    "prefix entry references an untracked page")
         assert self.pages_available >= 0, "reservations exceed the pool"
 
     def table_row(self, slot: int, table_len: int):
         """The slot's page table row, null-padded to ``table_len``."""
-        import numpy as np
-
         row = np.zeros((table_len,), np.int32)
         pages = self._owned.get(slot, ())
         row[:len(pages)] = pages

@@ -1,3 +1,11 @@
+"""Stable serving surface.
+
+``__all__`` below is the supported API (see docs/serving_api.md):
+construct a :class:`ServingConfig`, hand it to :class:`ServingEngine`,
+submit :class:`Request` objects (or use ``engine.generate``) with
+:class:`SamplingParams`, and read :class:`ServingStats`. Everything else
+importable from the submodules is internal and may change without notice.
+"""
 from repro.models.kvcache import (  # noqa: F401
     PageAllocator, PageExhausted, supports_paging)
 from repro.serving.bucketing import (  # noqa: F401
@@ -7,3 +15,19 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.faults import (  # noqa: F401
     FaultConfig, FaultEvent, FaultInjector, InjectedFault)
 from repro.serving.sampling import GREEDY, SamplingParams  # noqa: F401
+
+__all__ = [
+    "Request",
+    "RequestStatus",
+    "ServingConfig",
+    "ServingEngine",
+    "ServingStats",
+    "SamplingParams",
+    "GREEDY",
+    "FaultConfig",
+    "FaultEvent",
+    "FaultInjector",
+    "InjectedFault",
+    "PageAllocator",
+    "PageExhausted",
+]

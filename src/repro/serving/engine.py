@@ -139,6 +139,7 @@ from __future__ import annotations
 import enum
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -148,12 +149,12 @@ import numpy as np
 
 from repro.models.kvcache import (
     PageAllocator, PageExhausted, contiguous_kv_bytes, init_cache,
-    init_paged_cache, paged_kv_page_bytes, supports_paging)
+    init_paged_cache, paged_kv_page_bytes, prefix_keys, supports_paging)
 from repro.serving.bucketing import (
     pad_prompts, plan_admission, plan_chunks, supports_bucketing)
 from repro.serving.faults import FaultConfig, FaultInjector, InjectedFault
 from repro.serving.sampling import (
-    SamplingParams, finite_rows, sample_tokens, sampling_arrays)
+    GREEDY, SamplingParams, finite_rows, sample_tokens, sampling_arrays)
 
 
 class RequestStatus(enum.Enum):
@@ -201,7 +202,18 @@ class Request:
     preemptions: int = 0          # times evicted and requeued
     requeue_wait_s: float = 0.0   # total preempt -> re-admit wall time
     admit_seq: int = -1           # engine-global admission order (LIFO victim)
+    prefix_rows: int = 0          # prompt rows served from shared pages at
+    #                               the LAST admission (0 = cold prefill)
     _t_preempt: float = 0.0       # pending preemption timestamp (internal)
+
+    def __post_init__(self):
+        # SamplingParams is the one user-facing generation-control surface:
+        # its max_new / deadline_s, when set, override the Request fields
+        # (which stay for telemetry and direct construction)
+        if self.sampling.max_new is not None:
+            self.max_new_tokens = self.sampling.max_new
+        if self.deadline_s is None:
+            self.deadline_s = self.sampling.deadline_s
 
     @property
     def queue_time(self) -> float:
@@ -272,15 +284,26 @@ class ServingStats:
     cancelled: int = 0             # terminal-status counts over `requests`
     expired: int = 0
     failed: int = 0
+    # cross-request prefix cache (zeros when prefix_cache is off)
+    prefix_hits: int = 0           # admissions spliced onto cached pages
+    prefix_misses: int = 0         # admissions that cold-prefilled
+    prefix_hit_rate: float = 0.0   # hits / (hits + misses)
+    prefix_rows_reused: int = 0    # prompt rows served from shared pages
+    kv_bytes_saved: int = 0        # KV bytes those rows did NOT re-store
+    kv_pages_cached: int = 0       # resident unreferenced cache pages NOW
+    mean_ttft_warm_s: float = 0.0  # mean TTFT of prefix-hit requests
+    mean_ttft_cold_s: float = 0.0  # mean TTFT of prefix-miss requests
 
 
 @dataclass
 class ServingConfig:
     """Engine configuration (see the class docstring above for what each
     knob controls). ``ServingEngine(model, params, config=ServingConfig(...))``
-    is the canonical constructor; the flat-kwarg form remains as a
-    back-compat path that builds one of these. :meth:`validate` is the ONE
-    site holding the paged/EP/pallas incompatibility rules."""
+    is the ONE documented construction path (docs/serving_api.md); the
+    flat-kwarg form is deprecated and only kept as a warning back-compat
+    shim. :meth:`validate` is the ONE site holding the paged/EP/pallas
+    incompatibility rules, and :meth:`from_args` the ONE place CLI flags
+    become a config — programmatic and CLI configs cannot drift."""
     batch_slots: int = 4
     max_len: int = 512
     moe_mode: str = "ragged"
@@ -293,6 +316,12 @@ class ServingConfig:
     kv_page_size: Optional[int] = None
     kv_pages: Optional[int] = None
     prefill_chunk: Optional[int] = None    # paged layout only
+    # cross-request prefix caching (paged layout only): share chunk-aligned
+    # prompt-prefix pages across requests with refcounts + copy-on-write;
+    # prefix_cache_pages caps the resident unreferenced cache footprint
+    # (None = bounded only by allocation pressure / LRU eviction)
+    prefix_cache: bool = False
+    prefix_cache_pages: Optional[int] = None
     parallel: Optional[object] = None      # ParallelConfig for EP serving
     mesh: Optional[object] = None
     # paged admission policy: "optimistic" admits against the rows a
@@ -327,6 +356,20 @@ class ServingConfig:
             raise ValueError(
                 "prefill_chunk > 0 requires kv_layout='paged' (chunked "
                 "prefill writes the cache page-by-page)")
+        if not paged and self.prefix_cache:
+            raise ValueError(
+                "prefix_cache=True requires kv_layout='paged' (prefix "
+                "sharing maps physical pages into several page tables; a "
+                "contiguous ring has no pages to share)")
+        if self.prefix_cache_pages is not None:
+            if not self.prefix_cache:
+                raise ValueError(
+                    "prefix_cache_pages is set but prefix_cache=False "
+                    "(enable the cache or drop the cap)")
+            if self.prefix_cache_pages < 0:
+                raise ValueError(
+                    f"prefix_cache_pages must be >= 0, got "
+                    f"{self.prefix_cache_pages}")
         if self.admission not in ("optimistic", "reserve"):
             raise ValueError(
                 f"admission must be 'optimistic' or 'reserve', got "
@@ -345,12 +388,131 @@ class ServingConfig:
                 "attention-family mixers only (MLA / recurrent state "
                 "and enc-dec caches keep the contiguous layout)")
 
+    # ------------------------------------------------------------- CLI
+    @classmethod
+    def add_cli_args(cls, ap):
+        """Register every engine flag on an argparse parser. Launchers add
+        their workload flags (prompts, sampling, request count) and then
+        build the config with :meth:`from_args` — flag names, defaults,
+        and the flag->field mapping live only here."""
+        ap.add_argument("--slots", type=int, default=cls.batch_slots)
+        ap.add_argument("--max-len", type=int, default=0,
+                        help="engine context rows per slot (0 = let the "
+                             "launcher derive it from its workload)")
+        ap.add_argument("--moe-mode", default=cls.moe_mode)
+        ap.add_argument("--attn-impl", default="jnp",
+                        choices=("jnp", "pallas"),
+                        help="decode/prefill attention backend: 'pallas' "
+                             "runs the flash-decode + flash-attention "
+                             "kernels (interpret mode on CPU)")
+        ap.add_argument("--kv-layout", default="contiguous",
+                        choices=("contiguous", "paged"),
+                        help="'paged' serves from a shared page pool "
+                             "(block-table allocator, on-demand growth, "
+                             "release on retirement) instead of per-slot "
+                             "max_len rings")
+        ap.add_argument("--kv-page-size", type=int, default=0,
+                        help="rows per KV page (default: cfg.kv_page_size)")
+        ap.add_argument("--kv-pages", type=int, default=0,
+                        help="physical pages in the pool (default: worst "
+                             "case slots * max_len / page + null page)")
+        ap.add_argument("--prefill-chunk", type=int, default=0,
+                        help="chunked prefill: prompts longer than this "
+                             "many tokens prefill chunk-by-chunk "
+                             "interleaved with decode (paged layout only; "
+                             "0 = off)")
+        ap.add_argument("--prefix-cache", action="store_true",
+                        help="cross-request prefix caching (paged layout "
+                             "only): requests sharing a prompt prefix "
+                             "splice the cached pages into their page "
+                             "table and skip prefilling them; divergent "
+                             "writes copy-on-write")
+        ap.add_argument("--prefix-cache-pages", type=int, default=0,
+                        help="cap on resident unreferenced prefix-cache "
+                             "pages (0 = LRU eviction under allocation "
+                             "pressure only)")
+        ap.add_argument("--no-bucketing", action="store_true",
+                        help="exact-length per-request prefill (recompiles "
+                             "per distinct prompt length)")
+        ap.add_argument("--ep", action="store_true",
+                        help="expert-parallel serving: shard MoE expert "
+                             "stacks over the 'model' mesh axis")
+        ap.add_argument("--ep-degree", type=int, default=0,
+                        help="EP mesh size (default: all visible devices)")
+        ap.add_argument("--admission", default=cls.admission,
+                        choices=("optimistic", "reserve"),
+                        help="paged admission policy: 'optimistic' admits "
+                             "against expected occupancy and preempts on "
+                             "pool exhaustion (recompute on re-admission); "
+                             "'reserve' budgets worst-case pages up front "
+                             "and never preempts (see "
+                             "docs/serving_lifecycle.md)")
+        ap.add_argument("--chaos", action="store_true",
+                        help="arm the deterministic fault injector "
+                             "(repro.serving.faults): forced preemptions + "
+                             "simulated pool exhaustion; greedy output "
+                             "must stay token-identical to an undisturbed "
+                             "run")
+        ap.add_argument("--chaos-seed", type=int, default=0)
+        ap.add_argument("--chaos-preempt-every", type=int, default=4,
+                        help="force-preempt the newest resident every N "
+                             "engine steps under --chaos (0 = off)")
+        ap.add_argument("--chaos-exhaust-prob", type=float, default=0.1,
+                        help="per-ensure probability that page growth "
+                             "pretends the pool is dry under --chaos")
+        return ap
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "ServingConfig":
+        """Build a config from parsed :meth:`add_cli_args` flags.
+        ``overrides`` win over flag values — launchers use this for
+        derived fields (``max_len`` from the workload, a loaded
+        ``merge_plan``). Mesh / ParallelConfig / FaultConfig construction
+        happens here, so --ep and --chaos mean the same thing in every
+        launcher."""
+        parallel = mesh = None
+        if getattr(args, "ep", False):
+            from repro.launch.mesh import make_serving_mesh
+            from repro.parallel import ParallelConfig
+
+            mesh = make_serving_mesh(getattr(args, "ep_degree", 0) or None)
+            parallel = ParallelConfig(fsdp_axis=None, weight_gather=False,
+                                      ep=True, moe_mode=args.moe_mode)
+        faults = None
+        if getattr(args, "chaos", False):
+            faults = FaultConfig(seed=args.chaos_seed,
+                                 preempt_every=args.chaos_preempt_every,
+                                 exhaust_prob=args.chaos_exhaust_prob)
+        fields = dict(
+            batch_slots=args.slots,
+            max_len=args.max_len or cls.max_len,
+            moe_mode=args.moe_mode,
+            attn_impl=args.attn_impl,
+            bucket_prompts=False if args.no_bucketing else None,
+            kv_layout=args.kv_layout,
+            kv_page_size=args.kv_page_size or None,
+            kv_pages=args.kv_pages or None,
+            prefill_chunk=args.prefill_chunk or None,
+            prefix_cache=args.prefix_cache,
+            prefix_cache_pages=args.prefix_cache_pages or None,
+            admission=args.admission,
+            faults=faults, parallel=parallel, mesh=mesh)
+        fields.update(overrides)
+        return cls(**fields)
+
 
 class ServingEngine:
     def __init__(self, model, params, *,
                  config: Optional[ServingConfig] = None, **kwargs):
         if config is None:
-            config = ServingConfig(**kwargs)  # back-compat kwarg path
+            # deprecated back-compat shim; the stable constructor is
+            # config= (docs/serving_api.md)
+            warnings.warn(
+                "flat-kwarg ServingEngine(model, params, batch_slots=..., "
+                "...) is deprecated; pass "
+                "config=ServingConfig(batch_slots=..., ...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = ServingConfig(**kwargs)
         elif kwargs:
             raise ValueError(
                 f"pass config= or individual engine kwargs, not both "
@@ -496,8 +658,12 @@ class ServingEngine:
             self._prefill = jax.jit(self._prefill_fn)
         self.params = params
 
+        self.prefix_cache = bool(config.prefix_cache)  # paged-only (validate)
         if self.paged:
-            self.allocator = PageAllocator(self.num_pages, self.page_size)
+            self.allocator = PageAllocator(
+                self.num_pages, self.page_size,
+                prefix_cache=self.prefix_cache,
+                prefix_cache_pages=config.prefix_cache_pages)
             self.cache = init_paged_cache(
                 self.cfg, batch_slots, self.max_len,
                 num_pages=self.num_pages, page_size=self.page_size,
@@ -505,10 +671,15 @@ class ServingEngine:
             if self._extend is None:
                 self._extend = jax.jit(self._extend_fn)
             self._table_dirty = False
+            # one compiled extend width serves chunked prefill AND warm
+            # suffix prefill; without explicit chunking, warm suffixes
+            # stream at page granularity
+            self._chunk_width = self.prefill_chunk or self.page_size
         else:
             self.allocator = None
             self.cache = init_cache(self.cfg, batch_slots, max_len,
                                     jnp.dtype(self.cfg.dtype))
+            self._chunk_width = 0
         # one layout-resolved splice path for every admission site
         self._splice_fn = self._splice_paged if self.paged else self._splice
         self._place_cache()
@@ -528,6 +699,7 @@ class ServingEngine:
                        if config.faults is not None else None)
         self._cancel_uids: set = set()
         self._admit_counter = 0        # monotonic; LIFO preemption victims
+        self._next_uid = 0             # auto uids for generate()
         self.engine_steps = 0          # every step() call; fault clock
 
         # telemetry
@@ -542,6 +714,9 @@ class ServingEngine:
         self._prefill_cache_base = 0
         self.preemption_count = 0
         self._requeue_waits: List[float] = []
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_rows_reused = 0
 
     def _prefill_fn(self, params, tokens, last_pos):
         # paged mode splices the transient prefill cache into the page pool
@@ -593,6 +768,8 @@ class ServingEngine:
                     "(raise kv_pages)")
         req.status = RequestStatus.QUEUED
         req.t_submit = time.perf_counter()
+        # keep generate()'s auto uids clear of caller-chosen ones
+        self._next_uid = max(self._next_uid, req.uid + 1)
         self.queue.append(req)
 
     def cancel(self, uid: int) -> bool:
@@ -607,6 +784,26 @@ class ServingEngine:
             return False
         self._cancel_uids.add(uid)
         return True
+
+    def generate(self, prompt,
+                 params: Optional[SamplingParams] = None) -> Request:
+        """One-call convenience over :meth:`submit` / :meth:`step`: serve
+        ``prompt`` to completion and return its terminal :class:`Request`
+        (tokens in ``.generated``, outcome in ``.status``). ``params``
+        carries ALL generation controls (temperature / top_p / seed /
+        max_new / deadline_s); default is greedy with the engine default
+        budget. Any concurrently submitted requests keep being served —
+        this drives the shared engine loop, it does not lock it."""
+        req = Request(uid=self._next_uid,
+                      prompt=np.asarray(prompt, np.int32),
+                      sampling=params if params is not None else GREEDY)
+        self._next_uid += 1
+        self.submit(req)
+        steps = 0
+        while not req.done and steps < 10_000:
+            self.step()
+            steps += 1
+        return req
 
     def _splice(self, slots: List[int], cacheN, lens: np.ndarray):
         """Copy rows ``0..len(slots)-1`` of a prefill cache (batch B') into
@@ -661,21 +858,50 @@ class ServingEngine:
         self._table_dirty = False
         self._place_cache()
 
+    def _reset_kv_rows(self, pages: List[int]):
+        """Neutralise the kv_pos rows of freed pages: stale entries in a
+        recycled page would masquerade as filled positions for its next
+        owner (the leftover k/v bytes are then masked like any unfilled
+        slot)."""
+        if pages:
+            self.cache["kv_pos"] = self.cache["kv_pos"].at[
+                jnp.asarray(np.asarray(pages, np.int32))].set(-1)
+            self._place_cache()
+
+    def _drain_evicted(self):
+        """Collect pages the prefix cache evicted to the free list during
+        the last allocator call and reset their stale kv_pos rows. Pages
+        the SAME allocator call already handed back out (evicted straight
+        into an ensure/cow allocation) are skipped — they are live again
+        and their kv_pos is owned by the allocation site, which either
+        reset it as a fresh page or overwrote it with the COW copy."""
+        if self.prefix_cache:
+            stale = [p for p in self.allocator.drain_evicted()
+                     if self.allocator.refs(p) == 0]
+            self._reset_kv_rows(stale)
+
     def _ensure_pages(self, slot: int, n_rows: int):
+        before = len(self.allocator.owned(slot))
         if self.allocator.ensure(slot, n_rows):
             self._table_dirty = True
             self._note_pages()
+            if self.prefix_cache:
+                # a freshly allocated page has no valid rows by definition;
+                # with eviction in play it may come back dirty (evicted
+                # cache pages keep their kv_pos until recycled), so clean
+                # it here, at the one place pages enter a slot's table
+                self._reset_kv_rows(list(self.allocator.owned(slot)[before:]))
+        self._drain_evicted()
 
     def _release_pages(self, slot: int):
-        released = self.allocator.release(slot)
-        if released:
-            # stale kv_pos rows in a recycled page would masquerade as
-            # filled positions for its next owner; reset them to -1 (the
-            # leftover k/v bytes are then masked like any unfilled slot)
-            self.cache["kv_pos"] = self.cache["kv_pos"].at[
-                jnp.asarray(np.asarray(released, np.int32))].set(-1)
+        had_pages = bool(self.allocator.owned(slot))
+        # release DECREFS: only pages no other slot maps and the prefix
+        # index no longer caches come back (shared pages must survive
+        # their co-owners; cached pages stay resident for future hits)
+        self._reset_kv_rows(self.allocator.release(slot))
+        self._drain_evicted()
+        if had_pages:
             self._table_dirty = True
-            self._place_cache()
 
     def _worst_rows(self, req: Request) -> int:
         return len(req.prompt) + req.max_new_tokens
@@ -701,18 +927,22 @@ class ServingEngine:
         return len(req.prompt) + len(req.generated) + 1
 
     def _fits_pages(self, n_rows_list) -> bool:
-        """Can the unreserved pool budget these admissions right now?
+        return self._fits_page_budget(
+            sum(self.allocator.pages_for(r) for r in n_rows_list))
+
+    def _fits_page_budget(self, need_pages: int) -> bool:
+        """Can the unreserved pool budget this many pages right now?
         Raises instead of deadlocking when nothing resident could ever
         free a page (the submit-time worst-case check already rejected
         requests the EMPTY pool can't hold, so this only triggers on
         fragmentation across policy edge cases)."""
-        need = sum(self.allocator.pages_for(r) for r in n_rows_list)
-        if need <= self.allocator.pages_available:
+        if need_pages <= self.allocator.pages_available:
             return True
         if not (self.slot_live.any() or self.prefilling):
             raise RuntimeError(
                 f"kv_pages pool too small: admission needs a budget of "
-                f"{need} page(s), only {self.allocator.pages_available} of "
+                f"{need_pages} page(s), only "
+                f"{self.allocator.pages_available} of "
                 f"{self.allocator.num_pages - 1} are unreserved and no "
                 "resident request will release any (raise kv_pages)")
         return False
@@ -793,10 +1023,12 @@ class ServingEngine:
                     raise
                 self._preempt(victim)
 
-    def _mark_admitted(self, req: Request, t: float):
+    def _mark_admitted(self, req: Request, t: float, prefix_rows: int = 0):
         """Admission bookkeeping shared by every admission site: first
         admission fixes ``t_admit``; re-admissions account requeue
-        latency; ``admit_seq`` orders preemption victims."""
+        latency; ``admit_seq`` orders preemption victims; prefix-cache
+        hit/miss telemetry counts each ACTUAL admission (probes that
+        didn't admit don't skew the hit rate)."""
         if req.t_admit == 0.0:
             req.t_admit = t
         if req._t_preempt:
@@ -806,6 +1038,141 @@ class ServingEngine:
             req._t_preempt = 0.0
         req.admit_seq = self._admit_counter
         self._admit_counter += 1
+        if self.prefix_cache:
+            req.prefix_rows = prefix_rows
+            if prefix_rows:
+                self.prefix_hits += 1
+                self.prefix_rows_reused += prefix_rows
+            else:
+                self.prefix_misses += 1
+
+    # ------------------------------------------------- prefix cache (paged)
+    def _match_prefix(self, req: Request):
+        """The longest cached prefix of the request's resume prompt, or
+        None (miss, or prefix caching off). Pure probe — LRU order is
+        only refreshed when the match is actually spliced."""
+        if not self.prefix_cache:
+            return None
+        cands = prefix_keys(self._resume_prompt(req), self.page_size)
+        if not cands:
+            return None
+        return self.allocator.match_prefix(cands, touch=False)
+
+    def _register_prefix(self, slot: int, tokens: np.ndarray):
+        """Publish ``slot``'s prompt pages (rows 0..len(tokens)-1 just
+        written by prefill) to the cross-request cache. Runs at every
+        cold-prefill completion AND at warm completion — a warm request
+        extends the index with its own longer prefixes."""
+        if not self.prefix_cache:
+            return
+        self.allocator.register_prefix(slot,
+                                       prefix_keys(tokens, self.page_size))
+        self._drain_evicted()  # registering may trim past the page cap
+
+    def _admit_warm(self, slot: int, entry, retired: List[Request]) -> bool:
+        """Admit the queue head onto a cached prefix: splice the shared
+        pages into its page table (incref), jump its cache ``pos`` past
+        the cached rows — their ``kv_pos`` already holds the absolute
+        positions — and route only the SUFFIX through the chunked-extend
+        prefill path. Returns False when the pool cannot budget the
+        admission yet (caller waits for retirements)."""
+        req = self.queue[0]
+        resume = self._resume_prompt(req)
+        if self.admission == "reserve":
+            # worst-case pages, PLUS one per refs-1 entry page: splicing
+            # bumps those to refs 2, un-backing the publisher slot's
+            # reservation (see PageAllocator._exclusive) — the consumer
+            # fronts the replacement so the no-deadlock guarantee holds
+            unbacks = sum(1 for p in entry.pages
+                          if self.allocator.refs(p) == 1)
+            need = self.allocator.pages_for(self._worst_rows(req)) + unbacks
+        else:
+            # pages beyond the shared ones, plus one for the boundary-page
+            # COW the first divergent write triggers on a mid-page match
+            need = (self.allocator.pages_for(len(resume) + 1)
+                    - len(entry.pages)
+                    + (1 if entry.n_rows % self.page_size else 0))
+        if not self._fits_page_budget(max(need, 0)):
+            return False
+        self.queue.pop(0)
+        self.allocator.splice_prefix(slot, entry)
+        if self.admission == "reserve":
+            self.allocator.reserve(slot, self._worst_rows(req))
+        self._table_dirty = True
+        self._note_pages()
+        self._mark_admitted(req, time.perf_counter(),
+                            prefix_rows=entry.n_rows)
+        req.status = RequestStatus.PREFILLING
+        self.cache["pos"] = self.cache["pos"].at[slot].set(entry.n_rows)
+        self._place_cache()
+        # absolute spans over the suffix only; the shared extend machinery
+        # (_advance_prefills) prefills them at the engine's one chunk width
+        spans = [(s + entry.n_rows, e + entry.n_rows)
+                 for s, e in plan_chunks(len(resume) - entry.n_rows,
+                                         self._chunk_width)]
+        self.prefilling[slot] = {"req": req, "tokens": resume,
+                                 "chunks": spans, "next": 0}
+        return True
+
+    def _cow_for_write(self, slot: int, start_row: int, end_row: int):
+        """Copy-on-write every SHARED page the coming write to rows
+        ``[start_row, end_row)`` would touch, so a writer never mutates a
+        page another request (or the prefix index) maps. Allocation
+        pressure preempts other residents, like any growth."""
+        if not self.prefix_cache:
+            return
+        page = self.page_size
+        owned = self.allocator.owned(slot)
+        for li in range(start_row // page, (end_row - 1) // page + 1):
+            if li >= len(owned):
+                continue  # not allocated yet: fresh page, never shared
+            if not self.allocator.page_shared(owned[li]):
+                continue
+            pair = None
+            while True:
+                try:
+                    pair = self.allocator.cow(slot, li)
+                    break
+                except PageExhausted:
+                    # the failed claim's eviction sweep stands — it may
+                    # have dropped the very entry caching this page; a
+                    # refs-1 uncached page is exclusive again and can be
+                    # written in place, no copy (and no page) needed
+                    if not self.allocator.page_shared(owned[li]):
+                        break
+                    victim = self._preempt_victim(exclude=(slot,))
+                    if victim is None:
+                        raise
+                    self._preempt(victim)
+            if pair is None:
+                self._drain_evicted()
+                continue
+            # copy old -> new BEFORE draining evictions: the decref may
+            # have freed the old page (its last cache entry was evicted
+            # under the same allocation pressure), and a drain-first order
+            # would wipe its kv_pos row before the copy reads it
+            self._apply_cow([pair])
+            self._drain_evicted()
+            owned = self.allocator.owned(slot)
+
+    def _apply_cow(self, pairs):
+        """Device-side half of COW: duplicate each old page's pool rows
+        (every attention layer) and its shared kv_pos row into the
+        replacement page; the page-table swap already happened host-side
+        in the allocator."""
+        old = jnp.asarray(np.asarray([p[0] for p in pairs], np.int32))
+        new = jnp.asarray(np.asarray([p[1] for p in pairs], np.int32))
+        kvp = self.cache["kv_pos"]
+        self.cache["kv_pos"] = kvp.at[new].set(kvp[old])
+        self.cache["prefix"] = tuple(
+            {k: pool[k].at[new].set(pool[k][old]) for k in ("k", "v")}
+            for pool in self.cache["prefix"])
+        self.cache["blocks"] = tuple(
+            {k: pool[k].at[:, new].set(pool[k][:, old]) for k in ("k", "v")}
+            for pool in self.cache["blocks"])
+        self._table_dirty = True
+        self._note_pages()
+        self._place_cache()
 
     def _splice_paged(self, slots: List[int], cacheN, lens: np.ndarray):
         """Scatter a CONTIGUOUS prefill cache (ring layout, batch B') into
@@ -935,6 +1302,12 @@ class ServingEngine:
                     if not self.slot_live[s] and s not in self.prefilling]
             if not free:
                 return
+            entry = self._match_prefix(self.queue[0])
+            if entry is not None:
+                # warm prefix: skip prefill for the cached rows entirely
+                if not self._admit_warm(free[0], entry, retired):
+                    return  # wait: retirements release budgeted pages
+                continue
             if self._is_chunked(self.queue[0]):
                 # long prompt: occupy a slot now, prefill it chunk-by-chunk
                 # interleaved with decode (see _advance_prefills) — no
@@ -966,8 +1339,13 @@ class ServingEngine:
             if self.bucket_prompts:
                 lens = []
                 for r in self.queue:
-                    if self._is_chunked(r):
-                        break  # FCFS: never reorder past a chunked prompt
+                    # FCFS: never reorder past a chunked prompt, and keep
+                    # warm-prefix requests out of the cold batch — they are
+                    # admitted via _admit_warm when they reach the head
+                    if self._is_chunked(r) or (
+                            r is not self.queue[0]
+                            and self._match_prefix(r) is not None):
+                        break
                     lens.append(len(self._resume_prompt(r)))
                 n, L = plan_admission(lens, len(free),
                                       self.prefill_batch, self.min_bucket,
@@ -998,6 +1376,8 @@ class ServingEngine:
                 if not self._splice_admitted(take, slots, cacheN, lens,
                                              retired):
                     continue
+                for slot, p in zip(slots, prompts):
+                    self._register_prefix(slot, p)
                 sampling = [r.sampling for r in take] + [None] * (Bp - n)
                 # a resumed request's next token is index len(generated),
                 # NOT 0 — the fold_in(seed, i) contract is what makes the
@@ -1031,6 +1411,7 @@ class ServingEngine:
                 if not self._splice_admitted([req], free[:1], cache1, lens1,
                                              retired):
                     continue
+                self._register_prefix(free[0], resume)
                 tok = np.asarray(sample_tokens(
                     logits[:, 0], *sampling_arrays(
                         [req.sampling], [len(req.generated)])))
@@ -1044,16 +1425,18 @@ class ServingEngine:
         join the decode batch."""
         if not self.prefilling:
             return
-        C = self.prefill_chunk
-        # growth first, on a snapshot: ensuring pages for one slot may
-        # PREEMPT another prefilling slot under pressure, mutating
-        # self.prefilling mid-walk
+        C = self._chunk_width
+        # growth (and any copy-on-write the chunk's rows need) first, on a
+        # snapshot: claiming pages for one slot may PREEMPT another
+        # prefilling slot under pressure, mutating self.prefilling mid-walk
         for s in list(self.prefilling):
             if s not in self.prefilling:
                 continue  # preempted by an earlier slot's growth
             st = self.prefilling[s]
-            _, end = st["chunks"][st["next"]]
+            start, end = st["chunks"][st["next"]]
             self._ensure_resident(s, end)
+            if s in self.prefilling:
+                self._cow_for_write(s, start, end)
         if not self.prefilling:
             return
         tokens = np.zeros((self.slots, C), np.int32)
@@ -1090,8 +1473,11 @@ class ServingEngine:
             logits[:, 0], *sampling_arrays(sampling, counters)))
         now = time.perf_counter()
         for s in finishing:
-            req = self.prefilling.pop(s)["req"]
-            self._occupy(req, s, int(toks[s]), now, retired)
+            st = self.prefilling.pop(s)
+            # all prompt rows are written now — publish them (warm slots
+            # add their LONGER prefixes on top of the entries they hit)
+            self._register_prefix(s, st["tokens"])
+            self._occupy(st["req"], s, int(toks[s]), now, retired)
 
     # ------------------------------------------------------------ retirement
     def _terminate(self, req: Request, slot: Optional[int],
@@ -1168,7 +1554,13 @@ class ServingEngine:
             return
         for s, req in list(self.active.items()):
             if s in self.active:  # not preempted by an earlier growth
-                self._ensure_resident(s, len(req.prompt) + len(req.generated))
+                rows = len(req.prompt) + len(req.generated)
+                self._ensure_resident(s, rows)
+                if s in self.active:
+                    # this step's decode write lands at row rows-1; if that
+                    # page is shared (a just-registered prompt's partial
+                    # boundary page, or a co-owned prefix) copy it first
+                    self._cow_for_write(s, rows - 1, rows)
         self._sync_page_table()
 
     def _decode_dispatch(self):
@@ -1301,6 +1693,9 @@ class ServingEngine:
         self._prefill_cache_base = self._jit_prefill_cache_size() or 0
         self.preemption_count = 0
         self._requeue_waits = []
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_rows_reused = 0
 
     def prefill_compilations(self) -> int:
         """Distinct prefill executables compiled since the last
@@ -1348,11 +1743,15 @@ class ServingEngine:
             "page_bytes_per_device": page_b_dev,
             "kv_shard_degree": self._kv_shards,
             "pages_total": self.allocator.num_pages - 1,
+            # unique mapped pages: a prefix page shared by k slots counts
+            # once, so peak/per-device bytes never double-count shared KV
             "pages_in_use": self.allocator.pages_in_use,
+            "pages_cached": self.allocator.pages_cached,
             "pages_peak": self._kv_pages_peak,
             "kv_bytes_provisioned": self.allocator.num_pages * page_b,
             "kv_bytes_peak": self._kv_pages_peak * page_b,
             "kv_bytes_peak_per_device": self._kv_pages_peak * page_b_dev,
+            "kv_bytes_cached": self.allocator.pages_cached * page_b,
             "kv_bytes_contiguous": contig,
         }
 
@@ -1367,6 +1766,7 @@ class ServingEngine:
         pages_total = (self.allocator.num_pages - 1) if self.paged else 0
         page_bytes = (paged_kv_page_bytes(self.cfg, self.page_size)
                       if self.paged else 0)
+        lookups = self.prefix_hits + self.prefix_misses
         return ServingStats(
             requests=len(reqs),
             total_new_tokens=tokens,
@@ -1403,4 +1803,19 @@ class ServingEngine:
                           for r in reqs),
             expired=sum(r.status is RequestStatus.EXPIRED for r in reqs),
             failed=sum(r.status is RequestStatus.FAILED for r in reqs),
+            prefix_hits=self.prefix_hits,
+            prefix_misses=self.prefix_misses,
+            prefix_hit_rate=(self.prefix_hits / lookups if lookups
+                             else 0.0),
+            prefix_rows_reused=self.prefix_rows_reused,
+            # rows served from shared pages are KV the pool did NOT store
+            # (or recompute) a second time
+            kv_bytes_saved=(self.prefix_rows_reused * page_bytes
+                            // self.page_size if self.paged else 0),
+            kv_pages_cached=(self.allocator.pages_cached if self.paged
+                             else 0),
+            mean_ttft_warm_s=_nanmean(
+                r.ttft for r in reqs if r.prefix_rows > 0),
+            mean_ttft_cold_s=_nanmean(
+                r.ttft for r in reqs if r.prefix_rows == 0),
         )

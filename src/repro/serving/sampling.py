@@ -23,17 +23,29 @@ import numpy as np
 
 @dataclass(frozen=True)
 class SamplingParams:
-    """Per-request sampling configuration."""
+    """Per-request generation controls — the one user-facing knob bundle
+    of the stable serving API (docs/serving_api.md). ``temperature`` /
+    ``top_p`` / ``seed`` steer the sampler; ``max_new`` and ``deadline_s``,
+    when set, override the corresponding :class:`Request` fields at
+    construction so ``engine.generate(prompt, params)`` needs nothing
+    else."""
 
     temperature: float = 0.0   # 0 -> greedy
     top_p: float = 1.0         # nucleus mass; 1.0 -> full distribution
     seed: int = 0
+    max_new: int | None = None       # generation budget (tokens)
+    deadline_s: float | None = None  # wall-clock budget from submission
 
     def __post_init__(self):
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.max_new is not None and self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be > 0, got {self.deadline_s}")
 
 
 GREEDY = SamplingParams()

@@ -133,5 +133,5 @@ def test_page_allocator_invariants_checked():
     # corrupt the free list the way a double-release would and assert the
     # inline check trips
     alloc._free.append(alloc._owned[1][0])
-    with pytest.raises(AssertionError, match="owned"):
+    with pytest.raises(AssertionError, match="free and mapped"):
         alloc._check_invariants()

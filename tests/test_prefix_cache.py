@@ -1,0 +1,450 @@
+"""Cross-request prefix caching: chain-hash key derivation, refcounted
+allocator + copy-on-write invariants (plain + hypothesis property tests),
+and engine-level greedy token parity with caching on vs off across both
+attention backends, single-device and EP, including under forced
+preemption of a warm-prefix request."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.kvcache import (
+    PageAllocator, PageExhausted, prefix_keys)
+from repro.serving import (
+    Request, SamplingParams, ServingConfig, ServingEngine)
+from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
+
+if HAVE_HYPOTHESIS:
+    prop_settings = settings(max_examples=50, deadline=None)
+else:  # decorators evaluate even under skipif; the shim settings is inert
+    def prop_settings(f):
+        return f
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# prefix_keys: chain-hash candidate derivation
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixKeys:
+    def test_candidates_at_page_boundaries_plus_maximal(self):
+        toks = np.arange(18, dtype=np.int32)
+        cands = prefix_keys(toks, page_size=8)
+        assert [n for n, _ in cands] == [8, 16, 17]  # 17 = len - 1 maximal
+
+    def test_no_maximal_when_len_minus_one_on_boundary(self):
+        cands = prefix_keys(np.arange(17, dtype=np.int32), page_size=8)
+        assert [n for n, _ in cands] == [8, 16]
+
+    def test_always_leaves_one_suffix_token(self):
+        # every candidate claims <= len-1 rows: the engine must run at
+        # least one token through extend to get first-token logits
+        for n in (1, 2, 8, 9, 31):
+            cands = prefix_keys(np.arange(n, dtype=np.int32), page_size=8)
+            assert all(rows <= n - 1 for rows, _ in cands)
+        assert prefix_keys(np.arange(1, dtype=np.int32), page_size=8) == []
+
+    def test_key_commits_to_entire_prefix(self):
+        a = np.arange(24, dtype=np.int32)
+        b = a.copy()
+        b[0] += 1  # perturb only the FIRST token
+        ka = dict((n, k) for n, k in prefix_keys(a, page_size=8))
+        kb = dict((n, k) for n, k in prefix_keys(b, page_size=8))
+        assert ka.keys() == kb.keys()
+        assert all(ka[n] != kb[n] for n in ka)  # chain propagates
+
+    def test_page_size_folded_into_chain_root(self):
+        toks = np.arange(9, dtype=np.int32)
+        k4 = dict(prefix_keys(toks, page_size=4))
+        k8 = dict(prefix_keys(toks, page_size=8))
+        assert k4[8] != k8[8]  # same span, different pool geometry
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator with prefix caching (plain invariant tests)
+# ---------------------------------------------------------------------------
+
+
+def _publish(a, slot, toks):
+    """Admit ``slot`` cold for ``toks`` and publish its prefix pages."""
+    a.ensure(slot, len(toks))
+    a.register_prefix(slot, prefix_keys(toks, a.page_size))
+
+
+class TestPrefixAllocator:
+    def test_splice_increfs_release_never_frees_shared(self):
+        a = PageAllocator(num_pages=9, page_size=4, prefix_cache=True)
+        toks = np.arange(9, dtype=np.int32)
+        _publish(a, 0, toks)
+        entry = a.match_prefix(prefix_keys(toks, 4))
+        assert entry is not None and entry.n_rows == 8
+        pages = a.splice_prefix(1, entry)
+        assert all(a.refs(p) == 2 for p in pages)
+        assert a.pages_in_use == 3  # 2 shared once + publisher's 3rd page
+        third = a.owned(0)[2]       # beyond the entry: uncached, unshared
+        assert a.release(0) == [third]  # shared pages survive slot 1...
+        assert all(a.refs(p) == 1 for p in pages)
+        assert a.release(1) == []   # ...then stay resident as warm cache
+        assert a.pages_cached == 2 and a.pages_in_use == 0
+
+    def test_cow_never_aliases_a_writable_page(self):
+        a = PageAllocator(num_pages=9, page_size=4, prefix_cache=True)
+        toks = np.arange(9, dtype=np.int32)
+        _publish(a, 0, toks)
+        a.splice_prefix(1, a.match_prefix(prefix_keys(toks, 4)))
+        old, new = a.cow(1, 1)
+        assert old != new
+        assert a.refs(new) == 1 and not a.page_shared(new)
+        assert a.owned(0)[1] == old  # publisher's mapping untouched
+        assert a.owned(1)[1] == new
+        # the publisher's copy is still cached -> still needs COW to write
+        assert a.page_shared(old)
+
+    def test_evict_then_rehash_round_trips(self):
+        a = PageAllocator(num_pages=6, page_size=4, prefix_cache=True)
+        toks = np.arange(9, dtype=np.int32)
+        _publish(a, 0, toks)
+        a.release(0)
+        assert a.pages_cached == 2
+        # allocation pressure evicts the LRU entries and frees their pages
+        a.ensure(1, 20)  # all 5 allocatable pages
+        assert a.pages_cached == 0 and a.prefix_entries == 0
+        assert sorted(a.drain_evicted()) == sorted(a.owned(1)[:2])
+        assert a.match_prefix(prefix_keys(toks, 4)) is None
+        a.release(1)
+        # re-admit + re-register the SAME tokens: keys match by
+        # construction, the cache warms right back up
+        _publish(a, 2, toks)
+        entry = a.match_prefix(prefix_keys(toks, 4))
+        assert entry is not None and entry.n_rows == 8
+
+    def test_pressure_never_frees_referenced_pages(self):
+        a = PageAllocator(num_pages=6, page_size=4, prefix_cache=True)
+        toks = np.arange(9, dtype=np.int32)
+        _publish(a, 0, toks)       # slot 0 resident AND cached (3 pages)
+        before = a.owned(0)
+        with pytest.raises(PageExhausted):
+            a.ensure(1, 20)  # needs 5; 2 free + 0 evictable (every cached
+            #                  page is still MAPPED by slot 0)
+        # the pool refuses rather than freeing referenced pages — slot 0's
+        # claim and its published entry are both intact
+        assert a.owned(0) == before
+        assert all(a.refs(p) == 1 for p in before)
+        assert a.drain_evicted() == []
+        assert a.match_prefix(prefix_keys(toks, 4)) is not None
+
+    def test_prefix_cache_pages_caps_resident_footprint(self):
+        a = PageAllocator(num_pages=12, page_size=4, prefix_cache=True,
+                          prefix_cache_pages=2)
+        _publish(a, 0, np.arange(9, dtype=np.int32))
+        _publish(a, 1, np.arange(100, 109, dtype=np.int32))
+        a.release(0)
+        a.release(1)
+        assert a.pages_cached <= 2
+
+    def test_match_prefix_touch_false_keeps_lru_order(self):
+        a = PageAllocator(num_pages=8, page_size=4, prefix_cache=True)
+        old = np.arange(9, dtype=np.int32)
+        new = np.arange(50, 59, dtype=np.int32)
+        _publish(a, 0, old)
+        _publish(a, 1, new)
+        a.release(0)
+        a.release(1)
+        a.match_prefix(prefix_keys(old, 4), touch=False)  # probe only
+        a.ensure(2, 16)  # 4 pages vs 3 free: evicts the LRU entry's pages
+        # the probed-but-untouched OLD entry was evicted first
+        assert a.match_prefix(prefix_keys(old, 4)) is None
+        assert a.match_prefix(prefix_keys(new, 4)) is not None
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator with prefix caching (hypothesis property tests)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestPrefixAllocatorProperties:
+    @prop_settings
+    @given(st.integers(min_value=6, max_value=40),
+           st.integers(min_value=1, max_value=8),
+           st.integers(min_value=0, max_value=2 ** 60))
+    def test_random_lifecycles_keep_refcount_invariants(
+            self, num_pages, page_size, seed):
+        """Arbitrary interleavings of cold admission, publish, warm splice,
+        COW, and release: no page is freed while a slot still maps it, COW
+        targets are never shared, and the free/mapped/cached partition
+        never leaks. REPRO_CONTRACTS=1 (tests/conftest.py) additionally
+        arms the allocator's inline ``_check_invariants`` on every op."""
+        rng = np.random.RandomState(seed % (2 ** 32))
+        a = PageAllocator(num_pages, page_size, prefix_cache=True)
+        live = {}  # slot -> prompt tokens
+        prompts = [np.asarray(rng.randint(0, 50, n), np.int32)
+                   for n in rng.randint(2, 4 * page_size + 2, size=5)]
+        for _ in range(80):
+            op = rng.rand()
+            s = int(rng.randint(0, 6))
+            if op < 0.35 and s not in live:          # admit (warm or cold)
+                toks = prompts[rng.randint(len(prompts))]
+                cands = prefix_keys(toks, page_size)
+                entry = a.match_prefix(cands)
+                try:
+                    if entry is not None:
+                        pages = a.splice_prefix(s, entry)
+                        assert all(a.refs(p) >= 1 for p in pages)
+                        a.ensure(s, len(toks))
+                    else:
+                        a.ensure(s, len(toks))
+                        a.register_prefix(s, cands)
+                    live[s] = toks
+                except PageExhausted:
+                    a.release(s)  # roll back a half-admitted slot
+            elif op < 0.55 and live:                 # COW a random page
+                s = sorted(live)[rng.randint(len(live))]
+                owned = a.owned(s)
+                li = int(rng.randint(len(owned)))
+                if a.page_shared(owned[li]):
+                    try:
+                        old, new = a.cow(s, li)
+                    except PageExhausted:
+                        continue
+                    assert old != new
+                    assert a.refs(new) == 1
+                    assert not a.page_shared(new)
+            elif live:                               # retire / preempt
+                s = sorted(live)[rng.randint(len(live))]
+                freed = a.release(s)
+                del live[s]
+                assert all(a.refs(p) == 0 for p in freed)
+                mapped = {p for t in live for p in a.owned(t)}
+                assert not set(freed) & mapped, (
+                    "released a page another slot still maps")
+            a.drain_evicted()
+            assert a.pages_free + a.pages_in_use + a.pages_cached \
+                == a.num_pages - 1
+            assert a.pages_available >= 0
+
+    @prop_settings
+    @given(st.integers(min_value=1, max_value=8),
+           st.integers(min_value=2, max_value=40),
+           st.integers(min_value=0, max_value=2 ** 32 - 1))
+    def test_evict_then_rehash_round_trips(self, page_size, prompt_len,
+                                           seed):
+        """Publishing, evicting (via pressure), and re-publishing the same
+        tokens always reproduces a matchable entry of the same n_rows —
+        keys are pure functions of (tokens, page_size)."""
+        rng = np.random.RandomState(seed)
+        toks = np.asarray(rng.randint(0, 1000, prompt_len), np.int32)
+        cands = prefix_keys(toks, page_size)
+        pool = PageAllocator(
+            num_pages=2 * max(1, -(-prompt_len // page_size)) + 2,
+            page_size=page_size, prefix_cache=True)
+        _publish(pool, 0, toks)
+        first = pool.match_prefix(cands)
+        pool.release(0)
+        pool.ensure(1, (pool.num_pages - 1) * page_size)  # evict everything
+        pool.release(1)
+        pool.drain_evicted()
+        assert pool.match_prefix(cands) is None
+        _publish(pool, 2, toks)
+        again = pool.match_prefix(cands)
+        if first is None:
+            assert again is None  # 1-token prompts have no candidates
+        else:
+            assert again is not None and again.n_rows == first.n_rows
+
+
+# ---------------------------------------------------------------------------
+# Engine: greedy token parity, warm TTFT, preemption of warm requests
+# ---------------------------------------------------------------------------
+
+
+def _shared_prefix_prompts(cfg, rng, n, prefix_len, page):
+    shared = rng.randint(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    return [np.concatenate(
+                [shared, rng.randint(0, cfg.vocab_size, 2 + i
+                                     ).astype(np.int32)])
+            for i in range(n)]
+
+
+def _serve_prefix(model, params, prompts, *, prefix_cache, impl="jnp",
+                  par=False, kv_pages=None, max_new=4):
+    kw = {}
+    if par:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel import ParallelConfig
+
+        kw["parallel"] = ParallelConfig(fsdp_axis=None,
+                                        weight_gather=False, ep=True)
+        kw["mesh"] = make_serving_mesh()
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=64, kv_layout="paged", kv_page_size=8,
+        attn_impl=impl, prefix_cache=prefix_cache, kv_pages=kv_pages, **kw))
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    return [list(map(int, r.generated)) for r in reqs], engine.stats()
+
+
+def test_engine_prefix_parity_matrix(served):
+    """Greedy tokens are bit-identical with prefix caching on vs off
+    across {jnp,pallas} x {single-device,EP} on a shared-prefix workload,
+    and every cached run actually exercises the cache (hits > 0). The
+    acceptance matrix for the prefix-reuse tentpole."""
+    cfg, model, params = served
+    rng = np.random.RandomState(33)
+    prompts = _shared_prefix_prompts(cfg, rng, 4, prefix_len=20, page=8)
+
+    reference, _ = _serve_prefix(model, params, prompts, prefix_cache=False)
+    for impl in ("jnp", "pallas"):
+        for par in (False, True):
+            off, _ = _serve_prefix(model, params, prompts,
+                                   prefix_cache=False, impl=impl, par=par)
+            on, st = _serve_prefix(model, params, prompts,
+                                   prefix_cache=True, impl=impl, par=par)
+            tag = f"{impl}/{'ep' if par else 'single'}"
+            assert off == reference, f"cache-off {tag} diverged"
+            assert on == reference, f"cache-on {tag} diverged"
+            # 4 requests through 2 slots: later admissions hit the prefix
+            # the first wave published
+            assert st.prefix_hits > 0, f"{tag} never hit the cache"
+            assert st.prefix_rows_reused > 0
+            assert st.kv_bytes_saved > 0
+
+
+def test_engine_prefix_parity_under_preemption(served):
+    """A pool too small for the workload forces the optimistic policy to
+    preempt mid-flight — including warm requests running on spliced
+    shared pages. Preemption must decref (never free) shared pages and
+    recompute must land on identical greedy tokens."""
+    cfg, model, params = served
+    rng = np.random.RandomState(44)
+    prompts = _shared_prefix_prompts(cfg, rng, 4, prefix_len=20, page=8)
+
+    reference, _ = _serve_prefix(model, params, prompts, prefix_cache=False,
+                                 max_new=6)
+    on, st = _serve_prefix(model, params, prompts, prefix_cache=True,
+                           kv_pages=8, max_new=6)
+    assert st.preemptions > 0, (
+        "workload did not preempt — shrink kv_pages so the test exercises "
+        "eviction of warm requests")
+    assert st.prefix_hits > 0
+    assert on == reference, "preempted warm request diverged on recompute"
+
+
+def test_warm_prefix_smoke(served):
+    """CI smoke (referenced by .github/workflows/ci.yml): a second wave of
+    requests sharing the first wave's prompt prefix must hit the cache
+    (hit rate > 0) and produce tokens identical to a cache-off engine."""
+    cfg, model, params = served
+    rng = np.random.RandomState(55)
+    prompts = _shared_prefix_prompts(cfg, rng, 3, prefix_len=17, page=8)
+
+    cold, _ = _serve_prefix(model, params, prompts, prefix_cache=False)
+    warm, st = _serve_prefix(model, params, prompts, prefix_cache=True)
+    assert warm == cold
+    assert st.prefix_hit_rate > 0
+    assert st.kv_bytes_saved > 0
+    assert st.mean_ttft_warm_s > 0 and st.mean_ttft_cold_s > 0
+
+
+def test_injected_preemption_of_warm_request_keeps_parity(served):
+    """Deterministic fault injection preempts the latest-admitted resident
+    — the warm request running on spliced shared pages. Its eviction must
+    decref (never free) those pages and the requeue + recompute must land
+    on the same greedy tokens as an undisturbed run."""
+    from repro.serving import FaultConfig
+
+    cfg, model, params = served
+    rng = np.random.RandomState(66)
+    # 3 requests through 2 slots: the first wave admits cold and
+    # publishes; the third request admits warm on the shared prefix
+    prompts = _shared_prefix_prompts(cfg, rng, 3, prefix_len=20, page=8)
+
+    def serve(faults=None):
+        engine = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=64, kv_layout="paged", kv_page_size=8,
+            prefix_cache=True, faults=faults))
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        return [list(map(int, r.generated)) for r in reqs], engine.stats()
+
+    undisturbed, st0 = serve()
+    assert st0.prefix_hits >= 1  # the late admission spliced the prefix
+    chaotic, st = serve(FaultConfig(preempt_every=2))
+    assert st.preemptions > 0
+    assert st.prefix_hits >= 1
+    assert chaotic == undisturbed
+
+
+# ---------------------------------------------------------------------------
+# Redesigned construction surface (ServingConfig / generate)
+# ---------------------------------------------------------------------------
+
+
+class TestServingAPI:
+    def test_flat_kwargs_warn_but_work(self, served):
+        cfg, model, params = served
+        with pytest.warns(DeprecationWarning, match="ServingConfig"):
+            e = ServingEngine(model, params, batch_slots=1, max_len=32)
+        assert e.slots == 1
+
+    def test_config_is_warning_free(self, served):
+        cfg, model, params = served
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ServingEngine(model, params,
+                          config=ServingConfig(batch_slots=1, max_len=32))
+
+    def test_config_plus_kwargs_rejected(self, served):
+        cfg, model, params = served
+        with pytest.raises(ValueError, match="config"):
+            ServingEngine(model, params,
+                          config=ServingConfig(batch_slots=1, max_len=32),
+                          batch_slots=2)
+
+    def test_prefix_cache_requires_paged_layout(self):
+        with pytest.raises(ValueError, match="prefix_cache"):
+            ServingConfig(prefix_cache=True).validate()
+
+    def test_from_args_round_trips_cli_flags(self):
+        import argparse
+
+        ap = argparse.ArgumentParser()
+        ServingConfig.add_cli_args(ap)
+        args = ap.parse_args(["--kv-layout", "paged", "--prefix-cache",
+                              "--kv-page-size", "8", "--slots", "3",
+                              "--prefix-cache-pages", "16"])
+        config = ServingConfig.from_args(args, max_len=64)
+        assert config.kv_layout == "paged" and config.prefix_cache
+        assert config.kv_page_size == 8 and config.batch_slots == 3
+        assert config.prefix_cache_pages == 16 and config.max_len == 64
+
+    def test_generate_honors_sampling_budgets(self, served):
+        cfg, model, params = served
+        engine = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=1, max_len=32))
+        prompt = np.arange(1, 6, dtype=np.int32)
+        req = engine.generate(prompt, SamplingParams(max_new=3))
+        assert len(req.generated) == 3 and req.done
+
+    def test_sampling_params_validate_budgets(self):
+        with pytest.raises(ValueError):
+            SamplingParams(max_new=0)
+        with pytest.raises(ValueError):
+            SamplingParams(deadline_s=-1.0)
