@@ -14,7 +14,11 @@ noisy CPU runners and the pallas backend runs in interpret mode there):
 * ``tokens_per_s``    must not drop below ``baseline / tolerance``
 
 The paged table (``paged.rows``, keyed by ``config``) is gated on
-``tokens_per_s`` the same way. Rows present on only one side are reported
+``tokens_per_s`` the same way, and the speculative table
+(``speculative.rows``, keyed by ``draft_experts``) on ``tokens_per_s``
+AND ``acceptance_rate`` — a draft/target divergence that silently
+collapses acceptance is a regression even when wall-clock survives it.
+Rows present on only one side are reported
 but never fail the gate (new configurations must be able to land before
 they have a baseline). Runs on a different jax backend skip the whole
 gate with exit 0; a table whose own workload stanza changed is skipped
@@ -42,10 +46,8 @@ def _key(row) -> tuple:
 
 
 def _index(payload, table: str, keyfn):
-    if table == "rows":
-        rows = payload.get("rows", [])
-    else:
-        rows = payload.get("paged", {}).get("rows", [])
+    rows = (payload.get("rows", []) if table == "rows"
+            else payload.get(table, {}).get("rows", []))
     return {keyfn(r): r for r in rows}
 
 
@@ -82,12 +84,18 @@ def compare(base: dict, fresh: dict, tolerance: float) -> int:
          "workload"),
         ("paged", lambda r: (r["config"],), (("tokens_per_s", False),),
          "paged workload"),
+        # speculative: throughput must hold AND the draft must stay useful
+        # — a silent acceptance-rate collapse (draft/target divergence)
+        # fails the gate even if wall-clock happens to survive it
+        ("speculative", lambda r: (r["draft_experts"],),
+         (("tokens_per_s", False), ("acceptance_rate", False)),
+         "speculative workload"),
     ):
         if table == "rows":
             b_wl, f_wl = base.get("workload"), fresh.get("workload")
         else:
-            b_wl = base.get("paged", {}).get("workload")
-            f_wl = fresh.get("paged", {}).get("workload")
+            b_wl = base.get(table, {}).get("workload")
+            f_wl = fresh.get(table, {}).get("workload")
         if b_wl != f_wl:
             print(f"# {wl} changed vs baseline: skipping the '{table}' "
                   "table (re-baseline with the new workload)")

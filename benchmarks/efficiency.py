@@ -51,7 +51,7 @@ def measured_throughput(ctx):
     import numpy as np
 
     from repro.core import HCSMoEConfig, apply_hcsmoe
-    from repro.serving import Request, ServingEngine
+    from repro.serving import Request, ServingConfig, ServingEngine
 
     cfg, model, params = ctx.cfg, ctx.model, ctx.params
     stats = ctx.stats()
@@ -60,8 +60,8 @@ def measured_throughput(ctx):
                              HCSMoEConfig(target_experts=r))
     out = {}
     for name, p in [("original", params), ("merged50", merged)]:
-        eng = ServingEngine(model, p, batch_slots=4, max_len=64,
-                            moe_mode="dense")
+        eng = ServingEngine(model, p, config=ServingConfig(
+            batch_slots=4, max_len=64, moe_mode="dense"))
         rng = np.random.RandomState(0)
         reqs = [Request(uid=i, prompt=rng.randint(
             0, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=8)

@@ -23,6 +23,14 @@ Cross-request prefix caching (shared system prompt, paged layout only):
   PYTHONPATH=src python -m repro.launch.serve --reduced --kv-layout paged \
       --prefix-cache --shared-prefix 24
 
+Speculative decoding (the draft model is an aggressively-merged plan from
+``launch/compress.py compute`` applied to the same base params; the target
+verifies every drafted token, so output streams are token-identical to a
+non-speculative run):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --kv-layout paged \
+      --spec-draft-plan /tmp/plan --spec-k 4
+
 Every engine flag is registered by ``ServingConfig.add_cli_args`` and
 consumed by ``ServingConfig.from_args`` — this launcher only owns the
 WORKLOAD flags (model choice, request count, prompt shape, sampling).
@@ -156,9 +164,19 @@ def main():
               f"{st.prefix_misses} miss(es) ({st.prefix_hit_rate:.0%}), "
               f"{st.prefix_rows_reused} rows reused, "
               f"{st.kv_bytes_saved} B prefill KV skipped, "
-              f"{st.kv_pages_cached} page(s) retained; "
+              f"{st.kv_pages_cached} page(s) retained, "
+              f"{st.prefix_evictions} eviction(s), "
+              f"{st.cow_copies} COW page copy(ies); "
               f"TTFT warm {st.mean_ttft_warm_s * 1e3:.0f} ms vs "
               f"cold {st.mean_ttft_cold_s * 1e3:.0f} ms")
+    if config.speculative is not None:
+        print(f"speculative: {st.spec_rounds} round(s) (k="
+              f"{config.speculative.k}), {st.draft_accepted}/"
+              f"{st.draft_tokens} drafts accepted "
+              f"({st.acceptance_rate:.0%}), "
+              f"{st.spec_tokens_per_round:.2f} tokens/stream/verify "
+              f"({st.spec_tokens_per_round:.2f}x fewer target dispatches "
+              f"than sequential decode), draft time {st.draft_time_s:.2f}s")
     for r in finished[:3]:
         print(f"  req {r.uid}: ttft={r.ttft * 1e3:.0f}ms "
               f"{r.tokens_per_s:.1f} tok/s  {r.generated[:10]}...")

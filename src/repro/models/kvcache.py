@@ -266,6 +266,10 @@ class PageAllocator:
         self._prefix: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
         self._cached: Dict[int, int] = {}     # page -> # index entries using it
         self._evicted: List[int] = []         # freed-by-eviction, undrained
+        # monotonic telemetry counters (the engine snapshots them at
+        # reset_stats and reports deltas)
+        self.evictions = 0                    # prefix entries LRU-dropped
+        self.cow_count = 0                    # copy-on-write page copies
 
     # ------------------------------------------------------------ queries
     @property
@@ -353,6 +357,7 @@ class PageAllocator:
         """Drop the least-recently-matched prefix entry; its pages return
         to the free list once nothing else references them."""
         _, entry = self._prefix.popitem(last=False)
+        self.evictions += 1
         for p in entry.pages:
             left = self._cached[p] - 1
             if left:
@@ -440,6 +445,7 @@ class PageAllocator:
         owned = self._owned[slot]
         old = owned[logical_page]
         new = self._take_free(1)[0]
+        self.cow_count += 1
         self._refs[new] = 1
         left = self._refs[old] - 1
         if left:

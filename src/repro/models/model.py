@@ -250,7 +250,7 @@ def build_model(cfg) -> Model:
 
     # ------------------------------------------------- extend (paged cache)
     def extend(params, *, tokens, cache, valid, moe_mode: str = "ragged",
-               unroll: bool = False, pc=None):
+               unroll: bool = False, pc=None, all_logits: bool = False):
         """Multi-token cached step over a PAGED cache (see
         :mod:`repro.models.kvcache`).
 
@@ -262,6 +262,12 @@ def build_model(cfg) -> Model:
         (logits (B, 1, V) gathered at each slot's LAST VALID row, new
         cache). Rows at or beyond ``valid`` contribute nothing to any live
         slot's cache or logits.
+
+        ``all_logits=True`` returns logits at EVERY row — (B, C, V) — the
+        speculative-decoding verifier shape: row ``j`` holds the target
+        distribution for the token following ``tokens[:, j]``, so one
+        extend call scores a whole draft run (rows >= ``valid`` are
+        garbage and must be ignored by the caller).
         """
         from repro.models.kvcache import paged_write_coords
 
@@ -283,6 +289,8 @@ def build_model(cfg) -> Model:
                                       mode="extend", cache=cache,
                                       moe_mode=moe_mode, unroll=unroll,
                                       pc=pc, paged=paged)
+        if all_logits:
+            return _logits(params, h, pc), new_cache
         idx = jnp.maximum(valid - 1, 0)[:, None, None]
         h_last = jnp.take_along_axis(h, idx, axis=1)
         return _logits(params, h_last, pc), new_cache

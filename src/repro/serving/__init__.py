@@ -15,6 +15,7 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.faults import (  # noqa: F401
     FaultConfig, FaultEvent, FaultInjector, InjectedFault)
 from repro.serving.sampling import GREEDY, SamplingParams  # noqa: F401
+from repro.serving.speculative import SpecConfig  # noqa: F401
 
 __all__ = [
     "Request",
@@ -22,6 +23,7 @@ __all__ = [
     "ServingConfig",
     "ServingEngine",
     "ServingStats",
+    "SpecConfig",
     "SamplingParams",
     "GREEDY",
     "FaultConfig",

@@ -133,6 +133,17 @@ it):
   exhaustion, splice failures, poisoned logits, and stalled steps to
   drive every failure path deterministically. See
   docs/serving_lifecycle.md.
+* **Speculative decoding** (``speculative=SpecConfig(draft_plan=...,
+  k=...)``, paged layout only): a MergePlan-derived draft model — the
+  paper's compression artifact applied aggressively via ``apply_plan`` at
+  engine load — proposes ``k`` tokens per resident request and ONE batched
+  target ``extend`` verifies them (:mod:`repro.serving.speculative`).
+  Seeded acceptance makes the output stream token-identical to a
+  non-speculative run, greedy AND stochastic; rejected rows roll back on
+  the paged cache via the null-page redirect + ``kv_pos`` reset, and the
+  subsystem composes with prefix caching (COW barrier before every
+  verify), preemption (lazy draft resync from host truth), and the
+  jnp/pallas × single/EP dispatch axes unchanged.
 """
 from __future__ import annotations
 
@@ -293,6 +304,19 @@ class ServingStats:
     kv_pages_cached: int = 0       # resident unreferenced cache pages NOW
     mean_ttft_warm_s: float = 0.0  # mean TTFT of prefix-hit requests
     mean_ttft_cold_s: float = 0.0  # mean TTFT of prefix-miss requests
+    prefix_evictions: int = 0      # prefix entries LRU-dropped
+    cow_copies: int = 0            # copy-on-write page copies
+    # speculative decoding (zeros when ServingConfig.speculative is None)
+    spec_rounds: int = 0           # draft+verify rounds (1 target dispatch
+    #                                each; spec_rounds == decode_steps)
+    draft_tokens: int = 0          # drafted tokens submitted to the verifier
+    draft_accepted: int = 0        # drafts the target accepted
+    acceptance_rate: float = 0.0   # draft_accepted / draft_tokens
+    spec_tokens_per_round: float = 0.0  # mean tokens a STREAM emits per
+    #                                verify it rides in (>= 1): the
+    #                                per-stream decode-step speedup over
+    #                                one-token-per-dispatch decode
+    draft_time_s: float = 0.0      # wall time inside draft-model dispatches
 
 
 @dataclass
@@ -337,6 +361,11 @@ class ServingConfig:
     # compression plan (repro.core.plan.MergePlan) applied to the served
     # params at engine load time — the offline-computed artifact path
     merge_plan: Optional[object] = None
+    # speculative decoding (repro.serving.speculative.SpecConfig): a
+    # MergePlan-derived draft model proposes k tokens per round and ONE
+    # batched target extend verifies them — lossless by the seeded-
+    # acceptance rule (paged layout only; see docs/serving_lifecycle.md)
+    speculative: Optional[object] = None
 
     def validate(self, model_cfg=None) -> None:
         """Canonical cross-feature compatibility rules. Pure-config rules
@@ -380,6 +409,20 @@ class ServingConfig:
                     "faults must be a repro.serving.faults.FaultConfig, "
                     f"got {type(self.faults).__name__}")
             self.faults.validate()
+        if self.speculative is not None:
+            from repro.serving.speculative import SpecConfig
+
+            if not isinstance(self.speculative, SpecConfig):
+                raise ValueError(
+                    "speculative must be a "
+                    "repro.serving.speculative.SpecConfig, got "
+                    f"{type(self.speculative).__name__}")
+            self.speculative.validate()
+            if not paged:
+                raise ValueError(
+                    "speculative decoding requires kv_layout='paged': the "
+                    "verifier is the multi-token extend path and rollback "
+                    "needs the null-page write redirect")
         if model_cfg is None:
             return
         if paged and not supports_paging(model_cfg):
@@ -447,6 +490,16 @@ class ServingConfig:
                              "'reserve' budgets worst-case pages up front "
                              "and never preempts (see "
                              "docs/serving_lifecycle.md)")
+        ap.add_argument("--spec-draft-plan", default="",
+                        help="speculative decoding: saved MergePlan "
+                             "directory (launch/compress.py compute) built "
+                             "from the SAME base checkpoint; the engine "
+                             "applies it at load time as the draft model "
+                             "(paged layout only). Output is token-"
+                             "identical to a non-speculative run.")
+        ap.add_argument("--spec-k", type=int, default=4,
+                        help="draft tokens per speculative round (one "
+                             "batched target verify per round)")
         ap.add_argument("--chaos", action="store_true",
                         help="arm the deterministic fault injector "
                              "(repro.serving.faults): forced preemptions + "
@@ -483,6 +536,12 @@ class ServingConfig:
             faults = FaultConfig(seed=args.chaos_seed,
                                  preempt_every=args.chaos_preempt_every,
                                  exhaust_prob=args.chaos_exhaust_prob)
+        speculative = None
+        if getattr(args, "spec_draft_plan", ""):
+            from repro.serving.speculative import SpecConfig
+
+            speculative = SpecConfig(draft_plan=args.spec_draft_plan,
+                                     k=args.spec_k)
         fields = dict(
             batch_slots=args.slots,
             max_len=args.max_len or cls.max_len,
@@ -496,9 +555,40 @@ class ServingConfig:
             prefix_cache=args.prefix_cache,
             prefix_cache_pages=args.prefix_cache_pages or None,
             admission=args.admission,
-            faults=faults, parallel=parallel, mesh=mesh)
+            faults=faults, speculative=speculative,
+            parallel=parallel, mesh=mesh)
         fields.update(overrides)
         return cls(**fields)
+
+
+def splice_ring(cache, slots: List[int], cacheN, lens) -> dict:
+    """Copy rows ``0..len(slots)-1`` of a prefill cache (batch B', ring
+    layout) into a contiguous engine cache at ``slots``, returning the new
+    cache pytree. Batch dim is 0 for "pos"/"prefix" leaves and 1 for
+    stacked block leaves (leading n_blocks dim). ``kv_pos`` entries at
+    padded positions (>= the row's true length) are reset to -1 so decode
+    masks never attend to padding. Shared by the engine's contiguous
+    admission splice and the speculative draft cache's resync."""
+    n = len(slots)
+    slot_idx = np.asarray(slots, np.int32)
+    lens = np.asarray(lens, np.int32)
+
+    def visit(path, big, small):
+        top = path[0].key
+        leaf = getattr(path[-1], "key", None)
+        if top == "pos":
+            return big.at[slot_idx].set(jnp.asarray(lens))
+        if top == "blocks":
+            sel = small[:, :n]
+            if leaf == "kv_pos":
+                sel = jnp.where(sel >= lens[None, :, None], -1, sel)
+            return big.at[:, slot_idx].set(sel)
+        sel = small[:n]
+        if leaf == "kv_pos":
+            sel = jnp.where(sel >= lens[:, None], -1, sel)
+        return big.at[slot_idx].set(sel)
+
+    return jax.tree_util.tree_map_with_path(visit, cache, cacheN)
 
 
 class ServingEngine:
@@ -529,6 +619,10 @@ class ServingEngine:
             model = build_model(
                 dataclasses.replace(model.cfg, attn_impl=attn_impl))
         config.validate(model.cfg)
+        # speculative decoding derives its draft from the BASE checkpoint:
+        # capture the raw params before any target plan / EP padding /
+        # sharding touches them (the draft plan was computed against them)
+        base_params = params if config.speculative is not None else None
         if config.merge_plan is not None:
             # serve a compression plan computed offline: apply it to the
             # params before any EP padding/sharding sees them
@@ -591,6 +685,7 @@ class ServingEngine:
         self._prefill_cache_sh = None  # transient prefill (ring) cache
         self._kv_shards = 1
         self._extend = None
+        self._verify = None            # speculative verifier (paged only)
         if parallel is not None:
             from jax.sharding import NamedSharding, PartitionSpec
 
@@ -643,6 +738,10 @@ class ServingEngine:
                     self._extend_fn,
                     in_shardings=(param_sh, repl, self._cache_sh, repl),
                     out_shardings=(repl, self._cache_sh))
+                self._verify = jax.jit(
+                    self._verify_fn,
+                    in_shardings=(param_sh, repl, self._cache_sh, repl),
+                    out_shardings=(repl, self._cache_sh))
             else:
                 self._cache_sh = self._prefill_cache_sh
             self._decode = jax.jit(
@@ -670,6 +769,8 @@ class ServingEngine:
                 dtype=jnp.dtype(self.cfg.dtype))
             if self._extend is None:
                 self._extend = jax.jit(self._extend_fn)
+            if self._verify is None:
+                self._verify = jax.jit(self._verify_fn)
             self._table_dirty = False
             # one compiled extend width serves chunked prefill AND warm
             # suffix prefill; without explicit chunking, warm suffixes
@@ -717,6 +818,16 @@ class ServingEngine:
         self.prefix_hits = 0
         self.prefix_misses = 0
         self.prefix_rows_reused = 0
+        # allocator counters are monotonic; stats() reports deltas since
+        # the last reset_stats via these baselines
+        self._evict_base = 0
+        self._cow_base = 0
+
+        self.spec = None
+        if config.speculative is not None:
+            from repro.serving.speculative import SpecState
+
+            self.spec = SpecState(self, base_params, config.speculative)
 
     def _prefill_fn(self, params, tokens, last_pos):
         # paged mode splices the transient prefill cache into the page pool
@@ -734,6 +845,13 @@ class ServingEngine:
         return self.model.extend(params, tokens=tokens, cache=cache,
                                  valid=valid, moe_mode=self.moe_mode,
                                  pc=self.pc)
+
+    def _verify_fn(self, params, tokens, cache, valid):
+        # extend with logits at EVERY row — the speculative verifier: one
+        # dispatch scores a whole draft run (C = k + 1 rows per slot)
+        return self.model.extend(params, tokens=tokens, cache=cache,
+                                 valid=valid, moe_mode=self.moe_mode,
+                                 pc=self.pc, all_logits=True)
 
     def _call(self, fn, *args):
         """Dispatch a jitted model call, under the mesh context in parallel
@@ -807,31 +925,8 @@ class ServingEngine:
 
     def _splice(self, slots: List[int], cacheN, lens: np.ndarray):
         """Copy rows ``0..len(slots)-1`` of a prefill cache (batch B') into
-        the engine cache at ``slots``. Batch dim is 0 for "pos"/"prefix"
-        leaves and 1 for stacked block leaves (leading n_blocks dim).
-        ``kv_pos`` entries at padded positions (>= the row's true length)
-        are reset to -1 so decode masks never attend to padding."""
-        n = len(slots)
-        slot_idx = np.asarray(slots, np.int32)
-        lens = np.asarray(lens, np.int32)
-
-        def visit(path, big, small):
-            top = path[0].key
-            leaf = getattr(path[-1], "key", None)
-            if top == "pos":
-                return big.at[slot_idx].set(jnp.asarray(lens))
-            if top == "blocks":
-                sel = small[:, :n]
-                if leaf == "kv_pos":
-                    sel = jnp.where(sel >= lens[None, :, None], -1, sel)
-                return big.at[:, slot_idx].set(sel)
-            sel = small[:n]
-            if leaf == "kv_pos":
-                sel = jnp.where(sel >= lens[:, None], -1, sel)
-            return big.at[slot_idx].set(sel)
-
-        self.cache = jax.tree_util.tree_map_with_path(visit, self.cache,
-                                                      cacheN)
+        the engine cache at ``slots`` (see :func:`splice_ring`)."""
+        self.cache = splice_ring(self.cache, slots, cacheN, lens)
         self._place_cache()
 
     def _place_cache(self):
@@ -1614,6 +1709,14 @@ class ServingEngine:
                     self._preempt(victim)
             if not self.slot_live.any():
                 return retired
+            if self.spec is not None:
+                # speculative decode phase: draft k tokens with the merged
+                # draft model, verify them in ONE batched extend, emit the
+                # accepted run (+ the target's own token at the first
+                # mismatch), roll back the rest — token-identical to the
+                # non-speculative stream by the seeded-acceptance rule
+                self.spec.round(self, retired)
+                return retired
             self._grow_pages_for_decode()
             t_dec = time.perf_counter()
             logits = self._decode_dispatch()
@@ -1696,6 +1799,11 @@ class ServingEngine:
         self.prefix_hits = 0
         self.prefix_misses = 0
         self.prefix_rows_reused = 0
+        if self.paged:
+            self._evict_base = self.allocator.evictions
+            self._cow_base = self.allocator.cow_count
+        if self.spec is not None:
+            self.spec.reset_counters()
 
     def prefill_compilations(self) -> int:
         """Distinct prefill executables compiled since the last
@@ -1818,4 +1926,17 @@ class ServingEngine:
                 r.ttft for r in reqs if r.prefix_rows > 0),
             mean_ttft_cold_s=_nanmean(
                 r.ttft for r in reqs if r.prefix_rows == 0),
+            prefix_evictions=(self.allocator.evictions - self._evict_base
+                              if self.paged else 0),
+            cow_copies=(self.allocator.cow_count - self._cow_base
+                        if self.paged else 0),
+            spec_rounds=self.spec.rounds if self.spec else 0,
+            draft_tokens=self.spec.proposed if self.spec else 0,
+            draft_accepted=self.spec.accepted if self.spec else 0,
+            acceptance_rate=(self.spec.accepted / self.spec.proposed
+                             if self.spec and self.spec.proposed else 0.0),
+            spec_tokens_per_round=(self.spec.emitted / self.spec.slot_rounds
+                                   if self.spec and self.spec.slot_rounds
+                                   else 0.0),
+            draft_time_s=self.spec.draft_time if self.spec else 0.0,
         )

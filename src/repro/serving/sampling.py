@@ -86,6 +86,28 @@ def sample_tokens(logits, temperature, top_p, seed, counter):
     return jax.vmap(_sample_one)(logits, temperature, top_p, seed, counter)
 
 
+@partial(jax.jit)
+def sample_tokens_grid(logits, temperature, top_p, seed, counters):
+    """Per-position batched sampling — the speculative-decoding verifier's
+    sampler.
+
+    logits (B, C, V); temperature/top_p float32 (B,); seed int32 (B,);
+    counters int32 (B, C) — the stream token index each position would
+    emit at. Returns (B, C) int32 token ids.
+
+    Position ``j`` of row ``b`` draws with ``fold_in(PRNGKey(seed[b]),
+    counters[b, j])`` — EXACTLY the key :func:`sample_tokens` would use
+    for that stream index. This is what makes seeded speculative
+    acceptance lossless: the verifier's draw at index ``i`` is the same
+    deterministic function of (logits, seed, i) as sequential decode's,
+    so accepted drafts and the replacement token at the first mismatch
+    reproduce the non-speculative stream bit-for-bit (greedy AND
+    stochastic).
+    """
+    per_row = jax.vmap(_sample_one, in_axes=(0, None, None, None, 0))
+    return jax.vmap(per_row)(logits, temperature, top_p, seed, counters)
+
+
 def sampling_arrays(params_list, counters):
     """Pack per-request SamplingParams + token counters into device-ready
     arrays for :func:`sample_tokens`. ``params_list`` entries may be None

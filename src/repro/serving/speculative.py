@@ -1,0 +1,419 @@
+"""Speculative decoding with a MergePlan-derived draft model.
+
+HC-SMoE's merged models trade quality for memory; speculative decoding
+inverts that trade. An aggressively-merged :class:`~repro.core.plan.MergePlan`
+builds a DRAFT model that shares the target's tokenizer, architecture, and
+parameter provenance with zero draft training — ``apply_plan`` at engine
+load is the whole draft-construction story — and the target verifies every
+drafted token, so merged-model quality loss stops mattering while decode
+still gets the merged model's speed.
+
+One speculative **round** per engine step, replacing the per-token decode
+dispatch (:meth:`SpecState.round`):
+
+1. **sync** — slots whose draft cache is stale (fresh admission, preemption
+   resume, slot reuse) re-prefill ``prompt + generated[:-1]`` through the
+   draft model into the contiguous draft cache (one bucketed batched call).
+2. **draft** — k batched draft ``decode_step`` calls propose
+   ``d_1 .. d_k`` per live slot, each sampled with the request's OWN
+   sampler at its true stream counter (token index ``g+j-1`` for ``d_j``).
+3. **verify** — ONE batched target ``extend`` call (the chunked-prefill
+   multi-token path, ``C = k+1``) feeds ``[last_token, d_1 .. d_r]`` and
+   returns logits at every row (``all_logits=True``). Rows beyond each
+   slot's per-round budget ``r = min(k, max_new - g - 1)`` are frozen by
+   ``valid`` — the null-page write redirect keeps them off live pages.
+4. **accept** — seeded rejection-sampling acceptance, degenerate-case
+   exact: the engine's determinism contract makes token ``i`` a
+   deterministic function ``sampler(logits, fold_in(seed, i))``, so the
+   proposal distribution is a point mass and the classic
+   ``min(1, p_target/p_draft)`` acceptance reduces to *equality of the
+   seeded draws*. Draft ``d_j`` is accepted iff the target's own draw at
+   counter ``g+j-1`` (from verify row ``j-1``) equals it; the first
+   mismatch emits the target's draw instead (the "bonus" token after a
+   fully-accepted run). By induction every emitted token equals the
+   non-speculative stream — greedy AND stochastic, bit-for-bit (tested in
+   tests/test_speculative.py).
+5. **rollback** — rejected rows are erased from the target's paged cache
+   (``kv_pos`` reset on the slot's own pages, ``pos`` rewound); the draft
+   cache rewinds its ring the same way. ``_cow_for_write`` runs over the
+   whole verify span first, so a rejected draft can never have dirtied a
+   shared prefix-cache page.
+
+The subsystem composes with the rest of the stack by construction: the
+verify call IS the engine's extend path (paged × jnp/pallas × single/EP all
+reuse their existing dispatch; under a mesh ``_verify`` is jitted with the
+same shardings as ``_extend``), preemption invalidates per-slot draft sync
+state which lazily re-syncs (streams stay token-identical because
+acceptance is stream-deterministic), and prefix caching interacts only
+through the COW barrier above. The draft model always runs unsharded on
+the default device — it is small by construction (that is the point of the
+aggressive plan), so replicating it costs less than sharding chatter.
+
+See docs/serving_api.md (config surface) and docs/serving_lifecycle.md
+(draft/verify/accept/rollback lifecycle).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.kvcache import init_cache
+from repro.serving.bucketing import bucket_length, pad_prompts
+from repro.serving.sampling import (
+    finite_rows, sample_tokens, sample_tokens_grid, sampling_arrays)
+
+
+@dataclass
+class SpecConfig:
+    """Speculative-decoding knobs for :class:`~repro.serving.engine.ServingConfig`.
+
+    ``draft_plan`` names the draft model: a
+    :class:`~repro.core.plan.MergePlan` (or a saved-plan directory for
+    :func:`~repro.checkpoint.load_plan`) applied to the engine's BASE
+    params at load time. The plan must have been computed against the same
+    architecture and base checkpoint the engine serves — same tokenizer,
+    vocab, and parameter structure — which every ``compress.py compute``
+    plan satisfies by construction (docs/compression_api.md). ``k`` is the
+    draft run length per round: each round costs k draft decode steps plus
+    ONE target verify dispatch and emits between 1 and k+1 tokens.
+    """
+
+    draft_plan: object = None     # MergePlan | str (saved-plan directory)
+    k: int = 4
+
+    def validate(self) -> None:
+        if self.draft_plan is None:
+            raise ValueError(
+                "SpecConfig.draft_plan is required: pass a MergePlan or a "
+                "saved-plan directory (launch/compress.py compute)")
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+
+
+def _rollback_ring(cache, new_pos):
+    """Rewind a contiguous ring cache: ``pos`` drops to ``new_pos`` (B,)
+    and every retained row at an absolute position >= its slot's new pos
+    is neutralised (kv_pos -1). Ring offsets are position-determined
+    (``pos % W``), so the next writes overwrite the stale payload rows."""
+    def visit(path, leaf):
+        top = path[0].key
+        name = getattr(path[-1], "key", None)
+        if top == "pos":
+            return new_pos
+        if name == "kv_pos":
+            if top == "blocks":   # (nb, B, W)
+                return jnp.where(leaf >= new_pos[None, :, None], -1, leaf)
+            return jnp.where(leaf >= new_pos[:, None], -1, leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+class SpecState:
+    """Draft-model runtime owned by a speculative engine.
+
+    Holds the merged draft params, a contiguous (ring) draft KV cache with
+    one row set per engine slot, and per-slot sync state ``slot -> (uid,
+    n)`` recording that the draft cache holds exactly rows ``[0, n)`` of
+    that request's stream (``n = len(prompt) + len(generated) - 1`` — the
+    last sampled token lives in ``engine.last_token``, not the cache,
+    matching the target's pos invariant). Any event that falsifies the
+    record — admission of a new tenant, preemption/resume, retirement —
+    is caught by the (uid, n) check and repaired lazily with a draft
+    prefill; nothing needs to eagerly chase lifecycle transitions.
+    """
+
+    def __init__(self, engine, base_params, cfg: SpecConfig):
+        cfg.validate()
+        plan = cfg.draft_plan
+        if isinstance(plan, str):
+            from repro.checkpoint import load_plan
+
+            plan = load_plan(plan)
+        from repro.core.plan import apply_plan
+
+        self.k = int(cfg.k)
+        self.plan = plan
+        self.draft_params = apply_plan(base_params, plan)
+        model, moe_mode, max_len = engine.model, engine.moe_mode, \
+            engine.max_len
+        self.cache = init_cache(engine.cfg, engine.slots, max_len,
+                                jnp.dtype(engine.cfg.dtype))
+        # host mirror of the draft cache's per-slot pos; authoritative —
+        # the device value is overwritten from it at every rollback
+        self.draft_pos = np.zeros((engine.slots,), np.int32)
+        self.synced: Dict[int, Tuple[int, int]] = {}
+
+        # the draft always runs unsharded on the default device (pc=None,
+        # no mesh): it is small by construction, and keeping it off the
+        # serving mesh means EP composes with zero extra plumbing
+        def d_prefill(p, tokens, last_pos):
+            return model.prefill(p, tokens=tokens, last_pos=last_pos,
+                                 moe_mode=moe_mode, cache_max_len=max_len,
+                                 pc=None)
+
+        def d_decode(p, tokens, cache):
+            return model.decode_step(p, tokens=tokens, cache=cache,
+                                     moe_mode=moe_mode, pc=None)
+
+        self._d_prefill = jax.jit(d_prefill)
+        self._d_decode = jax.jit(d_decode)
+        self._d_rollback = jax.jit(_rollback_ring)
+        self.reset_counters()
+
+    def reset_counters(self):
+        self.rounds = 0          # draft+verify rounds (1 target dispatch each)
+        self.slot_rounds = 0     # per-slot verify participations
+        self.proposed = 0        # draft tokens submitted for verification
+        self.accepted = 0        # draft tokens the target accepted
+        self.emitted = 0         # tokens emitted by rounds (accepted + bonus)
+        self.draft_time = 0.0    # wall time in draft prefill/decode dispatches
+
+    # ------------------------------------------------------------- sync
+    def _invalidate(self, slot: int):
+        self.synced.pop(slot, None)
+
+    def _sync(self, eng, live: List[int]):
+        """Bring every live slot's draft cache up to its stream: slots
+        whose (uid, n) record mismatches re-prefill ``resume_prompt[:n]``
+        through the draft model in one batched (bucketed) call and splice
+        the rows into the draft ring. ``n >= 1`` always — a RUNNING
+        request has a nonempty prompt and at least one generated token."""
+        need: List[Tuple[int, int]] = []
+        for s in live:
+            req = eng.active[s]
+            n = len(req.prompt) + len(req.generated) - 1
+            if self.synced.get(s) == (req.uid, n):
+                continue
+            need.append((s, n))
+        if not need:
+            return
+        from repro.serving.engine import splice_ring
+
+        t0 = time.perf_counter()
+        if eng.bucket_prompts:
+            slots = [s for s, _ in need]
+            prompts = [eng._resume_prompt(eng.active[s])[:n]
+                       for s, n in need]
+            L = bucket_length(max(n for _, n in need), eng.min_bucket,
+                              eng.max_len)
+            tokens, last_pos = pad_prompts(prompts, eng.slots, L)
+            _, cacheN = self._d_prefill(self.draft_params,
+                                        jnp.asarray(tokens),
+                                        jnp.asarray(last_pos))
+            lens = np.asarray([n for _, n in need], np.int32)
+            self.cache = splice_ring(self.cache, slots, cacheN, lens)
+        else:
+            for s, n in need:
+                prompt = eng._resume_prompt(eng.active[s])[:n]
+                _, cache1 = self._d_prefill(
+                    self.draft_params, jnp.asarray(prompt[None]),
+                    jnp.asarray([n - 1], jnp.int32))
+                self.cache = splice_ring(self.cache, [s], cache1,
+                                         np.asarray([n], np.int32))
+        jax.block_until_ready(self.cache["pos"])
+        self.draft_time += time.perf_counter() - t0
+        for s, n in need:
+            self.draft_pos[s] = n
+            self.synced[s] = (eng.active[s].uid, n)
+
+    # ------------------------------------------------------------ draft
+    def _draft(self, eng, steps: int) -> np.ndarray:
+        """Propose ``steps`` tokens per live slot with the draft model:
+        ``steps`` batched decode steps over the full slot batch (dead rows
+        ride along and are discarded). Draft ``d_j`` is sampled with the
+        request's own SamplingParams at stream counter ``g + j - 1`` —
+        the index it would be emitted at — which is what the acceptance
+        rule compares against. Returns drafts (k, slots) int32 with rows
+        ``>= steps`` zero (never read: per-slot budgets are <= steps)."""
+        drafts = np.zeros((self.k, eng.slots), np.int32)
+        if steps == 0:
+            return drafts
+        sampling = [eng.active[s].sampling if s in eng.active else None
+                    for s in range(eng.slots)]
+        g0 = [len(eng.active[s].generated) if s in eng.active else 0
+              for s in range(eng.slots)]
+        tok = np.array(eng.last_token, np.int32)
+        t0 = time.perf_counter()
+        for j in range(steps):
+            logits, self.cache = self._d_decode(self.draft_params,
+                                                jnp.asarray(tok), self.cache)
+            counters = [g + j for g in g0]
+            drafts[j] = np.asarray(sample_tokens(
+                logits[:, 0], *sampling_arrays(sampling, counters)))
+            tok = drafts[j][:, None]
+        # feed the LAST sampled draft too (logits discarded): on full
+        # acceptance it joins the stream and next round decodes past it,
+        # and its KV can only come from a decode over the existing draft
+        # context — skipping this write would leave a hole the sync
+        # record claims is filled, silently corrupting every draft after
+        # a fully-accepted round
+        _, self.cache = self._d_decode(self.draft_params,
+                                       jnp.asarray(tok), self.cache)
+        jax.block_until_ready(self.cache["pos"])
+        self.draft_time += time.perf_counter() - t0
+        return drafts
+
+    # ------------------------------------------------------------ round
+    def round(self, eng, retired: List) -> None:
+        """One speculative round over the engine's live decode slots —
+        the engine's whole decode phase when speculation is on."""
+        from repro.serving.engine import RequestStatus
+
+        live = [s for s in range(eng.slots) if eng.slot_live[s]]
+        # per-slot draft budget: emissions (<= r+1) never exceed the
+        # remaining token budget, and the verify write never crosses
+        # row S + max_new - 1 < max_len — submit()'s bound still holds
+        pos0: Dict[int, int] = {}
+        budget: Dict[int, int] = {}
+        for s in live:
+            req = eng.active[s]
+            g = len(req.generated)
+            pos0[s] = len(req.prompt) + g - 1
+            budget[s] = min(self.k, req.max_new_tokens - g - 1)
+        self._sync(eng, [s for s in live if budget[s] > 0])
+        drafts = self._draft(eng, max(budget.values(), default=0))
+
+        # grow pages (and COW shared ones) over the whole verify span;
+        # growth under pressure may preempt OTHER live slots mid-walk
+        for s in live:
+            if s not in eng.active:
+                continue
+            eng._ensure_resident(s, pos0[s] + budget[s] + 1)
+            if s in eng.active:
+                eng._cow_for_write(s, pos0[s], pos0[s] + budget[s] + 1)
+        eng._sync_page_table()
+        verifying = [s for s in live if s in eng.active]
+        if not verifying:
+            return
+
+        C = self.k + 1
+        tokens = np.zeros((eng.slots, C), np.int32)
+        valid = np.zeros((eng.slots,), np.int32)
+        counters = np.zeros((eng.slots, C), np.int32)
+        for s in verifying:
+            r = budget[s]
+            tokens[s, 0] = eng.last_token[s, 0]
+            tokens[s, 1:1 + r] = drafts[:r, s]
+            valid[s] = r + 1
+            g = len(eng.active[s].generated)
+            counters[s] = g + np.arange(C)
+
+        t_dec = time.perf_counter()
+        logits, eng.cache = eng._call(
+            eng._verify, eng.params, jnp.asarray(tokens), eng.cache,
+            jnp.asarray(valid))
+        logits.block_until_ready()
+        eng._decode_time += time.perf_counter() - t_dec
+        eng.decode_steps += 1
+        self.rounds += 1
+
+        if eng.faults is not None:
+            for s in verifying:
+                req = eng.active[s]
+                if eng.faults.poison_now(req.uid, len(req.generated)):
+                    logits = logits.at[s].set(jnp.nan)
+        verifying_set = set(verifying)
+        sampling = [eng.active[s].sampling if s in verifying_set else None
+                    for s in range(eng.slots)]
+        temp, top_p, seed, _ = sampling_arrays(sampling, [0] * eng.slots)
+        tgt = np.asarray(sample_tokens_grid(logits, temp, top_p, seed,
+                                            jnp.asarray(counters)))
+        finite = (np.asarray(finite_rows(logits)) if eng.logit_guard
+                  else None)  # (slots, C) per-row health
+
+        rollback: List[Tuple[int, int]] = []   # (slot, rows kept)
+        for s in verifying:
+            req = eng.active[s]
+            r = int(valid[s]) - 1
+            if finite is not None and not finite[s, :r + 1].all():
+                req.error = (f"non-finite logits at decode step "
+                             f"{eng.decode_steps} (token "
+                             f"{len(req.generated)})")
+                self._invalidate(s)
+                eng._terminate(req, s, RequestStatus.FAILED, retired)
+                continue
+            a = 0
+            while a < r and drafts[a, s] == tgt[s, a]:
+                a += 1
+            emitted = [int(drafts[j, s]) for j in range(a)]
+            emitted.append(int(tgt[s, a]))
+            self.slot_rounds += 1
+            self.proposed += r
+            self.accepted += a
+            consumed = 0
+            for tok in emitted:
+                req.generated.append(tok)
+                eng.last_token[s, 0] = tok
+                consumed += 1
+                hit_eos = eng.eos_id is not None and tok == eng.eos_id
+                if len(req.generated) >= req.max_new_tokens or hit_eos:
+                    self._invalidate(s)
+                    eng._terminate(req, s, RequestStatus.FINISHED, retired)
+                    break
+            self.emitted += consumed
+            if s in eng.active:
+                rollback.append((s, pos0[s] + consumed))
+                # the draft's fed inputs up to the acceptance point WERE
+                # the true stream, so its cache stays valid at n+consumed
+                self.synced[s] = (req.uid,
+                                  int(self.draft_pos[s]) + consumed)
+
+        self._rollback_target(eng, rollback, pos0, valid)
+        self._rollback_draft(eng, rollback)
+
+    # --------------------------------------------------------- rollbacks
+    def _rollback_target(self, eng, rollback: List[Tuple[int, int]],
+                         pos0: Dict[int, int], valid: np.ndarray):
+        """Erase rejected verify rows from the target's paged cache: the
+        slot keeps rows ``[0, kept)``; rows ``[kept, pos0 + valid)`` —
+        written by the verify extend on the slot's own (post-COW) pages —
+        get their ``kv_pos`` reset and ``pos`` rewinds to ``kept``.
+        Retired slots skip this: release already freed their exclusive
+        pages (resetting kv_pos), and shared prefix pages only ever hold
+        prompt rows the COW barrier kept the verify write away from."""
+        if not rollback:
+            return
+        flat: List[int] = []
+        page = eng.page_size
+        for s, kept in rollback:
+            owned = eng.allocator.owned(s)
+            for rowpos in range(kept, pos0[s] + int(valid[s])):
+                flat.append(owned[rowpos // page] * page + rowpos % page)
+        if flat:
+            kvp = eng.cache["kv_pos"]
+            eng.cache["kv_pos"] = kvp.reshape(-1).at[
+                jnp.asarray(np.asarray(flat, np.int32))].set(-1).reshape(
+                kvp.shape)
+        slots = np.asarray([s for s, _ in rollback], np.int32)
+        kept = np.asarray([k for _, k in rollback], np.int32)
+        eng.cache["pos"] = eng.cache["pos"].at[jnp.asarray(slots)].set(
+            jnp.asarray(kept))
+        eng._place_cache()
+
+    def _rollback_draft(self, eng, rollback: List[Tuple[int, int]]):
+        """Rewind the draft ring after a round. Every slot drafted up to
+        ``k + 1`` rows past its sync point (the fed inputs plus the
+        final sampled draft); surviving slots keep the rows matching
+        accepted stream tokens (their fed inputs WERE the true stream up
+        to the acceptance point), everyone else rewinds to its recorded
+        sync pos — stale slots hold garbage a future resync replaces, so
+        any in-range value is safe there.
+
+        Ring-wrap caveat: a draft write that wrapped a ring (sliding
+        window, or a near-``max_len`` stream drafting past its budget)
+        evicted an old row the rewind cannot restore — that row stays
+        masked. This degrades only DRAFT quality (acceptance rate near
+        completion); emitted tokens are unaffected because the target
+        verifies every one."""
+        new_pos = self.draft_pos.copy()
+        for s, _ in rollback:
+            new_pos[s] = self.synced[s][1]
+        self.draft_pos = new_pos
+        self.cache = self._d_rollback(self.cache,
+                                      jnp.asarray(new_pos))

@@ -234,7 +234,7 @@ def test_ep_serving_matches_single_device_engine():
         from repro.models import build_model
         from repro.parallel import ParallelConfig
         from repro.launch.mesh import make_serving_mesh
-        from repro.serving import Request, ServingEngine
+        from repro.serving import Request, ServingConfig, ServingEngine
 
         cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
         model = build_model(cfg)
@@ -251,8 +251,8 @@ def test_ep_serving_matches_single_device_engine():
                    for n in (4, 7, 10, 5)]
 
         def serve(p, parallel=None, mesh=None):
-            eng = ServingEngine(model, p, batch_slots=2, max_len=32,
-                                parallel=parallel, mesh=mesh)
+            eng = ServingEngine(model, p, config=ServingConfig(
+                batch_slots=2, max_len=32, parallel=parallel, mesh=mesh))
             reqs = [Request(uid=i, prompt=pr, max_new_tokens=4)
                     for i, pr in enumerate(prompts)]
             for r in reqs:
@@ -290,7 +290,7 @@ def test_paged_ep_pallas_serving_matches_single_device_engine():
         from repro.models import build_model
         from repro.parallel import ParallelConfig
         from repro.launch.mesh import make_serving_mesh
-        from repro.serving import Request, ServingEngine
+        from repro.serving import Request, ServingConfig, ServingEngine
 
         cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
         model = build_model(cfg)
@@ -301,8 +301,8 @@ def test_paged_ep_pallas_serving_matches_single_device_engine():
                    for n in (4, 7, 10, 5)]
 
         def serve(**kw):
-            eng = ServingEngine(model, params, batch_slots=2, max_len=32,
-                                **kw)
+            eng = ServingEngine(model, params, config=ServingConfig(
+                batch_slots=2, max_len=32, **kw))
             reqs = [Request(uid=i, prompt=pr, max_new_tokens=4)
                     for i, pr in enumerate(prompts)]
             for r in reqs:

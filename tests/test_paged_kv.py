@@ -15,7 +15,7 @@ from repro.models import build_model
 from repro.models.kvcache import (
     PageAllocator, PageExhausted, contiguous_kv_bytes, init_paged_cache,
     paged_kv_page_bytes, supports_paging)
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingConfig, ServingEngine
 from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
 
 if HAVE_HYPOTHESIS:
@@ -463,7 +463,7 @@ def paged_served():
 
 
 def _run_engine(model, params, prompts, max_new=5, **kw):
-    engine = ServingEngine(model, params, **kw)
+    engine = ServingEngine(model, params, config=ServingConfig(**kw))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
             for i, p in enumerate(prompts)]
     for r in reqs:
@@ -593,19 +593,19 @@ def test_paged_gating():
     params = model.init(jax.random.PRNGKey(0))
 
     with pytest.raises(ValueError, match="paged"):
-        ServingEngine(model, params, batch_slots=2, max_len=32,
-                      prefill_chunk=8)
+        ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=32, prefill_chunk=8))
     with pytest.raises(ValueError, match="kv_layout"):
-        ServingEngine(model, params, batch_slots=2, max_len=32,
-                      kv_layout="ring")
+        ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=32, kv_layout="ring"))
 
     ssm = get_config("jamba-v0.1-52b").reduced(dtype="float32")
     assert not supports_paging(ssm)
     ssm_model = build_model(ssm)
     ssm_params = ssm_model.init(jax.random.PRNGKey(0))
     with pytest.raises(ValueError, match="attention-family"):
-        ServingEngine(ssm_model, ssm_params, batch_slots=2, max_len=32,
-                      kv_layout="paged")
+        ServingEngine(ssm_model, ssm_params, config=ServingConfig(
+            batch_slots=2, max_len=32, kv_layout="paged"))
 
 
 def test_kv_accounting_helpers():

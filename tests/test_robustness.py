@@ -19,7 +19,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import (
-    FaultConfig, Request, RequestStatus, SamplingParams, ServingEngine)
+    FaultConfig, Request, RequestStatus, SamplingParams, ServingConfig,
+    ServingEngine)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -44,7 +45,7 @@ def _prompts(cfg, lens=PROMPT_LENS, seed=3):
 def _serve(model, params, prompts, max_new=MAX_NEW, sampling=None, **kw):
     kw.setdefault("batch_slots", 2)
     kw.setdefault("max_len", 64)
-    eng = ServingEngine(model, params, **kw)
+    eng = ServingEngine(model, params, config=ServingConfig(**kw))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
                     **({} if sampling is None else {"sampling": sampling[i]}))
             for i, p in enumerate(prompts)]
@@ -97,8 +98,8 @@ class TestLifecycleStateMachine:
     def test_engine_rejects_bad_admission(self, served):
         cfg, model, params = served
         with pytest.raises(ValueError, match="admission"):
-            ServingEngine(model, params, batch_slots=1, max_len=32,
-                          admission="pessimistic")
+            ServingEngine(model, params, config=ServingConfig(
+                batch_slots=1, max_len=32, admission="pessimistic"))
 
 
 # ---------------------------------------------------------------------------
@@ -208,8 +209,9 @@ class TestOverload:
         never complete under any policy: reject at submit, not after
         burning pool time."""
         cfg, model, params = served
-        eng = ServingEngine(model, params, batch_slots=2, max_len=64,
-                            kv_layout="paged", kv_page_size=8, kv_pages=3)
+        eng = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=64, kv_layout="paged", kv_page_size=8,
+            kv_pages=3))
         with pytest.raises(RuntimeError, match="kv_pages"):
             eng.submit(Request(uid=0,
                                prompt=np.arange(1, 30, dtype=np.int32),
@@ -225,8 +227,9 @@ class TestTerminalPaths:
     def test_cancel_running_and_queued(self, served):
         cfg, model, params = served
         prompts = _prompts(cfg, lens=(6, 9, 12))
-        eng = ServingEngine(model, params, batch_slots=1, max_len=64,
-                            kv_layout="paged", kv_page_size=8, kv_pages=16)
+        eng = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=1, max_len=64, kv_layout="paged", kv_page_size=8,
+            kv_pages=16))
         reqs = [Request(uid=i, prompt=p, max_new_tokens=30)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -248,7 +251,8 @@ class TestTerminalPaths:
     def test_deadline_expires_queued_request(self, served):
         cfg, model, params = served
         prompts = _prompts(cfg, lens=(6, 9))
-        eng = ServingEngine(model, params, batch_slots=1, max_len=64)
+        eng = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=1, max_len=64))
         keep = Request(uid=0, prompt=prompts[0], max_new_tokens=4,
                        deadline_s=120.0)
         drop = Request(uid=1, prompt=prompts[1], max_new_tokens=4,
@@ -264,6 +268,34 @@ class TestTerminalPaths:
         assert st.expired == 1
         # NaN telemetry of the expired request must not pollute the means
         assert st.mean_ttft_s > 0.0 and not math.isnan(st.mean_ttft_s)
+
+    def test_deadline_expires_preempted_request(self, served):
+        """deadline_s x preemption: the deadline clock runs from t_submit
+        THROUGH preemption, so a request evicted mid-decode expires while
+        requeued — with its partial generation kept and every page it
+        held released exactly once."""
+        cfg, model, params = served
+        eng = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=1, max_len=64, kv_layout="paged", kv_page_size=8,
+            kv_pages=16))
+        req = Request(uid=0, prompt=_prompts(cfg, lens=(9,))[0],
+                      max_new_tokens=30, deadline_s=120.0)
+        eng.submit(req)
+        while req.status is not RequestStatus.RUNNING or not req.generated:
+            eng.step()
+        eng._preempt(0)
+        assert req.status is RequestStatus.QUEUED
+        assert req.preemptions == 1
+        partial = list(req.generated)
+        assert partial, "preempted before generating anything"
+        req.deadline_s = 1e-9     # long since elapsed (t_submit clock)
+        eng.step()                # lifecycle sweep expires it from queue
+        assert req.status is RequestStatus.EXPIRED
+        assert list(req.generated) == partial
+        st = eng.stats()
+        assert st.expired == 1
+        assert st.preemptions == 1
+        assert st.kv_pages_in_use == 0, "expiry leaked (or double-freed) pages"
 
     def test_poisoned_logits_quarantined(self, served, baseline):
         """A NaN logit row fails ONE request; co-batched requests keep
@@ -332,7 +364,8 @@ def test_ep_preemption_token_parity():
         from repro.models import build_model
         from repro.parallel import ParallelConfig
         from repro.launch.mesh import make_serving_mesh
-        from repro.serving import FaultConfig, Request, ServingEngine
+        from repro.serving import (
+            FaultConfig, Request, ServingConfig, ServingEngine)
 
         cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
         model = build_model(cfg)
@@ -342,9 +375,9 @@ def test_ep_preemption_token_parity():
                    for n in (3, 20, 7, 26, 11)]
 
         def serve(**kw):
-            eng = ServingEngine(model, params, batch_slots=2, max_len=64,
-                                kv_layout="paged", kv_page_size=8,
-                                kv_pages=32, **kw)
+            eng = ServingEngine(model, params, config=ServingConfig(
+                batch_slots=2, max_len=64, kv_layout="paged", kv_page_size=8,
+                kv_pages=32, **kw))
             reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
                     for i, p in enumerate(prompts)]
             for r in reqs:

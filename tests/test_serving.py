@@ -7,8 +7,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import (
-    Request, SamplingParams, ServingEngine, bucket_length, num_buckets,
-    supports_bucketing)
+    Request, SamplingParams, ServingConfig, ServingEngine, bucket_length,
+    num_buckets, supports_bucketing)
 from repro.serving.bucketing import pad_prompts, plan_admission
 
 
@@ -114,7 +114,8 @@ def test_run_returns_every_finished_request(served):
     """Regression: run() used to declare ``finished = []`` and never append,
     silently returning [] for every workload."""
     cfg, model, params = served
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     rng = np.random.RandomState(7)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 4 + i)
                     .astype(np.int32), max_new_tokens=3) for i in range(5)]
@@ -136,7 +137,8 @@ def test_engine_matches_unbatched_reference(served):
                for n in lens]
     refs = [_greedy_reference(model, params, p, 5) for p in prompts]
 
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     assert engine.bucket_prompts
     reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
             for i, p in enumerate(prompts)]
@@ -152,8 +154,8 @@ def test_bucketed_prefill_compilation_count(served):
     executable per power-of-two bucket: O(log2(max_len)), not O(#lengths)."""
     cfg, model, params = served
     max_len = 64
-    engine = ServingEngine(model, params, batch_slots=2, max_len=max_len,
-                           min_bucket=8)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=max_len, min_bucket=8))
     rng = np.random.RandomState(1)
     lens = list(range(2, 34, 2))  # 16 distinct lengths spanning 3 buckets
     for i, n in enumerate(lens):
@@ -169,7 +171,8 @@ def test_bucketed_prefill_compilation_count(served):
 
 def test_slot_reuse_and_queueing(served):
     cfg, model, params = served
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     rng = np.random.RandomState(1)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 4).astype(np.int32),
                     max_new_tokens=3) for i in range(5)]
@@ -182,7 +185,8 @@ def test_slot_reuse_and_queueing(served):
 
 def test_submit_rejects_oversized_request(served):
     cfg, model, params = served
-    engine = ServingEngine(model, params, batch_slots=2, max_len=16)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=16))
     with pytest.raises(ValueError, match="max_len"):
         engine.submit(Request(uid=0, prompt=np.zeros(10, np.int32),
                               max_new_tokens=10))
@@ -202,8 +206,8 @@ def test_sampling_deterministic_given_seed(served):
     sp = SamplingParams(temperature=0.8, top_p=0.9, seed=123)
 
     def serve(batch_slots, extra):
-        engine = ServingEngine(model, params, batch_slots=batch_slots,
-                               max_len=32)
+        engine = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=batch_slots, max_len=32))
         target = Request(uid=0, prompt=prompt, max_new_tokens=6, sampling=sp)
         engine.submit(target)
         for i in range(extra):  # co-tenants shuffle slot assignment
@@ -220,7 +224,8 @@ def test_sampling_deterministic_given_seed(served):
     assert a == b
 
     # a different seed must eventually diverge at this temperature
-    engine = ServingEngine(model, params, batch_slots=1, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=1, max_len=32))
     other = Request(uid=1, prompt=prompt, max_new_tokens=6,
                     sampling=SamplingParams(temperature=0.8, top_p=0.9,
                                             seed=124))
@@ -234,7 +239,8 @@ def test_greedy_is_temperature_zero(served):
     rng = np.random.RandomState(6)
     prompt = rng.randint(0, cfg.vocab_size, 4).astype(np.int32)
     ref = _greedy_reference(model, params, prompt, 4)
-    engine = ServingEngine(model, params, batch_slots=1, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=1, max_len=32))
     req = Request(uid=0, prompt=prompt, max_new_tokens=4,
                   sampling=SamplingParams(temperature=0.0))
     engine.submit(req)
@@ -249,7 +255,8 @@ def test_tiny_top_p_is_greedy(served):
     rng = np.random.RandomState(8)
     prompt = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
     ref = _greedy_reference(model, params, prompt, 4)
-    engine = ServingEngine(model, params, batch_slots=1, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=1, max_len=32))
     req = Request(uid=0, prompt=prompt, max_new_tokens=4,
                   sampling=SamplingParams(temperature=1.5, top_p=1e-6,
                                           seed=9))
@@ -265,7 +272,8 @@ def test_recurrent_arch_falls_back_to_exact_prefill():
     cfg = get_config("jamba-v0.1-52b").reduced(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     assert not engine.bucket_prompts
     rng = np.random.RandomState(3)
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
@@ -279,8 +287,8 @@ def test_recurrent_arch_falls_back_to_exact_prefill():
     for r, ref in zip(reqs, refs):
         assert r.done and r.generated == ref, (r.uid, r.generated, ref)
     with pytest.raises(ValueError, match="not exact"):
-        ServingEngine(model, params, batch_slots=2, max_len=32,
-                      bucket_prompts=True)
+        ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=32, bucket_prompts=True))
 
 
 # ---------------------------------------------------------------------------
@@ -294,7 +302,8 @@ def test_reset_stats_starts_clean(served):
     after a reset. Post-reset stats must start from zero — including the
     compilation count, which now measures compiles SINCE the reset."""
     cfg, model, params = served
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     rng = np.random.RandomState(4)
     for i in range(3):
         engine.submit(Request(uid=i, prompt=rng.randint(
@@ -329,7 +338,8 @@ def test_step_driven_engine_accrues_wall_time(served):
     """Regression: wall time only accrued inside run(), so driving the
     engine via step() reported wall_time_s == 0 and tokens_per_s == 0."""
     cfg, model, params = served
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     rng = np.random.RandomState(9)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 5)
                     .astype(np.int32), max_new_tokens=3) for i in range(3)]
@@ -348,7 +358,8 @@ def test_step_driven_engine_accrues_wall_time(served):
 
 def test_serving_stats_record(served):
     cfg, model, params = served
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     rng = np.random.RandomState(2)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 4).astype(np.int32),
                     max_new_tokens=4) for i in range(3)]
@@ -412,8 +423,8 @@ def test_attn_impl_pallas_token_identical(served):
                for n in (3, 7, 12, 5, 9)]
 
     def serve(impl):
-        engine = ServingEngine(model, params, batch_slots=2, max_len=32,
-                               attn_impl=impl)
+        engine = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=32, attn_impl=impl))
         assert engine.attn_impl == impl
         reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
                 for i, p in enumerate(prompts)]
@@ -452,8 +463,9 @@ def test_serving_axes_composition_matrix(served):
             kw["parallel"] = ParallelConfig(fsdp_axis=None,
                                             weight_gather=False, ep=True)
             kw["mesh"] = make_serving_mesh()
-        engine = ServingEngine(model, params, batch_slots=2, max_len=32,
-                               kv_layout=layout, attn_impl=impl, **kw)
+        engine = ServingEngine(model, params, config=ServingConfig(
+            batch_slots=2, max_len=32, kv_layout=layout, attn_impl=impl,
+            **kw))
         reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -485,14 +497,15 @@ def test_pallas_engine_rounds_cache_window(served):
     """attn_impl='pallas' rounds max_len up to 128-row KV tiles so the
     flash-decode tile size never degenerates on TPU; jnp keeps it as-is."""
     cfg, model, params = served
-    e = ServingEngine(model, params, batch_slots=1, max_len=200,
-                      attn_impl="pallas")
+    e = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=1, max_len=200, attn_impl="pallas"))
     assert e.max_len == 256
-    e2 = ServingEngine(model, params, batch_slots=1, max_len=200)
+    e2 = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=1, max_len=200))
     assert e2.max_len == 200
     # <= 128 windows run as a single tile of any size: no rounding
-    e3 = ServingEngine(model, params, batch_slots=1, max_len=40,
-                       attn_impl="pallas")
+    e3 = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=1, max_len=40, attn_impl="pallas"))
     assert e3.max_len == 40
 
 
@@ -505,8 +518,8 @@ def test_stats_report_kv_page_occupancy(served):
     rng = np.random.RandomState(12)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 10)
                     .astype(np.int32), max_new_tokens=3) for i in range(3)]
-    engine = ServingEngine(model, params, batch_slots=2, max_len=32,
-                           kv_layout="paged", kv_page_size=8)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32, kv_layout="paged", kv_page_size=8))
     mid_use = []
     for r in reqs:
         engine.submit(r)
@@ -520,7 +533,8 @@ def test_stats_report_kv_page_occupancy(served):
     assert 0 < st.kv_page_util <= 1.0
     assert 0 < st.kv_bytes_peak < st.kv_bytes_contiguous
 
-    contig = ServingEngine(model, params, batch_slots=2, max_len=32)
+    contig = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=32))
     st0 = contig.stats()
     assert st0.kv_pages_total == 0 and st0.kv_page_util == 0.0
     assert st0.kv_bytes_contiguous > 0
@@ -533,9 +547,9 @@ def test_reset_stats_clears_chunk_and_stall_counters(served):
     so post-warm-up windows report only their own chunks and stalls."""
     cfg, model, params = served
     rng = np.random.RandomState(13)
-    engine = ServingEngine(model, params, batch_slots=2, max_len=64,
-                           kv_layout="paged", kv_page_size=8,
-                           prefill_chunk=8)
+    engine = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=2, max_len=64, kv_layout="paged", kv_page_size=8,
+        prefill_chunk=8))
     engine.submit(Request(uid=0, prompt=rng.randint(
         0, cfg.vocab_size, 30).astype(np.int32), max_new_tokens=2))
     engine.run()
@@ -575,7 +589,8 @@ def test_merged_model_serving_parity(served, merged_served):
                for n in (4, 7, 10)]
     refs = [_greedy_reference(model, merged, p, 4) for p in prompts]
 
-    engine = ServingEngine(model, merged, batch_slots=2, max_len=32)
+    engine = ServingEngine(model, merged, config=ServingConfig(
+        batch_slots=2, max_len=32))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
             for i, p in enumerate(prompts)]
     for r in reqs:
@@ -608,7 +623,9 @@ class TestServingConfig:
             engine.run()
             return [r.generated for r in reqs]
 
-        via_kwargs = ServingEngine(model, params, batch_slots=2, max_len=32)
+        with pytest.warns(DeprecationWarning, match="flat-kwarg"):
+            via_kwargs = ServingEngine(model, params, batch_slots=2,
+                                       max_len=32)
         via_config = ServingEngine(
             model, params, config=ServingConfig(batch_slots=2, max_len=32))
         assert serve(via_kwargs) == serve(via_config)
@@ -623,7 +640,8 @@ class TestServingConfig:
 
     def test_unknown_kwarg_rejected(self, served):
         cfg, model, params = served
-        with pytest.raises(TypeError):
+        # the shim warns before ServingConfig(**kwargs) rejects the typo
+        with pytest.warns(DeprecationWarning), pytest.raises(TypeError):
             ServingEngine(model, params, batch_slotz=2)
 
     def test_validate_is_the_canonical_incompatibility_site(self, served):
@@ -672,8 +690,8 @@ class TestServingConfig:
             engine.run()
             return [r.generated for r in reqs]
 
-        pre_merged = ServingEngine(model, merged_served, batch_slots=2,
-                                   max_len=32)
+        pre_merged = ServingEngine(model, merged_served, config=ServingConfig(
+            batch_slots=2, max_len=32))
         plan_loaded = ServingEngine(
             model, params,
             config=ServingConfig(batch_slots=2, max_len=32,

@@ -1,0 +1,176 @@
+"""Speculative decoding: the MergePlan-derived draft must be LOSSLESS.
+
+Every stream a speculative engine emits must be bit-identical to the same
+request served without speculation — greedy AND seeded stochastic — across
+attention backends, prefix caching, EP, and forced mid-speculation
+preemption. The draft model only moves the acceptance rate, never the
+output (repro.serving.speculative module docstring)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import HCSMoEConfig, collect_moe_stats, compute_plan
+from repro.models import build_model
+from repro.serving import (
+    Request, SamplingParams, ServingConfig, ServingEngine, SpecConfig)
+from repro.serving.faults import FaultConfig
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def draft_plan(served):
+    """Aggressive 2-expert plan: a cheap draft with a real (imperfect)
+    acceptance rate against the unmerged target."""
+    cfg, model, params = served
+    key = jax.random.PRNGKey(3)
+    calib = [{"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                           (2, 32), 0, cfg.vocab_size)}
+             for i in range(2)]
+    stats = collect_moe_stats(model, params, calib)
+    return compute_plan(cfg, params, stats, HCSMoEConfig(target_experts=2))
+
+
+def _requests(cfg, *, shared_prefix=0, n=3, max_new=10):
+    """Mixed-sampler request set: greedy plus two distinct seeded
+    stochastic streams, so parity covers both acceptance-rule branches."""
+    rng = np.random.RandomState(9)
+    prefix = rng.randint(0, cfg.vocab_size, shared_prefix).astype(np.int32)
+    samplings = [SamplingParams(),
+                 SamplingParams(temperature=0.8, top_p=0.9, seed=7),
+                 SamplingParams(temperature=1.2, seed=11)]
+    reqs = []
+    for i in range(n):
+        tail = rng.randint(0, cfg.vocab_size, 3 + 2 * i).astype(np.int32)
+        reqs.append(Request(uid=i,
+                            prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=max_new,
+                            sampling=samplings[i % len(samplings)]))
+    return reqs
+
+
+def _serve(model, params, cfg, *, spec, shared_prefix=0, n=3, max_new=10,
+           **cfg_kw):
+    eng = ServingEngine(model, params, config=ServingConfig(
+        batch_slots=3, max_len=64, kv_layout="paged", speculative=spec,
+        **cfg_kw))
+    reqs = _requests(cfg, shared_prefix=shared_prefix, n=n, max_new=max_new)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [list(r.generated) for r in reqs], eng.stats()
+
+
+# ---------------------------------------------------------------------------
+# Lossless verification
+# ---------------------------------------------------------------------------
+
+
+def test_lossless_across_backends_and_prefix_cache(served, draft_plan):
+    """ONE non-speculative reference; every {jnp,pallas} x {prefix
+    cache on,off} speculative combo must reproduce it token-for-token
+    (backend parity of the non-spec engine is already pinned by
+    tests/test_serving.py, so a single reference suffices)."""
+    cfg, model, params = served
+    reference, _ = _serve(model, params, cfg, spec=None, shared_prefix=16)
+
+    for impl in ("jnp", "pallas"):
+        for prefix in (False, True):
+            toks, st = _serve(
+                model, params, cfg,
+                spec=SpecConfig(draft_plan=draft_plan, k=3),
+                shared_prefix=16, attn_impl=impl, prefix_cache=prefix)
+            assert toks == reference, \
+                f"{impl}/prefix={prefix} diverged from non-speculative run"
+            assert st.spec_rounds > 0
+            assert st.draft_tokens > 0
+            assert 0.0 <= st.acceptance_rate <= 1.0
+            assert st.spec_tokens_per_round >= 1.0
+            assert st.draft_time_s >= 0.0
+
+
+def test_lossless_under_expert_parallel_mesh(served, draft_plan):
+    """Speculative verify reuses the EP extend dispatch: paged + EP +
+    speculation must match the single-device non-speculative stream.
+    (Single-process 1-device mesh; the 8-device case rides in
+    tests/test_multidevice.py's matrix.)"""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.parallel import ParallelConfig
+
+    cfg, model, params = served
+    reference, _ = _serve(model, params, cfg, spec=None)
+    toks, st = _serve(
+        model, params, cfg, spec=SpecConfig(draft_plan=draft_plan, k=3),
+        parallel=ParallelConfig(fsdp_axis=None, weight_gather=False,
+                                ep=True),
+        mesh=make_serving_mesh())
+    assert toks == reference
+    assert st.spec_rounds > 0
+
+
+def test_lossless_under_forced_preemption_mid_speculation(served,
+                                                          draft_plan):
+    """Chaos preemption every 2 steps lands inside speculative rounds;
+    preempted slots lose their draft sync state, lazily re-prefill the
+    draft cache on re-admission, and the streams still match an
+    unpreempted non-speculative run exactly."""
+    cfg, model, params = served
+    reference, _ = _serve(model, params, cfg, spec=None, n=4)
+    toks, st = _serve(
+        model, params, cfg, spec=SpecConfig(draft_plan=draft_plan, k=3),
+        n=4, faults=FaultConfig(preempt_every=2))
+    assert st.preemptions > 0, "fault injection never fired"
+    assert toks == reference
+
+
+def test_self_draft_accepts_everything(served, draft_plan):
+    """merge_plan == draft_plan makes draft and target the same model, so
+    the seeded-equality rule accepts every budgeted draft: acceptance
+    rate 1.0 and ~k+1 tokens per stream per verify."""
+    cfg, model, params = served
+    toks, st = _serve(
+        model, params, cfg,
+        spec=SpecConfig(draft_plan=draft_plan, k=3),
+        merge_plan=draft_plan)
+    assert st.draft_tokens > 0
+    assert st.acceptance_rate == pytest.approx(1.0)
+    # full acceptance => every round emits budget+1 per stream; with
+    # max_new=10, k=3 that is >= 2.5 tokens/stream/verify even after
+    # tail-of-stream budget clipping
+    assert st.spec_tokens_per_round >= 2.5
+    # speculation replaces per-token dispatch: far fewer target decode
+    # dispatches than emitted tokens
+    emitted = sum(len(t) for t in toks)
+    assert st.spec_rounds < emitted
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+
+
+class TestSpecConfigValidation:
+    def test_draft_plan_required(self):
+        with pytest.raises(ValueError, match="draft_plan"):
+            SpecConfig().validate()
+
+    def test_k_positive(self, draft_plan):
+        with pytest.raises(ValueError, match="k"):
+            SpecConfig(draft_plan=draft_plan, k=0).validate()
+
+    def test_requires_paged_layout(self, draft_plan):
+        with pytest.raises(ValueError, match="paged"):
+            ServingConfig(kv_layout="contiguous",
+                          speculative=SpecConfig(
+                              draft_plan=draft_plan)).validate()
+
+    def test_rejects_non_specconfig(self):
+        with pytest.raises(ValueError, match="SpecConfig"):
+            ServingConfig(kv_layout="paged", speculative=42).validate()
